@@ -1,0 +1,58 @@
+"""Paper Fig. 2 — real vs estimated sensitivity during PartPSP training.
+
+Claim validated: the Esti curve upper-bounds the Real curve at every round
+(zero violations) while tracking it closely, when (C', lambda) are
+calibrated to the deployed graph (core.topology.calibrate_constants — the
+principled version of the paper's per-setup tuning).
+
+REPRODUCTION FINDING (reported, not asserted): the paper's own published
+constants (C' = 0.78, lambda = 0.55) are *not* valid on our setup — a
+10-node 2-Out graph has true contraction lambda_2 = 0.951, and with our
+synthetic data the slow consensus modes surface, producing Esti < Real
+violations. The paper's empirical tuning implicitly relied on
+gradient-dominated traces; DPPS deployments must calibrate lambda against
+the graph's actual spectral contraction (or a measured trace) for the
+Theorem-1 guarantee to hold. See EXPERIMENTS.md SClaims.
+"""
+from __future__ import annotations
+
+from benchmarks.common import RunResult, run_experiment
+
+# gamma_n inside the estimate-stability region
+#   gamma_n < (1/lam - 1) * b / (2 C' d_s)
+# so the Remark-1 recursion stays bounded between synchronizations.
+GAMMA_N = 1e-5
+
+
+def run(steps: int = 120) -> list[RunResult]:
+    results = []
+    for part in ("partpsp-1", "partpsp-2"):
+        for topo in ("2-out", "exp"):
+            r = run_experiment(
+                algorithm="partpsp", partition_name=part, topology=topo,
+                b=5.0, gamma_n=GAMMA_N, steps=steps, sync_interval=5,
+                track_real=True,
+                name=f"fig2/{part}/{topo}")
+            results.append(r)
+    return results
+
+
+def run_paper_constants(steps: int = 60) -> RunResult:
+    """The paper's exact (C', lambda) on our setup — violation finding."""
+    # paper-scale gamma_n: the injected noise excites the slow consensus
+    # modes the under-set lambda = 0.55 cannot cover.
+    return run_experiment(
+        algorithm="partpsp", partition_name="partpsp-1", topology="2-out",
+        b=5.0, gamma_n=1e-3, steps=steps, sync_interval=5,
+        c_prime=0.78, lam=0.55, track_real=True,
+        name="fig2-finding/paper-constants/2-out")
+
+
+def main(steps: int = 120) -> list[str]:
+    rows = []
+    for r in run(steps):
+        assert r.violations == 0, f"{r.name}: estimate violated {r.violations}x"
+        rows.append(r.csv())
+    finding = run_paper_constants(min(steps, 60))
+    rows.append(finding.csv() + ";NOTE=paper_constants_violate_on_this_graph")
+    return rows

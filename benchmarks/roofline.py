@@ -1,0 +1,65 @@
+"""Roofline table (deliverable g): reads the dry-run JSON produced by
+``python -m repro.launch.dryrun --all --out benchmarks/results/dryrun_*.json``
+and emits the per-(arch x shape x mesh) three-term table used by
+EXPERIMENTS.md SRoofline."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = (
+    "benchmarks/results/dryrun_pod1.json",
+    "benchmarks/results/dryrun_pod2.json",
+    "benchmarks/results/perf_iterations.json",
+)
+
+
+def load_rows() -> list[dict]:
+    rows = []
+    for path in RESULTS:
+        if os.path.exists(path):
+            with open(path) as f:
+                rows.extend(json.load(f))
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':28s} {'shape':12s} {'mesh':10s} {'sched':9s} "
+           f"{'t_comp_ms':>10s} {'t_mem_ms':>10s} {'t_coll_ms':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'mem_GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:28s} {r['shape']:12s} {r['mesh']:10s} "
+                         f"{'-':9s} {'SKIPPED (documented: sub-quadratic gate)'}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:28s} {r['shape']:12s} {r['mesh']:10s} "
+                         f"ERROR {r.get('error', '?')}")
+            continue
+        lines.append(
+            f"{r['arch']:28s} {r['shape']:12s} {r['mesh']:10s} "
+            f"{r.get('schedule', 'dense'):9s} "
+            f"{r['t_compute_s']*1e3:10.2f} {r['t_memory_s']*1e3:10.2f} "
+            f"{r['t_collective_s']*1e3:10.2f} {r['bottleneck']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} {r['peak_memory_gib']:8.1f}")
+    return "\n".join(lines)
+
+
+def main() -> list[str]:
+    rows = load_rows()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    if not rows:
+        return ["roofline/none,0,run repro.launch.dryrun first"]
+    print(format_table(rows))
+    out = []
+    for r in ok:
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('schedule','dense')},0,"
+            f"t_comp_ms={r['t_compute_s']*1e3:.2f};t_mem_ms={r['t_memory_s']*1e3:.2f};"
+            f"t_coll_ms={r['t_collective_s']*1e3:.2f};bound={r['bottleneck']};"
+            f"useful={r['useful_flops_ratio']:.2f}")
+    out.append(f"roofline/summary,0,ok={len(ok)};skipped={len(skipped)};"
+               f"errors={len(rows)-len(ok)-len(skipped)}")
+    return out

@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table4] [--steps N]
+    PYTHONPATH=src python -m benchmarks.run --full      # paper-size grids
+
+Prints ``name,us_per_call,derived`` CSV rows. Paper-claim assertions run
+inside each module; a failed claim fails the harness.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig3,fig4,table2,table3,table4,"
+                         "kernels,roofline")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override per-benchmark step counts (smoke: 20)")
+    ap.add_argument("--full", action="store_true", help="paper-size grids")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_sensitivity, fig3_ras, fig4_scale,
+                            kernel_bench, roofline, table2_accuracy,
+                            table3_real_vs_esti, table4_time)
+
+    suites = {
+        "fig2": lambda: fig2_sensitivity.main(args.steps or 120),
+        "fig3": lambda: fig3_ras.main(args.steps or 100),
+        "fig4": lambda: fig4_scale.main(args.steps or 80),
+        "table2": lambda: table2_accuracy.main(args.steps or 250, args.full),
+        "table3": lambda: table3_real_vs_esti.main(args.steps or 250),
+        "table4": lambda: table4_time.main(args.steps or 150),
+        "kernels": kernel_bench.main,
+        "roofline": roofline.main,
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in wanted:
+        t0 = time.time()
+        try:
+            for row in suites[name]():
+                print(row)
+        except AssertionError as e:
+            failed.append((name, str(e)))
+            print(f"{name}/CLAIM-FAILED,0,{e}")
+        print(f"{name}/_suite,{(time.time()-t0)*1e6:.0f},wall={time.time()-t0:.1f}s",
+              file=sys.stderr)
+    if failed:
+        raise SystemExit(f"claim failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table IV — per-round time cost of SGP vs SGPDP vs PartPSP-1.
+
+Measured here as jit-compiled step wall time on CPU (us/call) plus the
+protocol's communicated-bytes accounting (the quantity that maps to the
+paper's 1 Gbps-link wall times; our TPU-fleet analogue is the collective
+term in EXPERIMENTS.md SRoofline).
+
+Claims validated: SGPDP (full-communication DP) is the slowest; PartPSP's
+partial communication cuts the communicated bytes by d_local/d_total."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import D_IN, HIDDEN, N_CLASSES, RunResult, run_experiment
+
+# per-node parameter dimensions of the benchmark MLP
+D_TOTAL = D_IN * HIDDEN + HIDDEN * D_IN + D_IN * N_CLASSES
+D_SHARED_1 = D_IN * HIDDEN
+
+
+def run(steps: int = 150) -> list[RunResult]:
+    results = []
+    for alg, part, name in (
+        ("sgp", "full", "sgp"),
+        ("sgpdp", "full", "sgpdp"),
+        ("partpsp", "partpsp-1", "partpsp-1"),
+    ):
+        results.append(run_experiment(
+            algorithm=alg, partition_name=part, topology="exp", b=3.0,
+            gamma_n=1e-4, sync_interval=2, steps=steps,
+            name=f"table4/{name}"))
+    return results
+
+
+def main(steps: int = 150) -> list[str]:
+    results = run(steps)
+    rows = [r.csv() for r in results]
+    t = {r.name.split("/")[1]: r.wall_s / r.steps for r in results}
+    comm_full = 4 * D_TOTAL       # bytes/round/node (f32)
+    comm_part = 4 * D_SHARED_1
+    rows.append(
+        f"table4/claims,0,sgp_s={t['sgp']:.4f};sgpdp_s={t['sgpdp']:.4f};"
+        f"partpsp_s={t['partpsp-1']:.4f};"
+        f"comm_bytes_full={comm_full};comm_bytes_partpsp1={comm_part};"
+        f"comm_reduction={comm_full / comm_part:.1f}x")
+    return rows

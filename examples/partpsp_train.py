@@ -1,0 +1,57 @@
+"""End-to-end driver: decentralized DP training of an assigned architecture
+with PartPSP (paper Algorithm 2).
+
+Reduced llama3.2-1b by default so it runs on this CPU container; pass
+--full-scale on a real fleet (same code path, production mesh via
+launch/train.py). A few hundred steps of the ~100M-class reduced config:
+
+    PYTHONPATH=src python examples/partpsp_train.py --steps 200
+
+This is a thin veneer over launch/train.py's build_trainer — the public API.
+"""
+import argparse
+import json
+
+import jax
+
+from repro.core.partpsp import privacy_summary
+from repro.data import NodeShardedLoader, SyntheticLMStream
+from repro.launch.train import build_trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--b", type=float, default=3.0)
+    ap.add_argument("--gamma-n", type=float, default=1e-6)
+    ap.add_argument("--full-scale", action="store_true")
+    args = ap.parse_args()
+
+    model, cfg_model, topo, cfg, partition, state, step = build_trainer(
+        args.arch, reduced=not args.full_scale, n_nodes=args.nodes,
+        algorithm="partpsp", b=args.b, gamma_n=args.gamma_n,
+        gamma_l=0.05, gamma_s=0.05, clip=100.0, topology="dout", degree=2,
+        sync_interval=5, schedule="circulant")
+
+    print(f"PartPSP on {args.arch} ({'full' if args.full_scale else 'reduced'}) "
+          f"| {args.nodes} nodes | d_s={partition.d_shared():,} "
+          f"d_l={partition.d_local():,} | circulant gossip")
+
+    stream = SyntheticLMStream(vocab_size=cfg_model.vocab_size, seq_len=64,
+                               n_nodes=args.nodes, seed=0)
+    loader = NodeShardedLoader(stream, per_node_batch=4, seed=0)
+
+    for t in range(args.steps):
+        batch = loader.batch_at(t)
+        state, m = step(state, batch, jax.random.fold_in(jax.random.PRNGKey(1), t))
+        if t % 20 == 0 or t == args.steps - 1:
+            print(f"step {t:4d}  loss {float(m['loss_mean']):.4f}  "
+                  f"S {float(m['sensitivity_used']):.2f}")
+
+    print("privacy:", json.dumps(privacy_summary(cfg, args.steps)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""The privacy-utility trade-off (paper Table II in miniature): final
+accuracy of PartPSP-1 vs full-communication SGPDP across privacy budgets,
+on the paper's MLP with non-IID synthetic classification.
+
+    PYTHONPATH=src:. python examples/privacy_sweep.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks.common import run_experiment  # noqa: E402
+
+
+def main():
+    print(f"{'algorithm':12s} {'b':>5s} {'accuracy':>9s} {'RAS':>9s}")
+    for b in (1.0, 3.0, 5.0):
+        for alg, part in (("partpsp", "partpsp-1"), ("sgpdp", "full")):
+            r = run_experiment(algorithm=alg, partition_name=part,
+                               topology="4-out", b=b, gamma_n=1e-4,
+                               sensitivity_mode="real", steps=200,
+                               name=f"{alg}/b={b}")
+            print(f"{alg:12s} {b:5.1f} {r.accuracy:9.4f} {r.ras:9.2f}")
+    r = run_experiment(algorithm="sgp", topology="4-out", b=1.0, gamma_n=0.0,
+                       steps=200, name="sgp/nodp")
+    print(f"{'sgp (NoDP)':12s} {'-':>5s} {r.accuracy:9.4f} {'-':>9s}")
+    print("\nAt tight budgets (b=1) PartPSP-1's smaller d_s buys ~2x the")
+    print("accuracy of full communication (Theorem 2); as b grows and noise")
+    print("fades, full communication's statistical advantage returns —")
+    print("the paper's Table II trade-off, end to end.")
+
+
+if __name__ == "__main__":
+    main()

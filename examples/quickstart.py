@@ -1,0 +1,46 @@
+"""Quickstart: DPPS as a plug-and-play private consensus primitive.
+
+Ten nodes each hold a private vector; they reach consensus on the average
+through the DPPS protocol without any node ever revealing its exact vector
+(each round is b/gamma_n-differentially private, paper Theorem 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import DPPSConfig, DOutGraph, dpps_init, dpps_step, real_sensitivity
+from repro.core.dpps import dpps_consensus
+from repro.core.topology import calibrate_constants
+
+N = 10
+topo = DOutGraph(n_nodes=N, d=2)
+
+# Calibrate the sensitivity-estimation constants to this graph (the
+# principled version of the paper's per-setup tuning of C', lambda).
+c_prime, lam = calibrate_constants(topo)
+# gamma_n inside the sensitivity-feedback stability region
+# (gamma_n < (1/lam - 1) * b / (2 C' d_s); see EXPERIMENTS.md SClaims)
+cfg = DPPSConfig(b=5.0, gamma_n=1e-3, c_prime=c_prime, lam=lam)
+print(f"graph: 2-out over {N} nodes | C'={c_prime:.2f} lambda={lam:.2f} "
+      f"| epsilon per round = b/gamma_n = {cfg.epsilon_per_round:.0f}")
+
+# Each node's private value (e.g. a local model or measurement).
+key = jax.random.PRNGKey(0)
+private = [jax.random.normal(key, (N, 8))]
+true_mean = jnp.mean(private[0], axis=0)
+
+state = dpps_init(private, cfg)
+zero_eps = [jnp.zeros_like(x) for x in private]
+for t in range(60):
+    state, diag = dpps_step(state, zero_eps, jax.random.fold_in(key, t), cfg,
+                            w=topo.weight_matrix_jnp(t), return_s_half=True)
+    if t % 15 == 0:
+        real = float(real_sensitivity(diag["s_half"]))
+        print(f"round {t:3d}: estimated sensitivity "
+              f"{float(diag['sensitivity_estimate']):8.3f} >= real {real:8.3f}")
+
+consensus = dpps_consensus(state)[0]
+err = float(jnp.max(jnp.abs(consensus - true_mean[None])))
+print(f"\nconsensus error vs true mean: {err:.4f} "
+      f"(noise floor ~ gamma_n * S / b; privacy was preserved every round)")

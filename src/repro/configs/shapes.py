@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) combination.
+
+``input_specs`` never allocates: it returns the exact abstract inputs the
+dry-run lowers against (weak-type-correct, shardable).
+
+Layouts:
+  train   — node-stacked: {"tokens": (n_nodes, per_node_batch, seq)}
+            (+ "image_embeds" (n_nodes, pnb, n_img, d) for vlm;
+             audio uses "embeds" (n_nodes, pnb, seq, d) + "labels")
+  prefill — consensus serving, no node dim: {"tokens": (batch, seq)}
+  decode  — {"token": (batch,) int32 | (batch, d) f32, "pos": scalar}
+            (cache specs come from the model via jax.eval_shape)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ArchSpec, ShapeSpec
+
+__all__ = ["input_specs", "train_batch_specs", "serve_batch_specs"]
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(spec: ArchSpec, shape: ShapeSpec, n_nodes: int) -> dict:
+    cfg = spec.model
+    assert shape.global_batch % n_nodes == 0, (shape.global_batch, n_nodes)
+    pnb = shape.global_batch // n_nodes
+    s = shape.seq_len
+    if cfg.input_mode == "embeddings":
+        batch = {
+            "embeds": _sds((n_nodes, pnb, s, cfg.d_model), F32),
+            "labels": _sds((n_nodes, pnb, s), I32),
+        }
+    else:
+        batch = {"tokens": _sds((n_nodes, pnb, s), I32)}
+    if spec.family == "vlm":
+        n_img = cfg.groups[0].n_image_tokens
+        batch["image_embeds"] = _sds((n_nodes, pnb, n_img, cfg.d_model), F32)
+    return batch
+
+
+def serve_batch_specs(spec: ArchSpec, shape: ShapeSpec) -> dict:
+    cfg = spec.model
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            batch = {"embeds": _sds((b, s, cfg.d_model), F32),
+                     "labels": _sds((b, s), I32)}
+        else:
+            batch = {"tokens": _sds((b, s), I32)}
+        if spec.family == "vlm":
+            n_img = cfg.groups[0].n_image_tokens
+            batch["image_embeds"] = _sds((b, n_img, cfg.d_model), F32)
+        return batch
+    # decode: one new token against a seq_len cache
+    if cfg.input_mode == "embeddings":
+        tok = _sds((b, cfg.d_model), F32)
+    else:
+        tok = _sds((b,), I32)
+    out = {"token": tok, "pos": _sds((), I32)}
+    if spec.family == "vlm":
+        n_img = cfg.groups[0].n_image_tokens
+        out["image_embeds"] = _sds((b, n_img, cfg.d_model), F32)
+    return out
+
+
+def input_specs(spec: ArchSpec, shape_name: str, *, n_nodes: int = 16) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_specs(spec, shape, n_nodes)
+    return serve_batch_specs(spec, shape)

@@ -1,0 +1,43 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+* topology    — d-Out / EXP / ring graphs, doubly-stochastic W (Def. 1)
+* pushsum     — Perturbed Push-Sum runtime (dense + circulant gossip)
+* privacy     — Laplace mechanism, L1/L2 clipping, epsilon accounting
+* sensitivity — Remark-1 recursion + real-sensitivity probe (Lemma 2)
+* dpps        — Algorithm 1 (protocol-level DP gossip)
+* partition   — partial-communication shared/local split (SIII.C)
+* partpsp     — Algorithm 2 + SGP / SGPDP / PEDFL baselines
+"""
+from repro.core.dpps import DPPSConfig, DPPSState, dpps_init, dpps_step
+from repro.core.partition import SHARE_ALL, SHARE_NONE, Partition
+from repro.core.partpsp import (
+    PartPSPConfig,
+    PartPSPState,
+    consensus_params,
+    make_baseline_config,
+    partpsp_init,
+    partpsp_step,
+)
+from repro.core.privacy import PrivacyAccountant
+from repro.core.pushsum import PushSumState, correct, gossip, init_push_sum
+from repro.core.sensitivity import network_sensitivity, real_sensitivity
+from repro.core.topology import (
+    DOutGraph,
+    ExpGraph,
+    FullyConnectedGraph,
+    RingGraph,
+    TimeVaryingTopology,
+    Topology,
+)
+
+__all__ = [
+    "DPPSConfig", "DPPSState", "dpps_init", "dpps_step",
+    "Partition", "SHARE_ALL", "SHARE_NONE",
+    "PartPSPConfig", "PartPSPState", "partpsp_init", "partpsp_step",
+    "consensus_params", "make_baseline_config",
+    "PrivacyAccountant",
+    "PushSumState", "correct", "gossip", "init_push_sum",
+    "network_sensitivity", "real_sensitivity",
+    "Topology", "DOutGraph", "ExpGraph", "RingGraph",
+    "FullyConnectedGraph", "TimeVaryingTopology",
+]

@@ -1,0 +1,229 @@
+"""DPPS — Differentially Private Perturbed Push-Sum (paper Algorithm 1).
+
+The protocol is *task-agnostic*: callers supply the per-round perturbation
+``eps_i`` (for PartPSP: ``-gamma_s * clipped shared gradient``; for plain
+consensus: zero) and DPPS performs
+
+  1. perturb              s^(t+1/2) = s^(t) + eps^(t)                 (Eq. 7)
+  2. sensitivity estimate S_i recursion, S = max_i S_i (1 scalar)     (Eq. 22)
+  3. noise                s_noise = s^(t+1/2) + gamma_n * Lap(0, S/b) (Eq. 8)
+  4. gossip               s <- W s_noise ; a <- W a                   (Eq. 9)
+  5. correct              y = s / a                                   (Eq. 10)
+
+Each round is (b / gamma_n)-DP (Theorem 1). ``gamma_n = 0`` or
+``noise=False`` degrades gracefully to the classic Perturbed Push-Sum
+protocol (the paper's SGP baseline).
+
+Everything here is jit-safe; the round index ``t`` and weights may be traced.
+The only static choices are the gossip schedule (dense vs circulant offsets)
+and whether synchronization code is emitted at all (``sync_interval > 0``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import privacy
+from repro.core.pushsum import PushSumState, correct, gossip_circulant, gossip_dense, init_push_sum
+from repro.core.sensitivity import (
+    SensitivityState,
+    init_sensitivity,
+    network_sensitivity,
+    update_sensitivity,
+)
+from repro.core.tree_utils import PyTree, tree_l1_norm_per_node, tree_node_mean
+
+__all__ = ["DPPSConfig", "DPPSState", "dpps_init", "dpps_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DPPSConfig:
+    """Protocol hyperparameters (paper Alg. 1 inputs + deployment switches)."""
+
+    b: float = 5.0            # privacy budget hyperparameter
+    gamma_n: float = 1.0      # noise rate (round is b/gamma_n - DP)
+    c_prime: float = 0.78     # C' in Eq. (11) (paper Fig. 2 setting)
+    lam: float = 0.55         # lambda in Eq. (11)
+    noise: bool = True        # False => plain Perturbed Push-Sum (SGP)
+    sync_interval: int = 0    # full sync every k rounds; 0 = never
+    schedule: str = "dense"   # "dense" (paper-faithful) | "circulant" (optimized)
+    use_kernels: bool = False # route noise generation through Pallas kernels
+    # Which sensitivity calibrates the noise:
+    #   "estimated" - Remark 1 recursion (the DPPS contribution; default)
+    #   "real"      - exact max_{i,j} ||s_i - s_j||_1 (paper Table II/III
+    #                 'PartPSP-Real' setting; O(N^2 d), experiments only)
+    #   "fixed"     - constant (the PEDFL-style baseline: clip * gamma_s)
+    sensitivity_mode: str = "estimated"
+    fixed_sensitivity: float = 0.0
+
+    def __post_init__(self):
+        if self.schedule not in ("dense", "circulant"):
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.sensitivity_mode not in ("estimated", "real", "fixed"):
+            raise ValueError(f"unknown sensitivity_mode {self.sensitivity_mode!r}")
+        if self.noise and self.b <= 0:
+            raise ValueError("privacy budget b must be > 0")
+        if self.gamma_n < 0:
+            raise ValueError("gamma_n must be >= 0")
+
+    @property
+    def epsilon_per_round(self) -> float:
+        if not self.noise or self.gamma_n == 0:
+            return float("inf")
+        return self.b / self.gamma_n
+
+
+class DPPSState(NamedTuple):
+    push: PushSumState
+    sens: SensitivityState
+    t: jnp.ndarray  # int32 round counter
+
+
+def dpps_init(s0: PyTree, cfg: DPPSConfig) -> DPPSState:
+    push = init_push_sum(s0)
+    # Sensitivity recursion starts lazily at the first step (it needs
+    # ||eps^(0)||_1); seed the state with zeros.
+    zeros = jnp.zeros((push.a.shape[0],), jnp.float32)
+    sens = init_sensitivity(s0, zeros, c_prime=cfg.c_prime, lam=cfg.lam)
+    return DPPSState(push=push, sens=sens, t=jnp.asarray(0, jnp.int32))
+
+
+def _draw_noise(key: jax.Array, tree: PyTree, scale: jnp.ndarray, use_kernels: bool) -> PyTree:
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.laplace_noise_tree(key, tree, scale)
+    return privacy.laplace_noise_tree(key, tree, scale)
+
+
+def dpps_step(
+    state: DPPSState,
+    eps: PyTree,
+    key: jax.Array,
+    cfg: DPPSConfig,
+    *,
+    w: jnp.ndarray | None = None,
+    offsets: Sequence[int] | None = None,
+    mix_weights: jnp.ndarray | None = None,
+    return_s_half: bool = False,
+) -> tuple[DPPSState, dict[str, Any]]:
+    """One DPPS round. Returns (new state, diagnostics).
+
+    Exactly one of ``w`` (dense) / ``offsets`` (circulant) must match
+    ``cfg.schedule``. Diagnostics contain the network sensitivity actually
+    used for noise, per-node estimates, perturbation/noise norms, and the
+    corrected iterates' consensus diagnostics needed by the paper's figures.
+    """
+    s = state.push.s
+    n_nodes = state.push.a.shape[0]
+
+    # -- 1. perturb (Eq. 7) -------------------------------------------------
+    # Kernel path fuses the perturb + noise + noise-norm into one VMEM pass
+    # below; the eps norm is needed first (the noise scale depends on it).
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+
+        eps_l1 = kops.l1_norm_tree(eps)
+    else:
+        eps_l1 = tree_l1_norm_per_node(eps)
+    need_s_half = (return_s_half or cfg.sensitivity_mode == "real"
+                   or not (cfg.noise and cfg.gamma_n > 0))
+    s_half = (jax.tree_util.tree_map(jnp.add, s, eps)
+              if (need_s_half or not cfg.use_kernels) else None)
+
+    # -- 2. sensitivity estimate (Eq. 22 / Remark 1) -------------------------
+    s_init = 2.0 * state.sens.c_prime * (tree_l1_norm_per_node(s) + eps_l1)
+    s_rec = state.sens.lam * state.sens.s_local + 2.0 * state.sens.c_prime * (
+        eps_l1 + state.sens.lam * cfg.gamma_n * state.sens.prev_noise_l1
+    )
+    s_local = jnp.where(state.t == 0, s_init, s_rec)
+    sens = state.sens._replace(s_local=s_local)
+    s_net = network_sensitivity(sens)  # scalar all-reduce max (Alg. 1 line 4)
+
+    # Experiment-only calibration modes (paper Table II/III).
+    if cfg.sensitivity_mode == "real":
+        from repro.core.sensitivity import real_sensitivity
+
+        s_used = real_sensitivity(s_half)
+    elif cfg.sensitivity_mode == "fixed":
+        s_used = jnp.asarray(cfg.fixed_sensitivity, jnp.float32)
+    else:
+        s_used = s_net
+
+    # -- 3. Laplace noise (Eq. 8, Lemma 1) -----------------------------------
+    if cfg.noise and cfg.gamma_n > 0:
+        noise_scale = s_used / cfg.b
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+
+            # Fused kernel: s + eps + gamma_n * Lap(bits; scale) with the
+            # noise L1 accumulated on-chip (one read+write over d_s).
+            s_noise, _, noise_l1 = kops.dpps_perturb_tree(
+                s, eps, key, noise_scale, cfg.gamma_n)
+        else:
+            noise = _draw_noise(key, s_half, noise_scale, False)
+            noise_l1 = tree_l1_norm_per_node(noise)
+            s_noise = jax.tree_util.tree_map(
+                lambda x, n: x + cfg.gamma_n * n.astype(x.dtype), s_half, noise
+            )
+    else:
+        noise_l1 = jnp.zeros((n_nodes,), jnp.float32)
+        s_noise = s_half
+    sens = sens._replace(prev_noise_l1=noise_l1)
+
+    # -- 4. gossip (Eq. 9) ----------------------------------------------------
+    push_half = PushSumState(s=s_noise, a=state.push.a)
+    if cfg.schedule == "circulant":
+        if offsets is None:
+            raise ValueError("circulant schedule requires offsets=")
+        if mix_weights is None:
+            mix_weights = jnp.full((len(offsets),), 1.0 / len(offsets), jnp.float32)
+        push_new = gossip_circulant(push_half, offsets, mix_weights)
+    else:
+        if w is None:
+            raise ValueError("dense schedule requires w=")
+        push_new = gossip_dense(push_half, w)
+
+    # Optional synchronization (paper SIII.C): exact averaging of the
+    # *noised* parameters, resetting consensus error and the sensitivity
+    # recursion. Emitted only when sync_interval > 0 (keeps dry-run HLO pure).
+    if cfg.sync_interval > 0:
+        do_sync = (state.t + 1) % cfg.sync_interval == 0
+
+        def leaf_sync(mixed, noised):
+            mean = jnp.mean(noised, axis=0, keepdims=True)
+            synced = jnp.broadcast_to(mean, noised.shape)
+            return jnp.where(do_sync, synced.astype(mixed.dtype), mixed)
+
+        s_mixed = jax.tree_util.tree_map(leaf_sync, push_new.s, s_noise)
+        a_mixed = jnp.where(do_sync, jnp.ones_like(push_new.a), push_new.a)
+        push_new = PushSumState(s=s_mixed, a=a_mixed)
+        # Restart recursion: synced parameters become the new s^(0).
+        s_reset = 2.0 * sens.c_prime * tree_l1_norm_per_node(s_mixed)
+        sens = sens._replace(
+            s_local=jnp.where(do_sync, s_reset, sens.s_local),
+            prev_noise_l1=jnp.where(do_sync, jnp.zeros_like(noise_l1), noise_l1),
+        )
+
+    new_state = DPPSState(push=push_new, sens=sens, t=state.t + 1)
+
+    diag: dict[str, Any] = {
+        "sensitivity_used": s_used,
+        "sensitivity_estimate": s_net,
+        "sensitivity_local": sens.s_local,
+        "eps_l1_max": jnp.max(eps_l1),
+        "noise_l1_mean": jnp.mean(noise_l1),
+        "a_min": jnp.min(push_new.a),
+        "a_max": jnp.max(push_new.a),
+    }
+    if return_s_half:
+        diag["s_half"] = s_half
+    return new_state, diag
+
+
+def dpps_consensus(state: DPPSState) -> PyTree:
+    """The protocol output s-bar (Alg. 1 Output): node-mean of corrected y."""
+    return tree_node_mean(correct(state.push.s, state.push.a))

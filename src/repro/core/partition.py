@@ -1,0 +1,194 @@
+"""Partial-communication parameter partition (paper SIII.C, Fig. 1).
+
+PartPSP splits the model pytree into *shared* parameters ``s`` (communicated
+through DPPS, perturbed with noise) and *local* parameters ``l`` (never
+leave the node). The partition is decided statically from a parameter
+template (shapes only, via ``jax.eval_shape``), so split/merge are pure,
+jittable reindexing ops.
+
+Actions per leaf (first matching rule wins; ``default`` otherwise):
+
+* ``"shared"``           - whole leaf is communicated.
+* ``"local"``            - whole leaf stays on the node.
+* ``("split_layers", k)``- for layer-stacked leaves ``(N, L, ...)``: layers
+  ``[:k]`` shared, ``[k:]`` local. This is exactly the paper's
+  "share the first k blocks" strategies (PartPSP-1 / PartPSP-2).
+
+Rule patterns are regexes matched against the leaf's key path (e.g.
+``"blocks/attn/.*"``). Leaves are assumed node-stacked (leading dim N);
+layer-stacked leaves have the layer axis at position 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_utils import PyTree
+
+__all__ = ["Partition", "SHARE_ALL", "SHARE_NONE"]
+
+Action = Any  # "shared" | "local" | ("split_layers", int)
+
+SHARE_ALL: Sequence[tuple[str, Action]] = ((".*", "shared"),)
+SHARE_NONE: Sequence[tuple[str, Action]] = ((".*", "local"),)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeafPlan:
+    path: str
+    action: Action
+    shape: tuple[int, ...]
+
+
+class Partition:
+    """Static shared/local split plan over a parameter pytree."""
+
+    def __init__(self, treedef, plans: tuple[_LeafPlan, ...]):
+        self._treedef = treedef
+        self._plans = plans
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_rules(
+        cls,
+        template: PyTree,
+        rules: Sequence[tuple[str, Action]],
+        *,
+        default: Action = "shared",
+    ) -> "Partition":
+        """``template``: params pytree (arrays or ShapeDtypeStructs)."""
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+        compiled = [(re.compile(pat), act) for pat, act in rules]
+        plans = []
+        for path, leaf in leaves_with_path:
+            pstr = _path_str(path)
+            action = default
+            for pat, act in compiled:
+                if pat.search(pstr):
+                    action = act
+                    break
+            if isinstance(action, tuple) and action[0] == "split_layers":
+                k = int(action[1])
+                if leaf.ndim < 2:
+                    raise ValueError(
+                        f"split_layers on non-layer-stacked leaf {pstr} shape {leaf.shape}"
+                    )
+                if not (0 <= k <= leaf.shape[1]):
+                    raise ValueError(
+                        f"split_layers k={k} out of range for {pstr} with L={leaf.shape[1]}"
+                    )
+            plans.append(_LeafPlan(pstr, action, tuple(leaf.shape)))
+        return cls(treedef, tuple(plans))
+
+    # -- split / merge (jit-safe) --------------------------------------------
+    def split(self, params: PyTree) -> tuple[list[jnp.ndarray], list[jnp.ndarray]]:
+        """params -> (shared leaves, local leaves). Either list may be empty."""
+        leaves = jax.tree_util.tree_leaves(params)
+        assert len(leaves) == len(self._plans), "params do not match partition template"
+        shared: list[jnp.ndarray] = []
+        local: list[jnp.ndarray] = []
+        for leaf, plan in zip(leaves, self._plans):
+            if plan.action == "shared":
+                shared.append(leaf)
+            elif plan.action == "local":
+                local.append(leaf)
+            else:
+                k = plan.action[1]
+                shared.append(leaf[:, :k])
+                local.append(leaf[:, k:])
+        return shared, local
+
+    def split_static(self, tree: PyTree) -> tuple[list, list]:
+        """Split a params-aligned tree of *static* per-leaf values (e.g.
+        PartitionSpecs): split_layers leaves contribute the same value to
+        both sides (slicing along the layer dim does not change a spec)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        assert len(leaves) == len(self._plans), "tree does not match partition template"
+        shared, local = [], []
+        for leaf, plan in zip(leaves, self._plans):
+            if plan.action == "shared":
+                shared.append(leaf)
+            elif plan.action == "local":
+                local.append(leaf)
+            else:
+                shared.append(leaf)
+                local.append(leaf)
+        return shared, local
+
+    def merge(self, shared: Sequence[jnp.ndarray], local: Sequence[jnp.ndarray]) -> PyTree:
+        """Inverse of :meth:`split` — rebuilds the full params pytree."""
+        shared = list(shared)
+        local = list(local)
+        si = li = 0
+        leaves = []
+        for plan in self._plans:
+            if plan.action == "shared":
+                leaves.append(shared[si]); si += 1
+            elif plan.action == "local":
+                leaves.append(local[li]); li += 1
+            else:
+                s = shared[si]; si += 1
+                l = local[li]; li += 1
+                leaves.append(jnp.concatenate([s, l], axis=1))
+        assert si == len(shared) and li == len(local)
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    # -- introspection ---------------------------------------------------------
+    def d_shared(self, *, per_node: bool = True) -> int:
+        """d_s: number of communicated scalars (paper's shared dimension)."""
+        total = 0
+        for plan in self._plans:
+            shape = plan.shape
+            n = 1
+            for d in shape:
+                n *= d
+            if per_node and len(shape) >= 1:
+                n //= shape[0]
+            if plan.action == "shared":
+                total += n
+            elif plan.action == "local":
+                pass
+            else:
+                k = plan.action[1]
+                total += n * k // shape[1] if shape[1] else 0
+        return int(total)
+
+    def d_local(self, *, per_node: bool = True) -> int:
+        total = 0
+        for plan in self._plans:
+            shape = plan.shape
+            n = 1
+            for d in shape:
+                n *= d
+            if per_node and len(shape) >= 1:
+                n //= shape[0]
+            if plan.action == "local":
+                total += n
+            elif plan.action == "shared":
+                pass
+            else:
+                k = plan.action[1]
+                total += n * (shape[1] - k) // shape[1] if shape[1] else 0
+        return int(total)
+
+    def describe(self) -> str:
+        lines = [f"d_shared={self.d_shared():,} d_local={self.d_local():,}"]
+        for plan in self._plans:
+            lines.append(f"  {plan.path:60s} {plan.shape!s:24s} -> {plan.action}")
+        return "\n".join(lines)

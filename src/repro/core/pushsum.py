@@ -1,0 +1,126 @@
+"""Perturbed Push-Sum runtime (Nedic & Olshevsky; paper Alg. 1 lines 6-8).
+
+State layout: every leaf of the gossiped pytree has a leading node dimension
+``N``; the push-sum weights ``a`` are a ``(N,)`` vector. With the paper's
+doubly-stochastic matrices (Def. 1) ``a`` provably stays at 1 (Eq. 16) — we
+keep the full machinery anyway for faithfulness to Alg. 1 and assert the
+invariant in property tests.
+
+Two gossip schedules:
+
+* ``gossip_dense`` — the literal matrix form ``s <- W s`` (paper maths).
+  When the node dim is sharded over the mesh gossip axes, XLA lowers the
+  contraction to an all-gather of the full shared tree: O(N * d_s) wire
+  bytes per round. This is the paper-faithful baseline.
+* ``gossip_circulant`` — both paper topologies (d-Out, EXP) are circulant,
+  so mixing is a weighted sum of ``d`` rolls along the node axis, which XLA
+  lowers to ``d-1`` collective-permutes: O(d * d_s) wire bytes. This is the
+  beyond-paper optimized schedule (EXPERIMENTS.md SPerf #1).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_utils import PyTree
+
+__all__ = [
+    "PushSumState",
+    "init_push_sum",
+    "gossip_dense",
+    "gossip_circulant",
+    "gossip",
+    "correct",
+    "consensus_error",
+]
+
+
+class PushSumState(NamedTuple):
+    s: PyTree          # gossiped values, leaves (N, ...)
+    a: jnp.ndarray     # push-sum normalizing weights, (N,)
+
+    @property
+    def y(self) -> PyTree:
+        return correct(self.s, self.a)
+
+
+def init_push_sum(s: PyTree) -> PushSumState:
+    leaves = jax.tree_util.tree_leaves(s)
+    n = leaves[0].shape[0]
+    return PushSumState(s=s, a=jnp.ones((n,), dtype=jnp.float32))
+
+
+def _mix_dense(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    # out[i] = sum_j w[i, j] x[j]
+    return jnp.einsum("ij,j...->i...", w.astype(x.dtype), x)
+
+
+def gossip_dense(state: PushSumState, w: jnp.ndarray) -> PushSumState:
+    """One mixing round with an arbitrary (N, N) weight matrix."""
+    s_new = jax.tree_util.tree_map(lambda x: _mix_dense(w, x), state.s)
+    a_new = _mix_dense(w, state.a)
+    return PushSumState(s=s_new, a=a_new)
+
+
+def _mix_circulant(offsets: Sequence[int], weights: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    # Receiver i sums w_k * x[(i - k) mod N]: roll(+k) brings sender i-k to slot i.
+    out = weights[0].astype(x.dtype) * x if offsets[0] == 0 else (
+        weights[0].astype(x.dtype) * jnp.roll(x, offsets[0], axis=0))
+    for k, off in enumerate(offsets[1:], start=1):
+        out = out + weights[k].astype(x.dtype) * jnp.roll(x, off, axis=0)
+    return out
+
+
+def gossip_circulant(
+    state: PushSumState, offsets: Sequence[int], weights: jnp.ndarray
+) -> PushSumState:
+    """One mixing round for a circulant topology.
+
+    ``offsets`` must be static ints (they pick the permutation); ``weights``
+    may be traced. ``jnp.roll`` along the node-sharded axis lowers to a
+    collective-permute, giving the cheap schedule described above.
+    """
+    offsets = tuple(int(o) for o in offsets)
+    s_new = jax.tree_util.tree_map(
+        lambda x: _mix_circulant(offsets, weights, x), state.s
+    )
+    a_new = _mix_circulant(offsets, weights, state.a)
+    return PushSumState(s=s_new, a=a_new)
+
+
+def gossip(
+    state: PushSumState,
+    *,
+    w: jnp.ndarray | None = None,
+    offsets: Sequence[int] | None = None,
+    weights: jnp.ndarray | None = None,
+) -> PushSumState:
+    """Dispatch on the supplied schedule (dense matrix vs circulant offsets)."""
+    if offsets is not None:
+        if weights is None:
+            weights = jnp.full((len(offsets),), 1.0 / len(offsets), jnp.float32)
+        return gossip_circulant(state, offsets, weights)
+    if w is None:
+        raise ValueError("gossip() needs either w= or offsets=")
+    return gossip_dense(state, w)
+
+
+def correct(s: PyTree, a: jnp.ndarray) -> PyTree:
+    """Push-sum correction y_i = s_i / a_i (paper Eq. 10)."""
+
+    def div(x):
+        denom = a.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return x / denom
+
+    return jax.tree_util.tree_map(div, s)
+
+
+def consensus_error(s: PyTree) -> jnp.ndarray:
+    """max_i sum_leaves ||s_i - s_bar||_1 — how far from consensus the net is."""
+    from repro.core.tree_utils import tree_l1_norm_per_node, tree_node_mean
+
+    mean = tree_node_mean(s)
+    diff = jax.tree_util.tree_map(lambda x, m: x - m[None], s, mean)
+    return jnp.max(tree_l1_norm_per_node(diff))

@@ -1,0 +1,106 @@
+"""Sensitivity estimation for DPPS (paper Lemma 2 / Remark 1).
+
+Each node i keeps a running scalar estimate
+
+    S_i^(0) = 2 C' (||s_i^(0)||_1 + ||eps_i^(0)||_1)
+    S_i^(t) = lambda * S_i^(t-1)
+              + 2 C' (||eps_i^(t)||_1 + lambda * gamma_n * ||n_i^(t-1)||_1)
+
+and the network uses S^(t) = max_i S_i^(t) as the L1 sensitivity of the
+round's noiseless mapping m (Lemma 2 proves the bound). Only two scalars per
+node persist between rounds: S_i^(t-1) and ||n_i^(t-1)||_1 — matching the
+paper's O(1) memory claim. The max is one scalar all-reduce over the gossip
+axes (the paper's "broadcast one scalar", O(N) communication).
+
+``real_sensitivity`` computes the exact max_{i,j} ||s_i - s_j||_1 for
+validation (paper Fig. 2: the estimate must upper-bound it).
+
+Synchronization (paper SIII.C): a full-averaging round makes every s_i equal,
+driving the true sensitivity to zero; ``reset`` restarts the recursion with
+the synchronized parameters acting as s^(0).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_utils import PyTree, tree_l1_norm_per_node
+
+__all__ = [
+    "SensitivityState",
+    "init_sensitivity",
+    "update_sensitivity",
+    "reset_sensitivity",
+    "network_sensitivity",
+    "real_sensitivity",
+]
+
+
+class SensitivityState(NamedTuple):
+    s_local: jnp.ndarray        # (N,) per-node estimates S_i^(t)
+    prev_noise_l1: jnp.ndarray  # (N,) ||n_i^(t-1)||_1 (zero at t=0)
+    c_prime: jnp.ndarray        # scalar constant C' > 0
+    lam: jnp.ndarray            # scalar constant lambda in (0, 1)
+
+
+def init_sensitivity(
+    s0: PyTree, eps0_l1: jnp.ndarray, *, c_prime: float, lam: float
+) -> SensitivityState:
+    """t = 0 branch of Remark 1. ``eps0_l1``: per-node ||eps_i^(0)||_1."""
+    s0_l1 = tree_l1_norm_per_node(s0)
+    s_local = 2.0 * c_prime * (s0_l1 + eps0_l1)
+    zeros = jnp.zeros_like(s_local)
+    return SensitivityState(
+        s_local=s_local,
+        prev_noise_l1=zeros,
+        c_prime=jnp.asarray(c_prime, jnp.float32),
+        lam=jnp.asarray(lam, jnp.float32),
+    )
+
+
+def update_sensitivity(
+    state: SensitivityState, eps_l1: jnp.ndarray, noise_l1: jnp.ndarray
+) -> SensitivityState:
+    """t > 0 branch of Remark 1.
+
+    ``eps_l1``: per-node ||eps_i^(t)||_1 of *this* round's perturbation.
+    ``noise_l1``: per-node ||n_i^(t)||_1 of the Laplace noise drawn *this*
+    round (stored so the *next* round can use it as n^(t-1)).
+    """
+    s_new = state.lam * state.s_local + 2.0 * state.c_prime * (
+        eps_l1 + state.lam * state.prev_noise_l1
+    )
+    return state._replace(s_local=s_new, prev_noise_l1=noise_l1)
+
+
+def reset_sensitivity(
+    state: SensitivityState, s_synced: PyTree, eps_l1: jnp.ndarray
+) -> SensitivityState:
+    """Restart the recursion after a synchronization round."""
+    s0_l1 = tree_l1_norm_per_node(s_synced)
+    s_local = 2.0 * state.c_prime * (s0_l1 + eps_l1)
+    return state._replace(s_local=s_local, prev_noise_l1=jnp.zeros_like(s_local))
+
+
+def network_sensitivity(state: SensitivityState) -> jnp.ndarray:
+    """S^(t) = max_i S_i^(t) — the one-scalar all-reduce of Alg. 1 line 4."""
+    return jnp.max(state.s_local)
+
+
+def real_sensitivity(s_half: PyTree) -> jnp.ndarray:
+    """Exact max_{i,j} ||s_i^(t+1/2) - s_j^(t+1/2)||_1 (validation only).
+
+    O(N^2 d) — used by tests/benchmarks at small scale, never in the
+    production step.
+    """
+
+    def pair_dist(x):  # x: (N, ...)
+        flat = x.reshape(x.shape[0], -1)
+        return jnp.sum(jnp.abs(flat[:, None, :] - flat[None, :, :]), axis=-1)
+
+    leaves = jax.tree_util.tree_leaves(s_half)
+    dists = [pair_dist(x) for x in leaves]
+    total = sum(dists[1:], start=dists[0])  # (N, N)
+    return jnp.max(total)

@@ -1,0 +1,13 @@
+from repro.data.synthetic import (
+    SyntheticClassification,
+    SyntheticLMStream,
+    dirichlet_partition,
+)
+from repro.data.pipeline import NodeShardedLoader
+
+__all__ = [
+    "SyntheticLMStream",
+    "SyntheticClassification",
+    "dirichlet_partition",
+    "NodeShardedLoader",
+]

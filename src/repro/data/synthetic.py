@@ -1,0 +1,109 @@
+"""Deterministic synthetic data (container is offline; see DESIGN.md).
+
+Two generators:
+
+* ``SyntheticLMStream`` — a learnable token stream for the LM architectures:
+  tokens follow a random first-order Markov chain with per-node transition
+  temperature (non-IID across nodes), so next-token CE is reducible and
+  training curves are meaningful.
+* ``SyntheticClassification`` — a teacher-MLP classification task standing in
+  for MNIST/FMNIST in the paper-claim benchmarks; ``dirichlet_partition``
+  reproduces the non-IID label skew of decentralized FL setups.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticLMStream", "SyntheticClassification", "dirichlet_partition"]
+
+
+@dataclasses.dataclass
+class SyntheticLMStream:
+    vocab_size: int
+    seq_len: int
+    n_nodes: int
+    seed: int = 0
+    markov_rank: int = 64       # low-rank transition structure (keeps it learnable)
+    node_skew: float = 0.5      # per-node temperature spread (non-IID)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v, r = self.vocab_size, min(self.markov_rank, self.vocab_size)
+        self._emit = jnp.asarray(rng.normal(size=(r, v)) * 2.0, jnp.float32)
+        self._ctx = jnp.asarray(rng.normal(size=(v, r)), jnp.float32)
+        self._node_temp = jnp.asarray(
+            1.0 + self.node_skew * rng.uniform(-1, 1, size=(self.n_nodes,)),
+            jnp.float32)
+
+    def _sample_node(self, key, temp, batch):
+        def step(tok, k):
+            logits = self._ctx[tok] @ self._emit / temp
+            nxt = jax.random.categorical(k, logits, axis=-1)
+            return nxt, nxt
+
+        k0, kseq = jax.random.split(key)
+        tok0 = jax.random.randint(k0, (batch,), 0, self.vocab_size)
+        keys = jax.random.split(kseq, self.seq_len - 1)
+        _, rest = jax.lax.scan(step, tok0, keys)
+        return jnp.concatenate([tok0[None], rest], axis=0).T  # (batch, seq)
+
+    def batch(self, key: jax.Array, per_node_batch: int) -> dict:
+        """-> {"tokens": (n_nodes, per_node_batch, seq_len) int32}."""
+        keys = jax.random.split(key, self.n_nodes)
+        toks = jax.vmap(self._sample_node, in_axes=(0, 0, None))(
+            keys, self._node_temp, per_node_batch)
+        return {"tokens": toks.astype(jnp.int32)}
+
+
+@dataclasses.dataclass
+class SyntheticClassification:
+    """Teacher-MLP generated classification (stands in for MNIST/FMNIST)."""
+
+    d_in: int = 32
+    n_classes: int = 10
+    teacher_hidden: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self._w1 = jnp.asarray(rng.normal(size=(self.d_in, self.teacher_hidden))
+                               / np.sqrt(self.d_in), jnp.float32)
+        self._w2 = jnp.asarray(rng.normal(size=(self.teacher_hidden, self.n_classes))
+                               / np.sqrt(self.teacher_hidden), jnp.float32)
+
+    def sample(self, key: jax.Array, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        kx, _ = jax.random.split(key)
+        x = jax.random.normal(kx, (n, self.d_in))
+        logits = jnp.tanh(x @ self._w1) @ self._w2
+        y = jnp.argmax(logits, axis=-1)
+        return x, y.astype(jnp.int32)
+
+    def node_batches(self, key: jax.Array, n_nodes: int, per_node: int,
+                     partition: np.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-node batches, optionally label-skewed via a Dirichlet partition
+        matrix (n_nodes, n_classes) of per-node class probabilities."""
+        keys = jax.random.split(key, n_nodes)
+        xs, ys = jax.vmap(lambda k: self.sample(k, 4 * per_node))(keys)
+        if partition is None:
+            return xs[:, :per_node], ys[:, :per_node]
+        # Gumbel-top-k: sample per_node items without replacement with
+        # probability proportional to the node's class weights (soft non-IID
+        # skew rather than hard single-class nodes).
+        probs = jnp.asarray(partition, jnp.float32)  # (n_nodes, n_classes)
+        w = jnp.take_along_axis(probs, ys, axis=1)   # (n_nodes, 4*per_node)
+        g = jax.random.gumbel(key, w.shape)
+        idx = jnp.argsort(-(jnp.log(w + 1e-9) + g), axis=1)[:, :per_node]
+        x_sel = jnp.take_along_axis(xs, idx[..., None], axis=1)
+        y_sel = jnp.take_along_axis(ys, idx, axis=1)
+        return x_sel, y_sel
+
+
+def dirichlet_partition(n_nodes: int, n_classes: int, alpha: float = 0.5,
+                        seed: int = 0) -> np.ndarray:
+    """Per-node class distributions: rows ~ Dirichlet(alpha) (non-IID knob)."""
+    rng = np.random.default_rng(seed)
+    return rng.dirichlet(np.full(n_classes, alpha), size=n_nodes)

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the DPPS per-round hot spots.
+
+The DPPS protocol's per-round tensor work is pointwise-plus-reduction over
+the shared parameters: perturb, draw Laplace noise, add it, and produce the
+two L1 norms the sensitivity recursion needs. Unfused, that is ~6 HBM
+round-trips over d_s elements; the ``dpps_perturb`` kernel does it in one
+read + one write with on-chip (VMEM) accumulation of the norms.
+
+Kernels (each: <name>.py with pl.pallas_call + BlockSpec; ops.py jit'd
+wrappers; ref.py pure-jnp oracles):
+
+* laplace_noise   — u32 bits -> Laplace(0, scale) via inverse CDF
+* l1_clip         — tiled L1-norm reduce + clip-scale (paper Eq. 24)
+* dpps_perturb    — fused s + eps + gamma_n * Lap(bits) with norm accumulators
+* pushsum_mix     — W @ s_tile circulant/dense mixing block (MXU-shaped)
+* flash_attention — blockwise online-softmax causal/sliding-window GQA
+                    forward (targets the memory-bound 32k prefill rows in
+                    EXPERIMENTS.md SRoofline; O(S*D) HBM traffic vs O(S^2))
+
+TPU PRNG note: on real TPUs the bits would come from pltpu.prng_random_bits
+inside the kernel; CPU interpret mode (this container's validation path)
+cannot lower that primitive, so bits are generated with jax.random.bits and
+passed in — the fusion structure (single pass over d_s) is unchanged.
+"""

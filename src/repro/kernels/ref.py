@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every kernel (bit-exact transforms, f32 math).
+
+Tests assert_allclose kernel outputs against these across shape/dtype
+sweeps; the CPU training path may also use them directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["laplace_from_bits", "dpps_perturb", "l1_norm", "clip_scale", "pushsum_mix"]
+
+
+def laplace_from_bits(bits: jnp.ndarray, scale) -> jnp.ndarray:
+    u = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    c = u - 0.5
+    mag = jnp.maximum(1.0 - 2.0 * jnp.abs(c), 1e-30)
+    return -jnp.asarray(scale, jnp.float32) * jnp.sign(c) * jnp.log(mag)
+
+
+def dpps_perturb(s, eps, bits, scale, gamma_n):
+    noise = laplace_from_bits(bits, scale)
+    epsf = eps.astype(jnp.float32)
+    s_noise = (s.astype(jnp.float32) + epsf
+               + jnp.asarray(gamma_n, jnp.float32) * noise).astype(s.dtype)
+    return s_noise, jnp.sum(jnp.abs(epsf)), jnp.sum(jnp.abs(noise))
+
+
+def l1_norm(x) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(x.astype(jnp.float32)))
+
+
+def clip_scale(x, denom) -> jnp.ndarray:
+    return (x.astype(jnp.float32) / jnp.asarray(denom, jnp.float32)).astype(x.dtype)
+
+
+def pushsum_mix(w, x) -> jnp.ndarray:
+    return jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, group: int = 1, window: int | None = None):
+    """Naive causal (sliding-window) GQA attention. q: (H,S,D); k/v (K,S,D)."""
+    h, s, d = q.shape
+    kk = jnp.repeat(k, group, axis=0).astype(jnp.float32)
+    vv = jnp.repeat(v, group, axis=0).astype(jnp.float32)
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), kk) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32))
+    qpos = jnp.arange(s)[None, :, None]
+    kpos = jnp.arange(s)[None, None, :]
+    mask = qpos >= kpos
+    if window is not None:
+        mask = mask & ((qpos - kpos) < window)
+    probs = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, vv).astype(q.dtype)

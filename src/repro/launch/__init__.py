@@ -1,0 +1,2 @@
+# Launcher package. NOTE: importing submodules must never touch jax device
+# state (dryrun.py sets XLA_FLAGS before any jax import).

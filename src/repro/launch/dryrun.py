@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory_analysis / cost_analysis, and record the
+roofline terms.
+
+MUST be run as a fresh process (the XLA_FLAGS line above precedes every
+other import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out benchmarks/results/dryrun.json
+
+Results append to a JSON list so long sweeps can resume.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.launch.flops import model_flops_per_chip
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_serve_plan, build_train_plan
+
+
+def run_one(arch_name: str, shape_name: str, *, multi_pod: bool,
+            schedule: str = "dense", param_dtype: str | None = None,
+            two_pass: bool | None = None, cache_dtype: str | None = None,
+            carry_cache: bool = False, verbose: bool = True) -> dict:
+    arch = get_config(arch_name)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if not arch.runs_shape(shape_name):
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "full-attention arch; long_500k needs sub-quadratic "
+                          "attention (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        variant = "+".join(
+            [schedule]
+            + ([param_dtype] if param_dtype else [])
+            + (["onepass"] if two_pass is False else [])
+            + ([f"cache-{cache_dtype}"] if cache_dtype else [])
+            + (["carrycache"] if carry_cache else []))
+        with jax.set_mesh(mesh):
+            if shape.kind == "train":
+                plan = build_train_plan(arch, mesh, shape_name=shape_name,
+                                        schedule=schedule,
+                                        param_dtype=param_dtype,
+                                        two_pass=two_pass)
+            else:
+                plan = build_serve_plan(arch, mesh, shape_name=shape_name,
+                                        param_dtype=param_dtype,
+                                        cache_dtype=cache_dtype,
+                                        carry_cache=carry_cache)
+            lowered = plan.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        terms = analyze_compiled(
+            compiled, arch=arch_name, shape=shape_name, mesh=mesh_name,
+            model_flops=model_flops_per_chip(arch, shape_name, n_chips))
+        mem = compiled.memory_analysis()
+        row = terms.row()
+        row.update({
+            "status": "ok", "schedule": variant,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": str(mem),
+        })
+        if verbose:
+            print(f"[{arch_name} x {shape_name} x {mesh_name} x {variant}] OK "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+            print(f"  memory_analysis: {mem}")
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca
+            print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+                  f"bytes={ca.get('bytes accessed', 0):.3e}")
+            print(f"  roofline: compute={terms.t_compute*1e3:.2f}ms "
+                  f"memory={terms.t_memory*1e3:.2f}ms "
+                  f"collective={terms.t_collective*1e3:.2f}ms "
+                  f"-> {terms.bottleneck}-bound  "
+                  f"useful_flops={terms.useful_flops_ratio:.2f}")
+        return row
+    except Exception as e:  # a failure here is a sharding bug — surface it
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                "schedule": schedule, "status": "error",
+                "error": f"{type(e).__name__}: {e}"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("pod1", "pod2", "both"), default="pod1")
+    ap.add_argument("--schedule", choices=("dense", "circulant"), default="dense")
+    ap.add_argument("--param-dtype", choices=("float32", "bfloat16"), default=None)
+    ap.add_argument("--single-pass", action="store_true",
+                    help="fused single-gradient-pass PartPSP variant")
+    ap.add_argument("--cache-dtype", choices=("float32", "bfloat16"), default=None)
+    ap.add_argument("--carry-cache", action="store_true",
+                    help="decode_cache_in_carry SPerf path")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape)")
+    ap.add_argument("--out", default=None, help="append JSON rows to this file")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if (args.all or not args.shape) else (args.shape,)
+    pods = {"pod1": (False,), "pod2": (True,), "both": (False, True)}[args.mesh]
+
+    rows = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            rows = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("schedule", "dense"))
+            for r in rows if r.get("status") == "ok"}
+
+    for arch_name in archs:
+        for shape_name in shapes:
+            for multi_pod in pods:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                variant = "+".join(
+                    [args.schedule]
+                    + ([args.param_dtype] if args.param_dtype else [])
+                    + (["onepass"] if args.single_pass else [])
+                    + ([f"cache-{args.cache_dtype}"] if args.cache_dtype else [])
+                    + (["carrycache"] if args.carry_cache else []))
+                key = (arch_name, shape_name, mesh_name, variant)
+                if key in done:
+                    print(f"[{arch_name} x {shape_name} x {mesh_name}] cached")
+                    continue
+                row = run_one(arch_name, shape_name, multi_pod=multi_pod,
+                              schedule=args.schedule,
+                              param_dtype=args.param_dtype,
+                              two_pass=False if args.single_pass else None,
+                              cache_dtype=args.cache_dtype,
+                              carry_cache=args.carry_cache)
+                rows = [r for r in rows
+                        if (r["arch"], r["shape"], r["mesh"],
+                            r.get("schedule", "dense")) != key]
+                rows.append(row)
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(rows, f, indent=1, default=str)
+
+    n_ok = sum(1 for r in rows if r.get("status") == "ok")
+    n_skip = sum(1 for r in rows if r.get("status") == "skipped")
+    n_err = sum(1 for r in rows if r.get("status") == "error")
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        for r in rows:
+            if r.get("status") == "error":
+                print(f"  ERROR {r['arch']} x {r['shape']} x {r['mesh']}: {r['error']}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

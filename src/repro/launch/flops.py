@@ -1,0 +1,46 @@
+"""MODEL_FLOPS accounting: 6*N*D (train) / 2*N*D (inference) with N the
+*active* parameter count (MoE experts scaled to top_k + shared)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.configs import INPUT_SHAPES, ArchSpec
+from repro.models import Transformer
+from repro.models.config import MoEGroup
+
+__all__ = ["param_counts", "model_flops_per_chip"]
+
+
+def param_counts(arch: ArchSpec) -> tuple[int, int]:
+    """(total, active) parameter counts of the full model."""
+    model = Transformer(arch.model)
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0
+    moe = next((g for g in arch.model.groups if isinstance(g, MoEGroup)), None)
+    for path, leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if moe is not None and "/moe/w_" in "/" + keys:
+            # expert bank: only top_k of n_experts are active per token
+            active += n * moe.top_k // moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops_per_chip(arch: ArchSpec, shape_name: str, n_chips: int) -> float:
+    shape = INPUT_SHAPES[shape_name]
+    _, active = param_counts(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * active * tokens
+    else:  # decode: one new token per sequence
+        total = 2.0 * active * shape.global_batch
+    return total / n_chips

@@ -1,0 +1,44 @@
+"""Production meshes (functions, not module constants — importing this module
+never touches jax device state).
+
+Single pod : (data=16, model=16) = 256 chips (TPU v5e pod slice)
+Multi-pod  : (pod=2, data=16, model=16) = 512 chips
+
+The decentralized gossip axes are ("data",) single-pod and ("pod", "data")
+multi-pod (32 nodes); "model" is tensor/expert parallelism inside each node.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+__all__ = ["make_production_mesh", "gossip_axes", "n_gossip_nodes", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — run "
+            "under launch/dryrun.py (it forces 512 host platform devices)")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def gossip_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the decentralized node dimension is sharded over."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a != "model")
+
+
+def n_gossip_nodes(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in gossip_axes(mesh)]))
+
+
+def make_host_mesh(n_nodes: int = 1):
+    """Degenerate 1-device mesh for CPU tests/examples (no SPMD)."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))

@@ -1,0 +1,100 @@
+"""Sharding assembly: turn a model's PartitionSpec trees + a Partition into
+NamedSharding trees for the full PartPSP train state, batches, and serving
+state on a production mesh.
+
+Layout recap (DESIGN.md):
+* train state leaves are node-stacked: node dim -> gossip axes
+  (("data",) or ("pod", "data")); remaining dims follow the model pspec
+  ("model" for heads / ffn / experts).
+* serving uses consensus params (no node dim): the model pspec as-is, i.e.
+  replicated over the gossip axes, TP over "model".
+* decode caches shard batch over "data" (or the KV sequence dim for
+  long_500k's batch=1).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.partition import Partition
+from repro.launch.mesh import gossip_axes
+
+__all__ = [
+    "prepend_axes",
+    "named",
+    "train_state_shardings",
+    "train_batch_shardings",
+    "serve_param_shardings",
+    "serve_cache_shardings",
+]
+
+
+def prepend_axes(spec: P, axes: tuple[str, ...]) -> P:
+    """P(None, 'model') with node axes ('pod','data') -> P(('pod','data'), None, 'model')."""
+    head = axes if len(axes) > 1 else axes[0]
+    return P(head, *tuple(spec))
+
+
+def named(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_shardings(model, partition: Partition, mesh):
+    """PartPSPState-shaped tree of NamedShardings."""
+    from repro.core.partpsp import PartPSPState
+    from repro.core.dpps import DPPSState
+    from repro.core.pushsum import PushSumState
+    from repro.core.sensitivity import SensitivityState
+
+    gax = gossip_axes(mesh)
+    pspecs = model.param_pspecs()
+    stacked = jax.tree_util.tree_map(
+        lambda sp: prepend_axes(sp, gax), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    shared_specs, local_specs = partition.split_static(stacked)
+
+    node_vec = P(gax if len(gax) > 1 else gax[0])
+    scalar = P()
+    state_spec = PartPSPState(
+        dpps=DPPSState(
+            push=PushSumState(s=shared_specs, a=node_vec),
+            sens=SensitivityState(
+                s_local=node_vec, prev_noise_l1=node_vec,
+                c_prime=scalar, lam=scalar),
+            t=scalar,
+        ),
+        local=local_specs,
+    )
+    return named(mesh, state_spec)
+
+
+def train_batch_shardings(batch_specs: dict, mesh):
+    """Node dim (leading) over the gossip axes; the rest replicated."""
+    gax = gossip_axes(mesh)
+    head = gax if len(gax) > 1 else gax[0]
+
+    def spec_for(sds):
+        return P(head, *((None,) * (len(sds.shape) - 1)))
+
+    return jax.tree_util.tree_map(
+        lambda sds: NamedSharding(mesh, spec_for(sds)), batch_specs)
+
+
+def serve_param_shardings(model, mesh):
+    return named(mesh, model.param_pspecs())
+
+
+def serve_cache_shardings(model, mesh, *, shard_seq: bool = False):
+    """Batch over 'data' normally; for batch=1 long-context decode
+    (shard_seq=True) the KV sequence dim shards over 'data' instead."""
+    if shard_seq:
+        specs = model.cache_pspecs(batch_axis=None, seq_axis="data")
+    else:
+        specs = model.cache_pspecs(batch_axis="data", seq_axis=None)
+    return named(mesh, specs)

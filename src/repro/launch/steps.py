@@ -1,0 +1,218 @@
+"""Step builders: arch spec + mesh -> jit-able train/prefill/decode steps
+with their in/out shardings and abstract input stand-ins.
+
+Used by launch/dryrun.py (lower + compile, no allocation), launch/train.py
+and launch/serve.py (real execution on a host mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ArchSpec, serve_batch_specs, train_batch_specs
+from repro.core.dpps import DPPSConfig
+from repro.core.partition import Partition
+from repro.core.partpsp import PartPSPConfig, PartPSPState, partpsp_init, partpsp_step
+from repro.core.topology import DOutGraph, Topology, derive_constants
+from repro.launch.mesh import gossip_axes, n_gossip_nodes
+from repro.launch.sharding import (
+    serve_cache_shardings,
+    serve_param_shardings,
+    train_batch_shardings,
+    train_state_shardings,
+)
+from repro.models import Transformer
+
+__all__ = ["TrainPlan", "ServePlan", "build_train_plan", "build_serve_plan"]
+
+
+@dataclasses.dataclass
+class TrainPlan:
+    """Everything needed to lower/execute one PartPSP training step."""
+
+    arch: ArchSpec
+    model: Transformer
+    partition: Partition
+    cfg: PartPSPConfig
+    topology: Topology
+    step_fn: Callable            # (state, batch, key) -> (state, metrics)
+    state_specs: Any             # ShapeDtypeStruct tree for the state
+    batch_specs: Any
+    in_shardings: tuple
+    out_shardings: Any
+
+    def jitted(self):
+        return jax.jit(self.step_fn,
+                       in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=(0,))
+
+    def lower(self):
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        return self.jitted().lower(self.state_specs, self.batch_specs, key)
+
+
+@dataclasses.dataclass
+class ServePlan:
+    arch: ArchSpec
+    model: Transformer
+    kind: str                    # "prefill" | "decode"
+    step_fn: Callable
+    arg_specs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+
+    def jitted(self):
+        donate = (1,) if self.kind == "decode" else ()
+        return jax.jit(self.step_fn,
+                       in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=donate)
+
+    def lower(self):
+        return self.jitted().lower(*self.arg_specs)
+
+
+def _abstract_state(model: Transformer, partition: Partition, cfg: PartPSPConfig,
+                    n_nodes: int) -> PartPSPState:
+    """ShapeDtypeStruct stand-in for the node-stacked PartPSP state."""
+
+    def make(key):
+        params = model.init(key)
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape), params)
+        return partpsp_init(stacked, partition, cfg)
+
+    return jax.eval_shape(make, jax.random.PRNGKey(0))
+
+
+def build_train_plan(
+    arch: ArchSpec,
+    mesh,
+    *,
+    shape_name: str = "train_4k",
+    cfg: PartPSPConfig | None = None,
+    topology: Topology | None = None,
+    schedule: str | None = None,
+    param_dtype: str | None = None,   # SPerf knob: e.g. "bfloat16"
+    two_pass: bool | None = None,     # SPerf knob: False = fused grads
+) -> TrainPlan:
+    shape = INPUT_SHAPES[shape_name]
+    assert shape.kind == "train", shape
+    n_nodes = n_gossip_nodes(mesh)
+    model_cfg = arch.model
+    if param_dtype is not None:
+        model_cfg = dataclasses.replace(model_cfg, param_dtype=param_dtype)
+    model = Transformer(model_cfg)
+    if cfg is None:
+        topo = topology or DOutGraph(n_nodes=n_nodes, d=2)
+        c_prime, lam = derive_constants(topo)
+        cfg = PartPSPConfig(
+            gamma_l=0.05, gamma_s=0.05, clip=100.0,
+            dpps=DPPSConfig(b=1.0, gamma_n=0.01, c_prime=c_prime, lam=lam,
+                            schedule=schedule or "dense"),
+        )
+    else:
+        topo = topology or DOutGraph(n_nodes=n_nodes, d=2)
+    if schedule is not None:
+        cfg = dataclasses.replace(cfg, dpps=dataclasses.replace(cfg.dpps,
+                                                                schedule=schedule))
+    if two_pass is not None:
+        cfg = dataclasses.replace(cfg, two_pass=two_pass)
+
+    # Partition built from the abstract stacked-params template.
+    params_shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    stacked_shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((n_nodes,) + x.shape, x.dtype), params_shapes)
+    partition = Partition.from_rules(stacked_shapes, arch.shared_rules,
+                                     default="local")
+
+    if cfg.dpps.schedule == "circulant":
+        offsets, wts = topo.mixing_weights(0)
+        mix_kwargs = dict(offsets=offsets,
+                          mix_weights=jnp.asarray(wts, jnp.float32))
+    else:
+        mix_kwargs = dict(w=topo.weight_matrix_jnp(0))
+
+    def step_fn(state, batch, key):
+        return partpsp_step(state, batch, key, cfg=cfg, partition=partition,
+                            loss_fn=model.loss_fn, **mix_kwargs)
+
+    state_specs = _abstract_state(model, partition, cfg, n_nodes)
+    batch_specs = train_batch_specs(arch, shape, n_nodes)
+
+    state_sh = train_state_shardings(model, partition, mesh)
+    batch_sh = train_batch_shardings(batch_specs, mesh)
+    key_sh = NamedSharding(mesh, P())
+
+    return TrainPlan(
+        arch=arch, model=model, partition=partition, cfg=cfg, topology=topo,
+        step_fn=step_fn, state_specs=state_specs, batch_specs=batch_specs,
+        in_shardings=(state_sh, batch_sh, key_sh),
+        out_shardings=None,
+    )
+
+
+def build_serve_plan(arch: ArchSpec, mesh, *, shape_name: str,
+                     param_dtype: str | None = None,
+                     cache_dtype: str | None = None,
+                     carry_cache: bool = False) -> ServePlan:
+    shape = INPUT_SHAPES[shape_name]
+    assert shape.kind in ("prefill", "decode"), shape
+    model_cfg = arch.model
+    if param_dtype is not None:
+        model_cfg = dataclasses.replace(model_cfg, param_dtype=param_dtype)
+    if carry_cache:
+        model_cfg = dataclasses.replace(model_cfg, decode_cache_in_carry=True)
+    model = Transformer(model_cfg)
+    params_specs = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    params_sh = serve_param_shardings(model, mesh)
+    batch = serve_batch_specs(arch, shape)
+
+    if shape.kind == "prefill":
+        def step_fn(params, b):
+            return model.prefill(params, b)
+
+        batch_sh = jax.tree_util.tree_map(
+            lambda sds: NamedSharding(mesh, P("data", *((None,) * (len(sds.shape) - 1)))),
+            batch)
+        return ServePlan(
+            arch=arch, model=model, kind="prefill", step_fn=step_fn,
+            arg_specs=(params_specs, batch),
+            in_shardings=(params_sh, batch_sh), out_shardings=None)
+
+    # decode: one token against a seq_len cache
+    shard_seq = shape.global_batch == 1          # long_500k
+    cache_specs = jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, shape.seq_len,
+                          jnp.dtype(cache_dtype) if cache_dtype else None))
+    cache_sh = serve_cache_shardings(model, mesh, shard_seq=shard_seq)
+    enc = batch.get("image_embeds")
+
+    if enc is not None:
+        def step_fn(params, cache, token, pos, image_embeds):
+            return model.decode_step(params, cache, token, pos, enc=image_embeds)
+        extra_specs = (enc,)
+        bax = "data" if not shard_seq else None
+        extra_sh = (NamedSharding(mesh, P(bax, None, None)),)
+    else:
+        def step_fn(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos)
+        extra_specs, extra_sh = (), ()
+
+    tok = batch["token"]
+    bax = "data" if not shard_seq else None
+    tok_sh = NamedSharding(mesh, P(bax, *((None,) * (len(tok.shape) - 1))))
+    pos_sh = NamedSharding(mesh, P())
+
+    return ServePlan(
+        arch=arch, model=model, kind="decode", step_fn=step_fn,
+        arg_specs=(params_specs, cache_specs, tok, batch["pos"]) + extra_specs,
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh) + extra_sh,
+        out_shardings=None)

@@ -1,0 +1,174 @@
+"""PartPSP training driver.
+
+Runs the full decentralized DP training loop on whatever devices exist:
+on this CPU container it runs reduced configs end-to-end (the examples use
+it); on a real fleet the same code paths run on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --nodes 8 --steps 50 --algorithm partpsp
+
+Key flags mirror the paper's experimental grid: --algorithm
+{partpsp,sgp,sgpdp,pedfl}, --b (privacy budget), --gamma-n, --topology
+{dout,exp}, --degree, --sync-interval, --schedule {dense,circulant}.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.partition import Partition
+from repro.core.partpsp import (
+    consensus_params,
+    make_baseline_config,
+    partpsp_init,
+    partpsp_step,
+    privacy_summary,
+)
+from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
+from repro.data import NodeShardedLoader, SyntheticLMStream
+from repro.models import Transformer
+
+
+def make_topology(kind: str, n_nodes: int, degree: int):
+    if kind == "exp":
+        return ExpGraph(n_nodes=n_nodes)
+    return DOutGraph(n_nodes=n_nodes, d=degree)
+
+
+def build_trainer(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str,
+                  b: float, gamma_n: float, gamma_l: float, gamma_s: float,
+                  clip: float, topology: str, degree: int, sync_interval: int,
+                  schedule: str, use_kernels: bool = False, seed: int = 0):
+    arch = get_config(arch_name)
+    model_cfg = arch.smoke if reduced else arch.model
+    model = Transformer(model_cfg)
+    topo = make_topology(topology, n_nodes, degree)
+    c_prime, lam = calibrate_constants(topo)
+
+    cfg = make_baseline_config(
+        algorithm, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip, b=b,
+        gamma_n=gamma_n, c_prime=c_prime, lam=lam, schedule=schedule,
+        sync_interval=sync_interval)
+    if use_kernels:
+        cfg = dataclasses.replace(
+            cfg, dpps=dataclasses.replace(cfg.dpps, use_kernels=True))
+
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape) + 0.0, params)
+    rules = arch.shared_rules if algorithm != "sgpdp" else ((".*", "shared"),)
+    if algorithm == "sgp":
+        rules = ((".*", "shared"),)
+    if reduced:
+        # smoke configs have 2-layer stacks: clamp split points accordingly
+        rules = tuple(
+            (pat, ("split_layers", 1) if isinstance(act, tuple) else act)
+            for pat, act in rules)
+    partition = Partition.from_rules(stacked, rules, default="local")
+    state = partpsp_init(stacked, partition, cfg)
+
+    if cfg.dpps.schedule == "circulant":
+        offsets, wts = topo.mixing_weights(0)
+        mix = dict(offsets=offsets, mix_weights=jnp.asarray(wts, jnp.float32))
+    else:
+        mix = dict(w=topo.weight_matrix_jnp(0))
+
+    step = jax.jit(functools.partial(
+        partpsp_step, cfg=cfg, partition=partition, loss_fn=model.loss_fn, **mix))
+    return model, model_cfg, topo, cfg, partition, state, step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU friendly)")
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--per-node-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--algorithm", choices=("partpsp", "sgp", "sgpdp", "pedfl"),
+                    default="partpsp")
+    ap.add_argument("--b", type=float, default=3.0)
+    ap.add_argument("--gamma-n", type=float, default=0.003)
+    ap.add_argument("--gamma-l", type=float, default=0.05)
+    ap.add_argument("--gamma-s", type=float, default=0.05)
+    ap.add_argument("--clip", type=float, default=100.0)
+    ap.add_argument("--topology", choices=("dout", "exp"), default="dout")
+    ap.add_argument("--degree", type=int, default=2)
+    ap.add_argument("--sync-interval", type=int, default=5)
+    ap.add_argument("--schedule", choices=("dense", "circulant"), default="dense")
+    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--seed", type=int, default=2024)   # paper's seed
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args()
+
+    model, model_cfg, topo, cfg, partition, state, step = build_trainer(
+        args.arch, reduced=args.reduced, n_nodes=args.nodes,
+        algorithm=args.algorithm, b=args.b, gamma_n=args.gamma_n,
+        gamma_l=args.gamma_l, gamma_s=args.gamma_s, clip=args.clip,
+        topology=args.topology, degree=args.degree,
+        sync_interval=args.sync_interval, schedule=args.schedule,
+        use_kernels=args.use_kernels, seed=args.seed)
+
+    print(f"arch={args.arch} ({'reduced' if args.reduced else 'FULL'}) "
+          f"algorithm={args.algorithm} nodes={args.nodes} topo={args.topology}"
+          f"(d={args.degree}) d_s={partition.d_shared():,} "
+          f"d_l={partition.d_local():,}")
+
+    stream = SyntheticLMStream(vocab_size=model_cfg.vocab_size,
+                               seq_len=args.seq_len, n_nodes=args.nodes,
+                               seed=args.seed)
+    loader = NodeShardedLoader(stream, per_node_batch=args.per_node_batch,
+                               seed=args.seed)
+
+    history = []
+    t0 = time.time()
+    for t in range(args.steps):
+        batch = loader.batch_at(t)
+        if model_cfg.input_mode == "embeddings":
+            toks = batch["tokens"]
+            key_e = jax.random.fold_in(jax.random.PRNGKey(7), t)
+            batch = {"embeds": jax.random.normal(
+                        key_e, toks.shape + (model_cfg.d_model,)) * 0.1,
+                     "labels": toks}
+        key = jax.random.fold_in(jax.random.PRNGKey(args.seed), t)
+        state, metrics = step(state, batch, key)
+        row = {"step": t,
+               "loss": float(metrics["loss_mean"]),
+               "sensitivity": float(metrics["sensitivity_used"]),
+               "grad_l1_max": float(metrics["grad_l1_max"])}
+        history.append(row)
+        if t % args.log_every == 0 or t == args.steps - 1:
+            print(f"step {t:5d} loss={row['loss']:.4f} "
+                  f"S={row['sensitivity']:.3f} "
+                  f"({(time.time()-t0)/(t+1):.2f}s/step)")
+
+    print("privacy:", json.dumps(privacy_summary(cfg, args.steps)))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=1)
+    if args.checkpoint:
+        # consensus shared params are identical across nodes; persist node
+        # 0's view (s-bar + its personalized local params) for serving
+        final = jax.tree_util.tree_map(
+            lambda x: x[0], consensus_params(state, partition))
+        save_checkpoint(args.checkpoint, final, step=args.steps,
+                        metadata={"arch": args.arch,
+                                  "algorithm": args.algorithm})
+        print("checkpoint written to", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

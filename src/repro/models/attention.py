@@ -1,0 +1,166 @@
+"""GQA attention: training/prefill (full-sequence) and decode (KV-cache) paths.
+
+Shapes (single node; the launcher vmaps the node dim on top):
+  x:        (B, S, d_model)
+  q:        (B, S, H, D)      k/v: (B, S, K, D)    with H = K * group_size
+  cache:    k/v (B, T, K, D)  for decode, T = cache capacity
+
+Sliding windows and rope thetas may be traced scalars so heterogeneous
+per-layer patterns (gemma3 local:global) ride through a single lax.scan.
+A window value < 0 (or None statically) means global attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rope
+
+__all__ = [
+    "init_attention",
+    "attention_train",
+    "attention_decode",
+    "init_cross_attention",
+    "cross_attention",
+    "init_kv_cache",
+]
+
+_NEG_INF = -1e30
+
+
+def init_attention(
+    key: jax.Array, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+    dtype=jnp.float32,
+) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(kk, (d_model, n_kv_heads * head_dim), dtype),
+        "wv": dense_init(kv, (d_model, n_kv_heads * head_dim), dtype),
+        "wo": dense_init(ko, (n_heads * head_dim, d_model), dtype),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n: int, d: int) -> jnp.ndarray:
+    return x.reshape(x.shape[:-1] + (n, d))
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, group: int) -> jnp.ndarray:
+    """q: (B,S,K,g,D), k: (B,T,K,D) -> scores (B,K,g,S,T) in f32."""
+    return jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32), k.astype(jnp.float32))
+
+
+def attention_train(
+    params: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    theta,
+    window=None,
+) -> jnp.ndarray:
+    """Full-sequence causal (optionally sliding-window) GQA self-attention."""
+    b, s, _ = x.shape
+    group = n_heads // n_kv_heads
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    k = _split_heads(x @ params["wk"], n_kv_heads, head_dim)
+    v = _split_heads(x @ params["wv"], n_kv_heads, head_dim)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    q = q.reshape(b, s, n_kv_heads, group, head_dim)
+
+    scores = _gqa_scores(q, k, group) / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    qpos = positions[:, None, None, :, None]  # (B,1,1,S,1)
+    kpos = positions[:, None, None, None, :]  # (B,1,1,1,S)
+    mask = qpos >= kpos
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        in_window = (qpos - kpos) < w
+        mask = mask & jnp.where(w < 0, True, in_window)
+    scores = jnp.where(mask, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, s, n_heads * head_dim).astype(x.dtype)
+    return out @ params["wo"]
+
+
+def init_kv_cache(
+    batch: int, capacity: int, n_kv_heads: int, head_dim: int, n_layers: int,
+    dtype=jnp.float32,
+) -> dict:
+    shape = (n_layers, batch, capacity, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(
+    params: dict,
+    x: jnp.ndarray,           # (B, 1, d_model) — one new token
+    pos: jnp.ndarray,         # scalar int32: its position
+    k_cache: jnp.ndarray,     # (B, T, K, D) — this layer's cache
+    v_cache: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    theta,
+    window=None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (out, new_k_cache, new_v_cache)."""
+    b, one, _ = x.shape
+    t = k_cache.shape[1]
+    group = n_heads // n_kv_heads
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = rope(_split_heads(x @ params["wq"], n_heads, head_dim), posv, theta)
+    k_new = rope(_split_heads(x @ params["wk"], n_kv_heads, head_dim), posv, theta)
+    v_new = _split_heads(x @ params["wv"], n_kv_heads, head_dim)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+
+    q = q.reshape(b, 1, n_kv_heads, group, head_dim)
+    scores = _gqa_scores(q, k_cache, group) / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, None, None, None, :]
+    mask = kpos <= pos
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        in_window = (pos - kpos) < w
+        mask = mask & jnp.where(w < 0, True, in_window)
+    scores = jnp.where(mask, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+    return out @ params["wo"], k_cache, v_cache
+
+
+def init_cross_attention(
+    key: jax.Array, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+    dtype=jnp.float32,
+) -> dict:
+    p = init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype)
+    p["gate"] = jnp.zeros((1,), dtype)  # llama-3.2-V tanh-gated cross-attn
+    return p
+
+
+def cross_attention(
+    params: dict,
+    x: jnp.ndarray,            # (B, S, d_model)
+    enc: jnp.ndarray,          # (B, M, d_model) — stub image/audio embeddings
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    group = n_heads // n_kv_heads
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    k = _split_heads(enc @ params["wk"], n_kv_heads, head_dim)
+    v = _split_heads(enc @ params["wv"], n_kv_heads, head_dim)
+    q = q.reshape(b, s, n_kv_heads, group, head_dim)
+    scores = _gqa_scores(q, k, group) / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, s, n_heads * head_dim).astype(x.dtype)
+    gate = jnp.tanh(params["gate"].astype(jnp.float32)).astype(x.dtype)
+    return (out @ params["wo"]) * gate

@@ -1,0 +1,91 @@
+"""Shared neural building blocks (pure functions over explicit param dicts).
+
+All functions are single-example friendly and vmap/scan-safe. Parameters are
+plain nested dicts of jnp arrays; initializers take an explicit key.
+Activations are computed in float32 and cast back to the residual dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "init_rms_norm",
+    "dense_init",
+    "mlp_init",
+    "mlp_apply",
+    "rope",
+    "softcap",
+]
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LLM inits closely enough)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, activation: str, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+    }
+    if activation in ("silu", "geglu"):  # gated variants carry a gate proj
+        params["w_gate"] = dense_init(k3, (d_model, d_ff), dtype)
+    return params
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """Gated (SwiGLU / GeGLU) or plain-GELU MLP."""
+    up = x @ params["w_up"]
+    if activation == "silu":
+        gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+        h = gate * up
+    elif activation == "geglu":
+        gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32), approximate=True).astype(x.dtype)
+        h = gate * up
+    else:  # plain gelu
+        h = jax.nn.gelu(up.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return h @ params["w_down"]
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """Rotary position embedding.
+
+    x: (..., S, H, D) with D even; positions: (..., S) int; theta may be a
+    traced scalar (per-layer theta rides through lax.scan).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq_exponents = jnp.arange(half, dtype=jnp.float32) / half
+    theta = jnp.asarray(theta, jnp.float32)
+    inv_freq = jnp.exp(-freq_exponents * jnp.log(theta))  # theta ** -(2i/d)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-style logit soft-capping; cap <= 0 is a no-op."""
+    if cap and cap > 0:
+        return (jnp.tanh(logits / cap) * cap).astype(logits.dtype)
+    return logits

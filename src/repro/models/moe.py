@@ -1,0 +1,105 @@
+"""Top-1 routed Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+TPU-native formulation: tokens are scattered into a dense (E * Cap, d)
+dispatch buffer (one scatter, O(T d)), experts run as a single batched
+einsum over (E, Cap, d) — MXU-aligned — and results gather back with the
+router probability as combine weight. This avoids the classic GShard
+(T, E, Cap) one-hot tensor, which at 32k-token contexts would be ~10^9
+elements. Overflowing tokens (position-in-expert >= Cap) are dropped, the
+standard capacity-factor semantics.
+
+An optional always-on shared expert (llama4 style) adds a dense MLP branch.
+Expert weight tensors are stacked on a leading E axis — the launcher shards
+that axis over the mesh "model" dimension (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = ["init_moe", "moe_apply"]
+
+
+def init_moe(
+    key: jax.Array,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    *,
+    shared_expert: bool,
+    dtype=jnp.float32,
+) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(kr, (d_model, n_experts), dtype),
+        "w_gate": dense_init(kg, (n_experts, d_model, d_ff), dtype),
+        "w_up": dense_init(ku, (n_experts, d_model, d_ff), dtype),
+        "w_down": dense_init(kd, (n_experts, d_ff, d_model), dtype),
+    }
+    if shared_expert:
+        k1, k2, k3 = jax.random.split(ks, 3)
+        params["shared"] = {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return params
+
+
+def moe_apply(
+    params: dict,
+    x: jnp.ndarray,             # (B, S, d_model)
+    *,
+    n_experts: int,
+    capacity_factor: float,
+    router_aux_weight: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), load-balance aux loss scalar)."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    t = b * s
+    cap = max(1, int(capacity_factor * t / n_experts))
+
+    logits = (tokens @ params["router"]).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    expert_idx = jnp.argmax(probs, axis=-1)                    # (T,) top-1
+    expert_prob = jnp.max(probs, axis=-1)                      # (T,)
+
+    # Position of each token within its expert's queue (stable, order-based).
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)  # (T, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)                  # (T, E)
+    pos = jnp.take_along_axis(pos_in_expert, expert_idx[:, None], axis=1)[:, 0]
+    keep = pos < cap
+
+    # Scatter tokens into the dense dispatch buffer (E * Cap, d).
+    slot = expert_idx * cap + jnp.minimum(pos, cap - 1)
+    slot = jnp.where(keep, slot, n_experts * cap)  # dropped -> overflow row
+    buf = jnp.zeros((n_experts * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], tokens, 0.0))
+    dispatched = buf[: n_experts * cap].reshape(n_experts, cap, d)
+
+    # Batched expert MLPs (E-stacked einsums; E axis shards over "model").
+    gate = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", dispatched, params["w_gate"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    up = jnp.einsum("ecd,edf->ecf", dispatched, params["w_up"])
+    h = jnp.einsum("ecf,efd->ecd", gate * up, params["w_down"])  # (E, Cap, d)
+
+    # Gather back, weighted by the router probability.
+    h_flat = jnp.concatenate([h.reshape(n_experts * cap, d), jnp.zeros((1, d), h.dtype)])
+    out = h_flat[slot] * (expert_prob[:, None].astype(x.dtype))
+    out = jnp.where(keep[:, None], out, 0.0)
+
+    if "shared" in params:
+        sh = params["shared"]
+        sgate = jax.nn.silu((tokens @ sh["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+        out = out + (sgate * (tokens @ sh["w_up"])) @ sh["w_down"]
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e.
+    frac_tokens = jnp.mean(onehot.astype(jnp.float32), axis=0)   # f_e
+    frac_probs = jnp.mean(probs, axis=0)                          # p_e
+    aux = router_aux_weight * n_experts * jnp.sum(frac_tokens * frac_probs)
+
+    return out.reshape(b, s, d), aux

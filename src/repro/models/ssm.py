@@ -1,0 +1,273 @@
+"""Recurrent sequence mixers: mLSTM + sLSTM (xLSTM) and Mamba2 (SSD).
+
+All mixers expose:
+  init_*(key, d_model, ...)                  -> params
+  *_seq(params, x)                           -> (y, final_state)   # training
+  *_step(params, x_t, state)                 -> (y_t, new_state)   # decode
+
+Training uses ``lax.scan`` over time (the faithful recurrent form — the
+chunkwise-parallel reformulations are a possible future kernel; see
+DESIGN.md). Decode is O(1) state per token, which is what makes the ssm /
+hybrid architectures long_500k-eligible.
+
+Simplifications vs. the reference implementations (documented deviations):
+the short causal conv in Mamba2 and the mLSTM block's depthwise conv are
+omitted; gate biases init to small constants for stable exp-gating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = [
+    "init_mlstm", "mlstm_seq", "mlstm_step", "mlstm_state",
+    "init_slstm", "slstm_seq", "slstm_step", "slstm_state",
+    "init_mamba2", "mamba2_seq", "mamba2_step", "mamba2_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM; xLSTM arXiv:2405.04517 Eq. 19-27)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key: jax.Array, d_model: int, n_heads: int, proj_factor: float = 2.0,
+               dtype=jnp.float32) -> dict:
+    d_inner = int(d_model * proj_factor)
+    assert d_inner % n_heads == 0
+    ku, kq, kk, kv, kg, ko, kd = jax.random.split(key, 7)
+    hd = d_inner // n_heads
+    return {
+        "w_up": dense_init(ku, (d_model, d_inner), dtype),
+        "w_q": dense_init(kq, (d_inner, d_inner), dtype),
+        "w_k": dense_init(kk, (d_inner, d_inner), dtype),
+        "w_v": dense_init(kv, (d_inner, d_inner), dtype),
+        # scalar i/f gates per head + vector o gate
+        "w_if": dense_init(kg, (d_inner, 2 * n_heads), dtype),
+        "b_if": jnp.concatenate([
+            jnp.full((n_heads,), -3.0, dtype),   # input gate starts small
+            jnp.full((n_heads,), 3.0, dtype),    # forget gate starts open
+        ]),
+        "w_o": dense_init(ko, (d_model, d_inner), dtype),
+        "w_down": dense_init(kd, (d_inner, d_model), dtype),
+    }
+
+
+def mlstm_state(batch: int, d_model: int, n_heads: int, proj_factor: float = 2.0,
+                dtype=jnp.float32) -> dict:
+    d_inner = int(d_model * proj_factor)
+    hd = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), dtype),
+        "n": jnp.zeros((batch, n_heads, hd), dtype),
+        "m": jnp.full((batch, n_heads), -1e30, dtype),
+    }
+
+
+def _mlstm_gates_qkv(params: dict, x: jnp.ndarray, n_heads: int):
+    """x: (B, S, d_model) -> per-step q,k,v (B,S,H,hd), i/f pre-acts (B,S,H), o (B,S,H,hd)."""
+    h = n_heads
+    hd = params["w_q"].shape[1] // h
+    u = x @ params["w_up"]                       # (B,S,d_inner)
+    q = (u @ params["w_q"]).reshape(u.shape[:-1] + (h, hd))
+    k = (u @ params["w_k"]).reshape(u.shape[:-1] + (h, hd)) / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    v = (u @ params["w_v"]).reshape(u.shape[:-1] + (h, hd))
+    gif = (u @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    i_pre, f_pre = gif[..., :h], gif[..., h:]
+    o = jax.nn.sigmoid((x @ params["w_o"]).astype(jnp.float32)).astype(x.dtype)
+    return q, k, v, i_pre, f_pre, o, u
+
+
+def _mlstm_cell(carry, inp):
+    """One stabilized mLSTM step. carry: (C,n,m); inp: (q,k,v,i_pre,f_pre)."""
+    C, n, m = carry
+    q, k, v, i_pre, f_pre = inp
+    f_log = jax.nn.log_sigmoid(f_pre)                         # (B,H)
+    m_new = jnp.maximum(f_log + m, i_pre)
+    f_act = jnp.exp(f_log + m - m_new)[..., None, None]
+    i_act = jnp.exp(i_pre - m_new)[..., None, None]
+    kf = k.astype(jnp.float32); vf = v.astype(jnp.float32); qf = q.astype(jnp.float32)
+    C_new = f_act * C + i_act * (vf[..., :, None] * kf[..., None, :])  # (B,H,hd_v,hd_k)
+    n_new = f_act[..., 0] * n + i_act[..., 0] * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)), 1.0)
+    h_t = num / den[..., None]                                # (B,H,hd)
+    return (C_new, n_new, m_new), h_t
+
+
+def mlstm_seq(params: dict, x: jnp.ndarray, *, n_heads: int, state: dict | None = None):
+    b, s, d = x.shape
+    if state is None:
+        state = mlstm_state(b, d, n_heads, params["w_up"].shape[1] / d)
+    q, k, v, i_pre, f_pre, o, _ = _mlstm_gates_qkv(params, x, n_heads)
+    # time-major scan
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+    carry = (state["C"].astype(jnp.float32), state["n"].astype(jnp.float32),
+             state["m"].astype(jnp.float32))
+    carry, hs = jax.lax.scan(_mlstm_cell, carry, inputs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, -1).astype(x.dtype)  # (B,S,d_inner)
+    y = (o * h) @ params["w_down"]
+    new_state = {"C": carry[0], "n": carry[1], "m": carry[2]}
+    return y, new_state
+
+
+def mlstm_step(params: dict, x: jnp.ndarray, state: dict, *, n_heads: int):
+    """x: (B, 1, d_model)."""
+    q, k, v, i_pre, f_pre, o, _ = _mlstm_gates_qkv(params, x, n_heads)
+    carry = (state["C"].astype(jnp.float32), state["n"].astype(jnp.float32),
+             state["m"].astype(jnp.float32))
+    carry, h = _mlstm_cell(carry, (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]))
+    b = x.shape[0]
+    h = h.reshape(b, 1, -1).astype(x.dtype)
+    y = (o * h) @ params["w_down"]
+    return y, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with recurrent gate connections)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, d_model: int, dtype=jnp.float32) -> dict:
+    kw, kr = jax.random.split(key)
+    return {
+        "w": dense_init(kw, (d_model, 4 * d_model), dtype),     # z,i,f,o pre-acts
+        "r": dense_init(kr, (d_model, 4 * d_model), dtype),     # recurrent h -> gates
+        "b": jnp.concatenate([
+            jnp.zeros((d_model,), dtype),
+            jnp.full((d_model,), -3.0, dtype),
+            jnp.full((d_model,), 3.0, dtype),
+            jnp.zeros((d_model,), dtype),
+        ]),
+    }
+
+
+def slstm_state(batch: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {
+        "c": jnp.zeros((batch, d_model), dtype),
+        "n": jnp.zeros((batch, d_model), dtype),
+        "m": jnp.full((batch, d_model), -1e30, dtype),
+        "h": jnp.zeros((batch, d_model), dtype),
+    }
+
+
+def _slstm_cell(params, carry, wx_t):
+    c, n, m, h = carry
+    d = c.shape[-1]
+    pre = (wx_t + h @ params["r"].astype(jnp.float32)).astype(jnp.float32)
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + m, i_pre)
+    f_act = jnp.exp(f_log + m - m_new)
+    i_act = jnp.exp(i_pre - m_new)
+    c_new = f_act * c + i_act * z
+    n_new = f_act * n + i_act
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_seq(params: dict, x: jnp.ndarray, state: dict | None = None):
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_state(b, d)
+    wx = (x @ params["w"] + params["b"]).astype(jnp.float32)  # (B,S,4d)
+    carry = tuple(state[k].astype(jnp.float32) for k in ("c", "n", "m", "h"))
+    carry, hs = jax.lax.scan(
+        lambda c, t: _slstm_cell(params, c, t), carry, jnp.moveaxis(wx, 1, 0)
+    )
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    new_state = dict(zip(("c", "n", "m", "h"), carry))
+    return y, new_state
+
+
+def slstm_step(params: dict, x: jnp.ndarray, state: dict):
+    wx = (x[:, 0] @ params["w"] + params["b"]).astype(jnp.float32)
+    carry = tuple(state[k].astype(jnp.float32) for k in ("c", "n", "m", "h"))
+    carry, h = _slstm_cell(params, carry, wx)
+    return h[:, None].astype(x.dtype), dict(zip(("c", "n", "m", "h"), carry))
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (state-space duality layer, recurrent form; arXiv:2405.21060)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key: jax.Array, d_model: int, d_state: int = 64, expand: int = 2,
+                head_dim: int = 64, dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    assert d_inner % head_dim == 0
+    nh = d_inner // head_dim
+    ki, kb, kc, kdt, ko = jax.random.split(key, 5)
+    return {
+        "w_in": dense_init(ki, (d_model, 2 * d_inner), dtype),   # x and gate z
+        "w_b": dense_init(kb, (d_model, d_state), dtype),
+        "w_c": dense_init(kc, (d_model, d_state), dtype),
+        "w_dt": dense_init(kdt, (d_model, nh), dtype),
+        "b_dt": jnp.full((nh,), -2.0, dtype),     # softplus(-2) ~ 0.13
+        "a_log": jnp.zeros((nh,), dtype),         # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((nh,), dtype),
+        "w_out": dense_init(ko, (d_inner, d_model), dtype),
+    }
+
+
+def mamba2_state(batch: int, d_model: int, d_state: int = 64, expand: int = 2,
+                 head_dim: int = 64, dtype=jnp.float32) -> dict:
+    nh = expand * d_model // head_dim
+    return {"h": jnp.zeros((batch, nh, d_state, head_dim), dtype)}
+
+
+def _mamba2_proj(params, x, head_dim: int):
+    hd = head_dim
+    nh = params["w_dt"].shape[1]
+    xz = x @ params["w_in"]
+    d_inner = nh * hd
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+    xh = xi.reshape(xi.shape[:-1] + (nh, hd))                     # (B,S,nh,hd)
+    bmat = x @ params["w_b"]                                      # (B,S,n)
+    cmat = x @ params["w_c"]                                      # (B,S,n)
+    dt = jax.nn.softplus((x @ params["w_dt"] + params["b_dt"]).astype(jnp.float32))
+    return xh, z, bmat, cmat, dt
+
+
+def _mamba2_cell(a_neg, d_skip, carry, inp):
+    h = carry                                      # (B,nh,n,hd) f32
+    xh, bmat, cmat, dt = inp                       # (B,nh,hd), (B,n), (B,n), (B,nh)
+    decay = jnp.exp(dt * a_neg[None, :])           # (B,nh)
+    xb = (dt[..., None, None] * bmat[:, None, :, None].astype(jnp.float32)
+          * xh[:, :, None, :].astype(jnp.float32))                    # (B,nh,n,hd)
+    h_new = decay[..., None, None] * h + xb
+    y = jnp.einsum("bn,bhnd->bhd", cmat.astype(jnp.float32), h_new)
+    y = y + d_skip[None, :, None] * xh.astype(jnp.float32)
+    return h_new, y
+
+
+def mamba2_seq(params: dict, x: jnp.ndarray, *, head_dim: int = 64, state: dict | None = None):
+    b, s, d = x.shape
+    if state is None:
+        d_state = params["w_b"].shape[1]
+        state = mamba2_state(b, d, d_state, params["w_in"].shape[1] // (2 * d), head_dim)
+    xh, z, bmat, cmat, dt = _mamba2_proj(params, x, head_dim)
+    a_neg = -jnp.exp(params["a_log"].astype(jnp.float32))
+    d_skip = params["d_skip"].astype(jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, bmat, cmat, dt))
+    carry, ys = jax.lax.scan(
+        lambda c, t: _mamba2_cell(a_neg, d_skip, c, t),
+        state["h"].astype(jnp.float32), inputs,
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, -1).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return y @ params["w_out"], {"h": carry}
+
+
+def mamba2_step(params: dict, x: jnp.ndarray, state: dict, *, head_dim: int = 64):
+    xh, z, bmat, cmat, dt = _mamba2_proj(params, x, head_dim)
+    a_neg = -jnp.exp(params["a_log"].astype(jnp.float32))
+    d_skip = params["d_skip"].astype(jnp.float32)
+    carry, y = _mamba2_cell(
+        a_neg, d_skip, state["h"].astype(jnp.float32),
+        (xh[:, 0], bmat[:, 0], cmat[:, 0], dt[:, 0]),
+    )
+    b = x.shape[0]
+    y = y.reshape(b, 1, -1).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return y @ params["w_out"], {"h": carry}

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    global_norm,
+    sgd,
+)
+
+__all__ = ["sgd", "adamw", "OptState", "global_norm"]

@@ -1,0 +1,80 @@
+"""Minimal optimizer library (the paper's algorithms use plain SGD; AdamW is
+provided for the non-private training examples). Pure-functional, pytree in /
+pytree out, node-stacking agnostic (updates are elementwise)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["OptState", "sgd", "adamw", "global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree | None = None
+    nu: PyTree | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+
+
+def sgd(lr: float, momentum: float = 0.0) -> _Optimizer:
+    def init(params: PyTree) -> OptState:
+        mu = jax.tree_util.tree_map(jnp.zeros_like, params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads, state, params):
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state.mu, grads)
+            upd = mu
+        else:
+            mu, upd = None, grads
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: p - lr * u.astype(p.dtype), params, upd)
+        return new_params, OptState(step=state.step + 1, mu=mu)
+
+    return _Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> _Optimizer:
+    def init(params: PyTree) -> OptState:
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=z,
+                        nu=jax.tree_util.tree_map(jnp.copy, z))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, m, v):
+            step_ = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return p - (lr * step_).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, OptState(step=step, mu=mu, nu=nu)
+
+    return _Optimizer(init, update)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

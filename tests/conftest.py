@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device — the 512-device forcing is
+# exclusively dryrun.py's (see the brief). Keep compilation light.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

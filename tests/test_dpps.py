@@ -1,0 +1,148 @@
+"""DPPS protocol (Algorithm 1): degradation to Perturbed Push-Sum,
+sensitivity modes, synchronization, kernel path, epsilon semantics."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dpps import DPPSConfig, dpps_consensus, dpps_init, dpps_step
+from repro.core.pushsum import gossip_dense, init_push_sum
+from repro.core.topology import DOutGraph, calibrate_constants
+from repro.core.tree_utils import tree_node_mean
+
+N = 6
+TOPO = DOutGraph(n_nodes=N, d=2)
+CP, LAM = calibrate_constants(TOPO)
+
+
+def _s0(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(key, (N, 11)),
+            jax.random.normal(jax.random.fold_in(key, 1), (N, 2, 3))]
+
+
+def test_noiseless_equals_pushsum():
+    """gamma_n = 0 / noise off => exactly the Perturbed Push-Sum protocol."""
+    cfg = DPPSConfig(noise=False, gamma_n=0.0, c_prime=CP, lam=LAM)
+    s0 = _s0()
+    eps = [0.1 * jnp.ones_like(x) for x in s0]
+    ds = dpps_init(s0, cfg)
+    ds, _ = dpps_step(ds, eps, jax.random.PRNGKey(0), cfg,
+                      w=TOPO.weight_matrix_jnp(0))
+    ref = gossip_dense(
+        init_push_sum([x + e for x, e in zip(s0, eps)]),
+        TOPO.weight_matrix_jnp(0))
+    for a, b in zip(ds.push.s, ref.s):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_noise_mean_preserving_in_expectation():
+    """Zero-mean Laplace noise: consensus mean stays near the clean mean."""
+    cfg = DPPSConfig(b=50.0, gamma_n=0.01, c_prime=CP, lam=LAM)
+    s0 = _s0()
+    ds = dpps_init(s0, cfg)
+    zeros = [jnp.zeros_like(x) for x in s0]
+    for t in range(30):
+        ds, _ = dpps_step(ds, zeros, jax.random.PRNGKey(t), cfg,
+                          w=TOPO.weight_matrix_jnp(t))
+    mean0 = np.asarray(tree_node_mean(s0)[0])
+    meanT = np.asarray(tree_node_mean(ds.push.s)[0])
+    assert np.abs(meanT - mean0).max() < 0.5
+
+
+def test_epsilon_per_round():
+    cfg = DPPSConfig(b=2.0, gamma_n=0.5)
+    assert cfg.epsilon_per_round == pytest.approx(4.0)
+    assert DPPSConfig(noise=False, gamma_n=0.0).epsilon_per_round == float("inf")
+
+
+def test_sensitivity_modes():
+    s0 = _s0()
+    eps = [0.05 * jnp.ones_like(x) for x in s0]
+    for mode, extra in (("estimated", {}), ("real", {}),
+                        ("fixed", {"fixed_sensitivity": 7.5})):
+        cfg = DPPSConfig(b=5.0, gamma_n=0.01, c_prime=CP, lam=LAM,
+                         sensitivity_mode=mode, **extra)
+        ds = dpps_init(s0, cfg)
+        ds, diag = dpps_step(ds, eps, jax.random.PRNGKey(0), cfg,
+                             w=TOPO.weight_matrix_jnp(0))
+        assert np.isfinite(float(diag["sensitivity_used"]))
+        if mode == "fixed":
+            assert float(diag["sensitivity_used"]) == pytest.approx(7.5)
+        if mode == "real":
+            assert (float(diag["sensitivity_used"])
+                    <= float(diag["sensitivity_estimate"]) + 1e-4)
+
+
+def test_sync_resets_consensus():
+    cfg = DPPSConfig(b=5.0, gamma_n=0.05, c_prime=CP, lam=LAM, sync_interval=3)
+    s0 = _s0()
+    ds = dpps_init(s0, cfg)
+    zeros = [jnp.zeros_like(x) for x in s0]
+    for t in range(3):  # round t=2 triggers sync ((t+1) % 3 == 0)
+        ds, diag = dpps_step(ds, zeros, jax.random.PRNGKey(t), cfg,
+                             w=TOPO.weight_matrix_jnp(t))
+    # after sync every node identical
+    for leaf in ds.push.s:
+        spread = np.asarray(leaf).reshape(N, -1)
+        assert np.abs(spread - spread[0]).max() < 1e-5
+    np.testing.assert_allclose(np.asarray(ds.push.a), np.ones(N), atol=1e-6)
+
+
+def test_kernel_path_matches_structure():
+    for uk in (False, True):
+        cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                         use_kernels=uk)
+        s0 = _s0()
+        ds = dpps_init(s0, cfg)
+        eps = [0.01 * jnp.ones_like(x) for x in s0]
+        step = jax.jit(functools.partial(dpps_step, cfg=cfg))
+        ds, diag = step(ds, eps, jax.random.PRNGKey(0),
+                        w=TOPO.weight_matrix_jnp(0))
+        assert np.isfinite(float(diag["sensitivity_estimate"]))
+        assert all(np.isfinite(np.asarray(x)).all() for x in ds.push.s)
+
+
+def test_kernel_and_jnp_eps_norms_agree():
+    """The recursion inputs (eps L1 norms) must be identical across paths."""
+    s0 = _s0()
+    eps = [0.3 * jax.random.normal(jax.random.PRNGKey(9), x.shape) for x in s0]
+    outs = {}
+    for uk in (False, True):
+        cfg = DPPSConfig(b=5.0, gamma_n=0.0, noise=False, c_prime=CP, lam=LAM,
+                         use_kernels=uk)
+        ds = dpps_init(s0, cfg)
+        ds, diag = dpps_step(ds, eps, jax.random.PRNGKey(0), cfg,
+                             w=TOPO.weight_matrix_jnp(0))
+        outs[uk] = float(diag["sensitivity_estimate"])
+    assert outs[False] == pytest.approx(outs[True], rel=1e-5)
+
+
+def test_circulant_schedule_matches_dense_noiseless():
+    offs, wts = TOPO.mixing_weights(0)
+    s0 = _s0()
+    eps = [0.1 * jnp.ones_like(x) for x in s0]
+    cfg_d = DPPSConfig(noise=False, gamma_n=0.0, c_prime=CP, lam=LAM)
+    cfg_c = dataclasses.replace(cfg_d, schedule="circulant")
+    a, _ = dpps_step(dpps_init(s0, cfg_d), eps, jax.random.PRNGKey(0), cfg_d,
+                     w=TOPO.weight_matrix_jnp(0))
+    b, _ = dpps_step(dpps_init(s0, cfg_c), eps, jax.random.PRNGKey(0), cfg_c,
+                     offsets=offs, mix_weights=jnp.asarray(wts, jnp.float32))
+    for x, y in zip(a.push.s, b.push.s):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_consensus_output():
+    cfg = DPPSConfig(noise=False, gamma_n=0.0, c_prime=CP, lam=LAM)
+    s0 = _s0()
+    ds = dpps_init(s0, cfg)
+    zeros = [jnp.zeros_like(x) for x in s0]
+    for t in range(100):
+        ds, _ = dpps_step(ds, zeros, jax.random.PRNGKey(t), cfg,
+                          w=TOPO.weight_matrix_jnp(t))
+    out = dpps_consensus(ds)
+    want = tree_node_mean(s0)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want[0]), atol=1e-4)

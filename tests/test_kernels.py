@@ -1,0 +1,184 @@
+"""Pallas kernel validation (interpret mode): assert_allclose against the
+pure-jnp oracles in kernels/ref.py across shape and dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.privacy import l1_clip_per_node
+from repro.core.tree_utils import tree_l1_norm_per_node
+from repro.kernels import ops, ref
+from repro.kernels.dpps_perturb import dpps_perturb as dpps_perturb_kernel
+from repro.kernels.l1_clip import clip_scale, l1_norm
+from repro.kernels.laplace_noise import LANE, TILE_ROWS, laplace_from_bits
+from repro.kernels.pushsum_mix import TILE_D, pushsum_mix as mix_kernel
+
+TILE = TILE_ROWS * LANE
+
+
+def _bits(key, n):
+    return jax.random.bits(key, (n,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# laplace_noise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [TILE_ROWS, 2 * TILE_ROWS, 4 * TILE_ROWS])
+@pytest.mark.parametrize("scale", [0.25, 1.0, 7.5])
+def test_laplace_from_bits_matches_ref(rows, scale):
+    bits = _bits(jax.random.PRNGKey(0), rows * LANE).reshape(rows, LANE)
+    out = laplace_from_bits(bits, scale, interpret=True)
+    want = ref.laplace_from_bits(bits, scale)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_laplace_statistics():
+    bits = _bits(jax.random.PRNGKey(1), 64 * TILE).reshape(-1, LANE)
+    out = laplace_from_bits(bits, 2.0, interpret=True)
+    assert float(jnp.mean(jnp.abs(out))) == pytest.approx(2.0, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# dpps_perturb (fused)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100), tiles=st.integers(1, 3),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+@settings(max_examples=15, deadline=None)
+def test_dpps_perturb_matches_ref(seed, tiles, dtype):
+    key = jax.random.PRNGKey(seed)
+    r = tiles * TILE_ROWS
+    s = jax.random.normal(key, (r, LANE)).astype(dtype)
+    eps = (0.1 * jax.random.normal(jax.random.fold_in(key, 1),
+                                   (r, LANE))).astype(dtype)
+    bits = _bits(jax.random.fold_in(key, 2), r * LANE).reshape(r, LANE)
+    out_k = dpps_perturb_kernel(s, eps, bits, 1.5, 0.25, interpret=True)
+    out_r = ref.dpps_perturb(s, eps, bits, 1.5, 0.25)
+    tol = 1e-6 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(out_k[0], np.float32),
+                               np.asarray(out_r[0], np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(float(out_k[1]), float(out_r[1]), rtol=1e-4)
+    np.testing.assert_allclose(float(out_k[2]), float(out_r[2]), rtol=1e-4)
+
+
+@given(shape=st.sampled_from([(33,), (5, 7), (1000,), (2, 3, 17)]))
+@settings(max_examples=10, deadline=None)
+def test_dpps_perturb_tree_arbitrary_shapes(shape):
+    """Padding path: arbitrary leaf shapes, node-stacked, vmapped."""
+    key = jax.random.PRNGKey(0)
+    n = 3
+    tree = [jax.random.normal(key, (n,) + shape)]
+    eps = [0.1 * jax.random.normal(jax.random.fold_in(key, 1), (n,) + shape)]
+    sn, e1, n1 = ops.dpps_perturb_tree(tree, eps, key, 2.0, 0.5, interpret=True)
+    assert sn[0].shape == tree[0].shape
+    np.testing.assert_allclose(np.asarray(e1),
+                               np.asarray(tree_l1_norm_per_node(eps)), rtol=1e-4)
+    # residual / gamma_n has L1 == reported noise norm (padding contributed 0)
+    resid = (np.asarray(sn[0]) - np.asarray(tree[0]) - np.asarray(eps[0])) / 0.5
+    np.testing.assert_allclose(np.abs(resid).reshape(n, -1).sum(axis=1),
+                               np.asarray(n1), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# l1_clip
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 50), tiles=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_l1_norm_matches_ref(seed, tiles):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (tiles * TILE_ROWS, LANE))
+    np.testing.assert_allclose(float(l1_norm(x, interpret=True)),
+                               float(ref.l1_norm(x)), rtol=1e-5)
+
+
+def test_clip_scale_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(0), (TILE_ROWS, LANE))
+    out = clip_scale(x, 3.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.clip_scale(x, 3.0)),
+                               rtol=1e-6)
+
+
+def test_l1_clip_tree_matches_core():
+    key = jax.random.PRNGKey(0)
+    tree = [jax.random.normal(key, (4, 333)),
+            jax.random.normal(jax.random.fold_in(key, 1), (4, 5, 7))]
+    ck, nk = ops.l1_clip_tree(tree, 5.0, interpret=True)
+    cr, nr = l1_clip_per_node(tree, 5.0)
+    np.testing.assert_allclose(np.asarray(nk), np.asarray(nr), rtol=1e-5)
+    for a, b in zip(ck, cr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pushsum_mix
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 50), n=st.sampled_from([4, 8, 16]),
+       d=st.sampled_from([TILE_D, 2 * TILE_D]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+@settings(max_examples=15, deadline=None)
+def test_pushsum_mix_matches_ref(seed, n, d, dtype):
+    key = jax.random.PRNGKey(seed)
+    w = jax.nn.softmax(jax.random.normal(key, (n, n)), axis=1)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, d)).astype(dtype)
+    out = mix_kernel(w, x, interpret=True)
+    want = ref.pushsum_mix(w, x)
+    tol = 1e-5 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_pushsum_mix_ops_padding():
+    """ops wrapper pads ragged trailing dims and preserves shape."""
+    key = jax.random.PRNGKey(0)
+    w = jax.nn.softmax(jax.random.normal(key, (4, 4)), axis=1)
+    x = jax.random.normal(key, (4, 37, 3))
+    out = ops.pushsum_mix(w, x, interpret=True)
+    want = jnp.einsum("ij,j...->i...", w, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@given(cfg=st.sampled_from([
+    (4, 2, 256, 64, None), (4, 4, 128, 32, None),
+    (8, 2, 256, 64, 100), (2, 1, 256, 128, 128), (4, 2, 128, 64, 17),
+]), seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_matches_ref(cfg, seed):
+    from repro.kernels.flash_attention import flash_attention
+
+    h, kh, s, d, win = cfg
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (h, s, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (kh, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (kh, s, d))
+    out = flash_attention(q, k, v, group=h // kh, window=win, interpret=True)
+    want = ref.flash_attention(q, k, v, group=h // kh, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 128, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 128, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 128, 64)).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, group=1, interpret=True)
+    want = ref.flash_attention(q, k, v, group=1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=0.05, rtol=0.05)
+
+
+def test_laplace_noise_tree_kernel_statistics():
+    key = jax.random.PRNGKey(3)
+    tree = {"a": jnp.zeros((2, 40_000))}
+    n = ops.laplace_noise_tree(key, tree, 1.5, interpret=True)
+    assert float(jnp.mean(jnp.abs(n["a"]))) == pytest.approx(1.5, rel=0.1)

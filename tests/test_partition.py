@@ -1,0 +1,107 @@
+"""Partial-communication partition: split/merge roundtrip, layer splitting,
+dimension accounting (the paper's d_s)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.partition import SHARE_ALL, SHARE_NONE, Partition
+
+
+def _params(key, n=4):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": jax.random.normal(ks[0], (n, 16, 8)),
+        "blocks": {"attn": jax.random.normal(ks[1], (n, 6, 8, 8)),
+                   "mlp": jax.random.normal(ks[2], (n, 6, 8, 12))},
+        "head": jax.random.normal(ks[3], (n, 8, 16)),
+    }
+
+
+@given(seed=st.integers(0, 50), k=st.integers(0, 6))
+@settings(max_examples=20, deadline=None)
+def test_split_merge_roundtrip(seed, k):
+    params = _params(jax.random.PRNGKey(seed))
+    part = Partition.from_rules(params, [
+        ("embed", "shared"),
+        ("blocks/attn", ("split_layers", k)),
+        ("blocks/mlp", "local"),
+    ], default="local")
+    shared, local = part.split(params)
+    rebuilt = part.merge(shared, local)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_d_shared_accounting():
+    params = _params(jax.random.PRNGKey(0))
+    part = Partition.from_rules(params, [
+        ("embed", "shared"),
+        ("blocks/attn", ("split_layers", 3)),
+    ], default="local")
+    total = sum(x.size // x.shape[0] for x in jax.tree_util.tree_leaves(params))
+    assert part.d_shared() + part.d_local() == total
+    assert part.d_shared() == 16 * 8 + 3 * 8 * 8
+
+
+def test_share_all_and_none():
+    params = _params(jax.random.PRNGKey(1))
+    pa = Partition.from_rules(params, SHARE_ALL)
+    assert pa.d_local() == 0
+    pn = Partition.from_rules(params, SHARE_NONE)
+    assert pn.d_shared() == 0
+    s, l = pn.split(params)
+    assert s == [] and len(l) == 4
+
+
+def test_first_rule_wins():
+    params = _params(jax.random.PRNGKey(2))
+    part = Partition.from_rules(params, [
+        ("blocks/.*", "shared"),
+        ("blocks/mlp", "local"),   # never reached
+    ], default="local")
+    assert part.d_shared() == 6 * 8 * 8 + 6 * 8 * 12
+
+
+def test_split_layers_bounds_checked():
+    params = _params(jax.random.PRNGKey(3))
+    with pytest.raises(ValueError):
+        Partition.from_rules(params, [("blocks/attn", ("split_layers", 7))])
+
+
+def test_split_static_pspecs():
+    params = _params(jax.random.PRNGKey(4))
+    part = Partition.from_rules(params, [
+        ("embed", "shared"),
+        ("blocks/attn", ("split_layers", 2)),
+    ], default="local")
+    specs = {
+        "embed": P(None, None, "model"),
+        "blocks": {"attn": P(None, None, "model", None),
+                   "mlp": P(None, None, None, "model")},
+        "head": P(None, "model", None),
+    }
+    shared, local = part.split_static(specs)
+    assert len(shared) == 2 and len(local) == 3
+    # leaves are ordered by sorted dict keys: blocks/attn first, then embed
+    assert shared[0] == P(None, None, "model", None)   # split leaf (shared half)
+    assert local[0] == P(None, None, "model", None)    # split leaf (local half)
+    assert shared[1] == P(None, None, "model")         # embed
+
+
+def test_jit_safe():
+    params = _params(jax.random.PRNGKey(5))
+    part = Partition.from_rules(params, [("blocks/attn", ("split_layers", 3))],
+                                default="shared")
+
+    @jax.jit
+    def roundtrip(p):
+        s, l = part.split(p)
+        return part.merge(s, l)
+
+    out = roundtrip(params)
+    np.testing.assert_allclose(np.asarray(out["head"]),
+                               np.asarray(params["head"]))

@@ -1,0 +1,140 @@
+"""PartPSP (Algorithm 2) + baselines: optimization works, privacy knobs do
+what the paper claims at toy scale (fast versions of the claim benchmarks)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import Partition
+from repro.core.partpsp import (
+    consensus_params,
+    make_baseline_config,
+    partpsp_init,
+    partpsp_step,
+    privacy_summary,
+)
+from repro.core.topology import DOutGraph, calibrate_constants
+
+N = 6
+TOPO = DOutGraph(n_nodes=N, d=3)
+CP, LAM = calibrate_constants(TOPO)
+W = TOPO.weight_matrix_jnp(0)
+
+
+def _setup(algorithm="partpsp", **kw):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"w1": 0.3 * jax.random.normal(k1, (N, 10, 6)),
+              "w2": 0.3 * jax.random.normal(k2, (N, 6, 1))}
+    rules = [("w1", "shared"), ("w2", "local")]
+    if algorithm in ("sgp", "sgpdp"):
+        rules = [(".*", "shared")]
+    part = Partition.from_rules(params, rules)
+    cfg = make_baseline_config(algorithm, gamma_l=0.1, gamma_s=0.1, clip=20.0,
+                               c_prime=CP, lam=LAM, sync_interval=5, **kw)
+    state = partpsp_init(params, part, cfg)
+    wtrue = jax.random.normal(k3, (10, 1))
+
+    def loss_fn(p, batch, key):
+        x, y = batch
+        return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+    def batch_at(t):
+        kx = jax.random.fold_in(jax.random.PRNGKey(42), t)
+        x = jax.random.normal(kx, (N, 16, 10))
+        return (x, x @ wtrue)
+
+    step = jax.jit(functools.partial(partpsp_step, cfg=cfg, partition=part,
+                                     loss_fn=loss_fn, w=W))
+    return state, step, batch_at, part, cfg
+
+
+def _run(state, step, batch_at, steps=120):
+    losses = []
+    for t in range(steps):
+        state, m = step(state, batch_at(t), jax.random.PRNGKey(t))
+        losses.append(float(m["loss_mean"]))
+    return state, losses, m
+
+
+def test_sgp_converges():
+    state, step, batch_at, part, cfg = _setup("sgp")
+    _, losses, _ = _run(state, step, batch_at)
+    assert losses[-1] < losses[0] * 0.5
+
+
+def test_partpsp_converges_with_noise():
+    state, step, batch_at, part, cfg = _setup("partpsp", b=3.0, gamma_n=0.001)
+    _, losses, m = _run(state, step, batch_at)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+    assert float(m["sensitivity_used"]) > 0
+
+
+def test_gradient_clipping_respected():
+    state, step, batch_at, part, cfg = _setup("partpsp", b=3.0, gamma_n=0.001)
+    _, _, m = _run(state, step, batch_at, steps=5)
+    assert float(m["grad_l1_max"]) >= 0
+
+
+def test_pedfl_fixed_sensitivity():
+    state, step, batch_at, part, cfg = _setup("pedfl", b=3.0, gamma_n=0.001)
+    assert cfg.dpps.sensitivity_mode == "fixed"
+    assert cfg.dpps.fixed_sensitivity == pytest.approx(2 * 20.0)
+    _, losses, m = _run(state, step, batch_at, steps=10)
+    assert np.isfinite(losses).all()
+    assert float(m["sensitivity_used"]) == pytest.approx(cfg.dpps.fixed_sensitivity)
+
+
+def test_push_sum_weights_invariant():
+    state, step, batch_at, part, cfg = _setup("partpsp", b=3.0, gamma_n=0.001)
+    state, _, m = _run(state, step, batch_at, steps=20)
+    np.testing.assert_allclose(float(m["a_min"]), 1.0, atol=1e-4)
+    np.testing.assert_allclose(float(m["a_max"]), 1.0, atol=1e-4)
+
+
+def test_consensus_params_broadcast():
+    state, step, batch_at, part, cfg = _setup("partpsp", b=3.0, gamma_n=0.001)
+    state, _, _ = _run(state, step, batch_at, steps=3)
+    cp = consensus_params(state, part)
+    w1 = np.asarray(cp["w1"])
+    assert np.abs(w1 - w1[0]).max() < 1e-5    # shared part identical
+    w2 = np.asarray(cp["w2"])
+    assert np.abs(w2 - w2[0]).max() > 1e-6    # local part personalized
+
+
+def test_partial_reduces_sensitivity_vs_full():
+    """Paper SIII.C / Fig. 3(a): smaller d_s => lower running sensitivity."""
+    outs = {}
+    for alg in ("partpsp", "sgpdp"):
+        state, step, batch_at, part, cfg = _setup(alg, b=3.0, gamma_n=0.002)
+        sens = []
+        for t in range(40):
+            state, m = step(state, batch_at(t), jax.random.PRNGKey(t))
+            sens.append(float(m["sensitivity_used"]))
+        outs[alg] = np.mean(sens[5:])
+    assert outs["partpsp"] < outs["sgpdp"]
+
+
+def test_privacy_summary():
+    cfg = make_baseline_config("partpsp", b=2.0, gamma_n=0.5)
+    s = privacy_summary(cfg, rounds=8)
+    assert s["epsilon_per_round"] == pytest.approx(4.0)
+    assert s["epsilon_total"] == pytest.approx(32.0)
+    s2 = privacy_summary(make_baseline_config("sgp"), rounds=8)
+    assert s2["rounds"] == 0
+
+
+def test_two_pass_vs_single_pass():
+    state, step, batch_at, part, cfg = _setup("partpsp", b=3.0, gamma_n=0.0)
+    import dataclasses
+
+    cfg1 = dataclasses.replace(cfg, two_pass=False)
+    step1 = jax.jit(functools.partial(
+        partpsp_step, cfg=cfg1, partition=part,
+        loss_fn=lambda p, b, k: jnp.mean((jnp.tanh(b[0] @ p["w1"]) @ p["w2"] - b[1]) ** 2),
+        w=W))
+    s1, m1 = step1(state, batch_at(0), jax.random.PRNGKey(0))
+    assert np.isfinite(float(m1["loss_mean"]))

@@ -1,0 +1,86 @@
+"""DP primitives: Laplace mechanism statistics, Eq. (24) clipping,
+epsilon accounting (Theorem 1 composition)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.privacy import (
+    PrivacyAccountant,
+    l1_clip_per_node,
+    l2_clip_per_node,
+    laplace_noise_like,
+    laplace_noise_tree,
+)
+from repro.core.tree_utils import tree_l1_norm_per_node
+
+
+def test_laplace_scale_statistics():
+    key = jax.random.PRNGKey(0)
+    x = jnp.zeros((200_000,))
+    for scale in (0.5, 2.0):
+        n = laplace_noise_like(key, x, scale)
+        # E|Lap(0, b)| = b ; Var = 2 b^2
+        assert float(jnp.mean(jnp.abs(n))) == pytest.approx(scale, rel=0.05)
+        assert float(jnp.var(n)) == pytest.approx(2 * scale ** 2, rel=0.1)
+
+
+def test_laplace_per_node_scales():
+    key = jax.random.PRNGKey(1)
+    x = jnp.zeros((3, 50_000))
+    scales = jnp.asarray([0.1, 1.0, 3.0])
+    n = laplace_noise_like(key, x, scales)
+    means = np.asarray(jnp.mean(jnp.abs(n), axis=1))
+    np.testing.assert_allclose(means, np.asarray(scales), rtol=0.1)
+
+
+def test_laplace_tree_independent_leaves():
+    key = jax.random.PRNGKey(2)
+    tree = {"a": jnp.zeros((2, 100)), "b": jnp.zeros((2, 100))}
+    n = laplace_noise_tree(key, tree, 1.0)
+    assert not np.allclose(np.asarray(n["a"]), np.asarray(n["b"]))
+
+
+@given(clip=st.floats(0.5, 50.0), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_l1_clip_bounds_norm(clip, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = [jax.random.normal(key, (4, 37)) * 10]
+    clipped, norms = l1_clip_per_node(tree, clip)
+    out_norms = np.asarray(tree_l1_norm_per_node(clipped))
+    assert (out_norms <= clip * (1 + 1e-5)).all()
+    # direction preserved
+    ratio = np.asarray(clipped[0]) / np.asarray(tree[0])
+    assert np.nanstd(ratio, axis=1).max() < 1e-5
+
+
+def test_l1_clip_identity_below_threshold():
+    tree = [jnp.ones((2, 4)) * 0.1]
+    clipped, norms = l1_clip_per_node(tree, clip=100.0)
+    np.testing.assert_allclose(np.asarray(clipped[0]), np.asarray(tree[0]))
+    np.testing.assert_allclose(np.asarray(norms), [0.4, 0.4], rtol=1e-6)
+
+
+def test_l2_clip_bounds_norm():
+    key = jax.random.PRNGKey(3)
+    tree = [jax.random.normal(key, (4, 100)) * 5]
+    clipped, _ = l2_clip_per_node(tree, 1.0)
+    out = np.sqrt((np.asarray(clipped[0]) ** 2).sum(axis=1))
+    assert (out <= 1.0 + 1e-5).all()
+
+
+def test_accountant_linear_composition():
+    acct = PrivacyAccountant(b=3.0, gamma_n=0.5)
+    assert acct.epsilon_per_round == pytest.approx(6.0)
+    for _ in range(10):
+        acct = acct.step()
+    assert acct.epsilon_total == pytest.approx(60.0)
+    acct = acct.step(protected=False)
+    assert acct.unprotected_rounds == 1
+    assert acct.epsilon_total == pytest.approx(60.0)
+
+
+def test_accountant_no_noise_infinite_epsilon():
+    acct = PrivacyAccountant(b=1.0, gamma_n=0.0)
+    assert acct.epsilon_per_round == float("inf")

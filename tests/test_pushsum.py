@@ -1,0 +1,109 @@
+"""Push-sum runtime invariants: consensus, a == 1 under doubly-stochastic W,
+exact mean preservation, dense == circulant equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pushsum import (
+    consensus_error,
+    correct,
+    gossip,
+    gossip_circulant,
+    gossip_dense,
+    init_push_sum,
+)
+from repro.core.topology import DOutGraph, ExpGraph
+from repro.core.tree_utils import tree_node_mean
+
+
+def _tree(key, n):
+    k1, k2 = jax.random.split(key)
+    return [jax.random.normal(k1, (n, 7)), jax.random.normal(k2, (n, 3, 2))]
+
+
+def test_consensus_to_mean():
+    n = 8
+    topo = DOutGraph(n_nodes=n, d=2)
+    s0 = _tree(jax.random.PRNGKey(0), n)
+    target = tree_node_mean(s0)
+    st_ = init_push_sum(s0)
+    for t in range(200):
+        st_ = gossip_dense(st_, topo.weight_matrix_jnp(t))
+    for got, want in zip(st_.s, target):
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.broadcast_to(want, got.shape), atol=1e-4)
+
+
+def test_push_sum_weights_stay_one():
+    """Eq. (16): doubly stochastic W => a^(t) == 1 forever."""
+    n = 10
+    topo = ExpGraph(n_nodes=n)
+    st_ = init_push_sum(_tree(jax.random.PRNGKey(1), n))
+    for t in range(20):
+        st_ = gossip_dense(st_, topo.weight_matrix_jnp(t))
+        np.testing.assert_allclose(np.asarray(st_.a), np.ones(n), atol=1e-6)
+
+
+@given(seed=st.integers(0, 100), n=st.sampled_from([4, 8, 16]),
+       d=st.sampled_from([2, 3]))
+@settings(max_examples=15, deadline=None)
+def test_mean_preserved_exactly(seed, n, d):
+    """Doubly stochastic mixing preserves the node-mean (the consensus
+    target the paper's s-bar is defined over)."""
+    topo = DOutGraph(n_nodes=n, d=d)
+    s0 = _tree(jax.random.PRNGKey(seed), n)
+    before = tree_node_mean(s0)
+    st_ = gossip_dense(init_push_sum(s0), topo.weight_matrix_jnp(0))
+    after = tree_node_mean(st_.s)
+    for a, b in zip(before, after):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@given(seed=st.integers(0, 50), n=st.sampled_from([4, 8]), d=st.sampled_from([1, 2, 4]))
+@settings(max_examples=15, deadline=None)
+def test_circulant_equals_dense(seed, n, d):
+    if d > n:
+        return
+    topo = DOutGraph(n_nodes=n, d=d)
+    s0 = _tree(jax.random.PRNGKey(seed), n)
+    offs, wts = topo.mixing_weights(0)
+    a = gossip_dense(init_push_sum(s0), topo.weight_matrix_jnp(0))
+    b = gossip_circulant(init_push_sum(s0), offs, jnp.asarray(wts, jnp.float32))
+    for x, y in zip(a.s, b.s):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.a), np.asarray(b.a), atol=1e-6)
+
+
+def test_gossip_dispatch():
+    topo = DOutGraph(n_nodes=4, d=2)
+    s0 = _tree(jax.random.PRNGKey(2), 4)
+    st_ = init_push_sum(s0)
+    with pytest.raises(ValueError):
+        gossip(st_)
+    out = gossip(st_, w=topo.weight_matrix_jnp(0))
+    offs, wts = topo.mixing_weights(0)
+    out2 = gossip(st_, offsets=offs)
+    np.testing.assert_allclose(np.asarray(out.s[0]), np.asarray(out2.s[0]),
+                               atol=1e-5)
+
+
+def test_consensus_error_decreases():
+    n = 8
+    topo = DOutGraph(n_nodes=n, d=4)
+    st_ = init_push_sum(_tree(jax.random.PRNGKey(3), n))
+    errs = [float(consensus_error(st_.s))]
+    for t in range(10):
+        st_ = gossip_dense(st_, topo.weight_matrix_jnp(t))
+        errs.append(float(consensus_error(st_.s)))
+    assert errs[-1] < errs[0] * 0.1
+
+
+def test_correct_divides_by_a():
+    n = 4
+    s0 = _tree(jax.random.PRNGKey(4), n)
+    a = jnp.asarray([1.0, 2.0, 4.0, 0.5])
+    y = correct(s0, a)
+    np.testing.assert_allclose(np.asarray(y[0][1]), np.asarray(s0[0][1]) / 2.0,
+                               atol=1e-6)

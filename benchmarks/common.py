@@ -28,6 +28,7 @@ from repro.core.partpsp import (
 from repro.core.sensitivity import real_sensitivity
 from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
 from repro.data import SyntheticClassification, dirichlet_partition
+from repro.engine import ProtocolPlan, run_partpsp, run_segments
 
 N_NODES = 10
 SEED = 2024
@@ -35,11 +36,15 @@ D_IN, N_CLASSES = 784, 10
 HIDDEN = 10  # paper MLP: 784x10, 10x784, 784x10
 
 
-def make_topology(name: str):
+def make_topology_n(name: str, n_nodes: int):
     if name == "exp":
-        return ExpGraph(n_nodes=N_NODES)
+        return ExpGraph(n_nodes=n_nodes)
     d = int(name.split("-")[0])  # "2-out", "4-out", ...
-    return DOutGraph(n_nodes=N_NODES, d=d)
+    return DOutGraph(n_nodes=n_nodes, d=d)
+
+
+def make_topology(name: str):
+    return make_topology_n(name, N_NODES)
 
 
 def init_mlp(key) -> dict:
@@ -90,6 +95,60 @@ class RunResult:
                 f"ras={self.ras:.3f};viol={self.violations}")
 
 
+def build_setup(
+    *,
+    algorithm: str = "partpsp",
+    partition_name: str = "partpsp-1",
+    topology: str = "2-out",
+    b: float = 1.0,
+    gamma_n: float = 0.005,
+    gamma_l: float = 0.1,
+    gamma_s: float = 0.1,
+    clip: float = 100.0,
+    batch: int = 32,
+    sync_interval: int = 5,
+    sensitivity_mode: str = "estimated",
+    schedule: str = "dense",
+    chunk: int = 50,
+    n_nodes: int | None = None,     # None -> the module-level N_NODES
+    seed: int = SEED,
+    c_prime: float | None = None,
+    lam: float | None = None,
+):
+    """Topology + config + initial state + host batch stream (both drivers)."""
+    n_nodes = N_NODES if n_nodes is None else n_nodes
+    topo = make_topology_n(topology, n_nodes)
+    cal_c, cal_l = calibrate_constants(topo)
+    c_prime = cal_c if c_prime is None else c_prime
+    lam = cal_l if lam is None else lam
+    if algorithm in ("sgp", "sgpdp", "pedfl"):
+        partition_name = "full"
+    cfg = make_baseline_config(
+        algorithm, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip, b=b,
+        gamma_n=gamma_n, c_prime=c_prime, lam=lam, schedule=schedule,
+        sync_interval=sync_interval, sensitivity_mode=sensitivity_mode)
+
+    key = jax.random.PRNGKey(seed)
+    params0 = init_mlp(key)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape) + 0.0, params0)
+    part = Partition.from_rules(stacked, PARTITIONS[partition_name],
+                                default="local")
+    state = partpsp_init(stacked, part, cfg)
+
+    task = SyntheticClassification(d_in=D_IN, n_classes=N_CLASSES, seed=seed)
+    skew = dirichlet_partition(n_nodes, N_CLASSES, alpha=0.5, seed=seed)
+
+    def batch_at(t):
+        k = jax.random.fold_in(jax.random.PRNGKey(seed + 1), t)
+        return task.node_batches(k, n_nodes, batch, skew)
+
+    plan = ProtocolPlan.from_topology(
+        topo, schedule=schedule, use_kernels=False,
+        sync_interval=sync_interval, chunk=chunk)
+    return topo, cfg, part, state, plan, task, batch_at, key
+
+
 def run_experiment(
     *,
     algorithm: str = "partpsp",       # partpsp | sgp | sgpdp | pedfl
@@ -104,66 +163,71 @@ def run_experiment(
     batch: int = 32,
     sync_interval: int = 5,
     sensitivity_mode: str = "estimated",
+    schedule: str = "dense",
     track_real: bool = False,
+    driver: str = "engine",           # "engine" (scan segments) | "loop"
+    chunk: int = 50,
+    n_nodes: int | None = None,       # None -> the module-level N_NODES
     seed: int = SEED,
     name: str | None = None,
     c_prime: float | None = None,   # None -> empirical calibration;
     lam: float | None = None,       # the paper tunes these per setup (SV.B)
 ) -> RunResult:
-    topo = make_topology(topology)
-    cal_c, cal_l = calibrate_constants(topo)
-    c_prime = cal_c if c_prime is None else c_prime
-    lam = cal_l if lam is None else lam
-    if algorithm in ("sgp", "sgpdp", "pedfl"):
-        partition_name = "full"
-    cfg = make_baseline_config(
-        algorithm, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip, b=b,
-        gamma_n=gamma_n, c_prime=c_prime, lam=lam,
-        sync_interval=sync_interval, sensitivity_mode=sensitivity_mode)
-
-    key = jax.random.PRNGKey(seed)
-    params0 = init_mlp(key)
-    stacked = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (N_NODES,) + x.shape) + 0.0, params0)
-    part = Partition.from_rules(stacked, PARTITIONS[partition_name],
-                                default="local")
-    state = partpsp_init(stacked, part, cfg)
-
-    task = SyntheticClassification(d_in=D_IN, n_classes=N_CLASSES, seed=seed)
-    skew = dirichlet_partition(N_NODES, N_CLASSES, alpha=0.5, seed=seed)
-
-    def batch_at(t):
-        k = jax.random.fold_in(jax.random.PRNGKey(seed + 1), t)
-        return task.node_batches(k, N_NODES, batch, skew)
-
-    # EXP is time varying: jit per offset-set via static W arg rotation
-    ws = [topo.weight_matrix_jnp(t) for t in range(getattr(topo, "period", 1))]
-
-    step = jax.jit(functools.partial(
-        partpsp_step, cfg=cfg, partition=part, loss_fn=mlp_loss,
-        return_s_half=track_real))
+    n_nodes = N_NODES if n_nodes is None else n_nodes
+    topo, cfg, part, state, plan, task, batch_at, key = build_setup(
+        algorithm=algorithm, partition_name=partition_name, topology=topology,
+        b=b, gamma_n=gamma_n, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
+        batch=batch, sync_interval=sync_interval,
+        sensitivity_mode=sensitivity_mode, schedule=schedule, chunk=chunk,
+        n_nodes=n_nodes, seed=seed, c_prime=c_prime, lam=lam)
 
     reals, ests = [], []
     violations = 0
-    t0 = time.time()
     m = {}
-    for t in range(steps):
-        state, m = step(state, batch_at(t), jax.random.fold_in(key, t),
-                        w=ws[t % len(ws)])
-        ests.append(float(m["sensitivity_estimate"]))
-        if track_real:
-            real = float(real_sensitivity(m["s_half"]))
-            reals.append(real)
-            if real > float(m["sensitivity_estimate"]) + 1e-6:
-                violations += 1
-    wall = time.time() - t0
+    if driver == "engine":
+        cfg = plan.resolve_partpsp(cfg)
+        run_chunk = jax.jit(functools.partial(
+            run_partpsp, cfg=cfg, partition=part, loss_fn=mlp_loss, plan=plan,
+            track_real=track_real))
+        t0 = time.time()
+        for _, _, state, traj in run_segments(run_chunk, state, batch_at, key,
+                                              steps=steps, chunk=plan.chunk):
+            ests.extend(np.asarray(traj["sensitivity_estimate"]).tolist())
+            if track_real:
+                seg_reals = np.asarray(traj["sensitivity_real"])
+                seg_ests = np.asarray(traj["sensitivity_estimate"])
+                reals.extend(seg_reals.tolist())
+                violations += int(np.sum(seg_reals > seg_ests + 1e-6))
+            m = {"loss_mean": traj["loss_mean"][-1]}
+        wall = time.time() - t0
+    else:
+        # per-round reference loop (the seed driver; kept for engine-vs-loop
+        # comparisons — EXP is time varying: rotate the per-period W)
+        if schedule != "dense":
+            raise ValueError("the loop driver only supports the dense "
+                             "schedule; use driver='engine'")
+        ws = [topo.weight_matrix_jnp(t) for t in range(getattr(topo, "period", 1))]
+        step = jax.jit(functools.partial(
+            partpsp_step, cfg=cfg, partition=part, loss_fn=mlp_loss,
+            return_s_half=track_real))
+        t0 = time.time()
+        for t in range(steps):
+            state, m = step(state, batch_at(t), jax.random.fold_in(key, t),
+                            w=ws[t % len(ws)])
+            ests.append(float(m["sensitivity_estimate"]))
+            if track_real:
+                real = float(real_sensitivity(m["s_half"]))
+                reals.append(real)
+                if real > float(m["sensitivity_estimate"]) + 1e-6:
+                    violations += 1
+        wall = time.time() - t0
 
     # --- evaluation (paper SV.D): consensus shared params + local params ----
     cp = consensus_params(state, part)
     k_test = jax.random.PRNGKey(seed + 99)
     x_test, y_test = task.sample(k_test, 2000)
     accs = []
-    for i in range(N_NODES):
+    for i in range(n_nodes):
         p_i = jax.tree_util.tree_map(lambda x: x[i], cp)
         pred = jnp.argmax(mlp_logits(p_i, x_test), axis=1)
         accs.append(float(jnp.mean((pred == y_test).astype(jnp.float32))))

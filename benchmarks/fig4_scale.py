@@ -2,7 +2,13 @@
 
 Claim validated: for d << N, RAS at small N transfers to larger N (so the
 sensitivity constants can be calibrated on a small network — the paper's
-hyperparameter-cost argument, and what our production-mesh configs rely on)."""
+hyperparameter-cost argument, and what our production-mesh configs rely on).
+
+Runs through the scan engine (``driver="engine"`` in common.run_experiment):
+the N-sweep is exactly the workload the per-round loop made painful — each
+(N, d) cell is now a handful of compiled segment dispatches. ``track_real``
+stays supported because the engine computes the exact sensitivity inside the
+scan (per-round, no trajectory of s_half ever materializes on host)."""
 from __future__ import annotations
 
 import functools
@@ -16,18 +22,12 @@ from benchmarks.common import RunResult
 
 
 def run_at_scale(n_nodes: int, degree: int, steps: int = 80) -> float:
-    """RAS of a PartPSP run on an n-node d-Out network (monkeypatched N)."""
-    old = common.N_NODES
-    common.N_NODES = n_nodes
-    try:
-        r = common.run_experiment(
-            algorithm="partpsp", partition_name="partpsp-1",
-            topology=f"{degree}-out", b=5.0, gamma_n=1e-5, steps=steps,
-            sync_interval=4, track_real=True,
-            name=f"fig4/N={n_nodes}/d={degree}")
-        return r
-    finally:
-        common.N_NODES = old
+    """RAS of a PartPSP run on an n-node d-Out network."""
+    return common.run_experiment(
+        algorithm="partpsp", partition_name="partpsp-1",
+        topology=f"{degree}-out", b=5.0, gamma_n=1e-5, steps=steps,
+        sync_interval=4, track_real=True, driver="engine", n_nodes=n_nodes,
+        name=f"fig4/N={n_nodes}/d={degree}")
 
 
 def main(steps: int = 80) -> list[str]:

@@ -6,12 +6,25 @@ paper's 1 Gbps-link wall times; our TPU-fleet analogue is the collective
 term in EXPERIMENTS.md SRoofline).
 
 Claims validated: SGPDP (full-communication DP) is the slowest; PartPSP's
-partial communication cuts the communicated bytes by d_local/d_total."""
+partial communication cuts the communicated bytes by d_local/d_total.
+
+Beyond-paper claim (EXPERIMENTS.md SPerf): the scan-compiled engine
+(repro.engine) must beat the seed per-round Python loop by >= 2x per-round
+wall time at the N=16 reduced config — the engine amortizes one XLA
+dispatch over the whole segment while the loop pays dispatch + host key
+folding every round."""
 from __future__ import annotations
 
+import functools
+import time
+
+import jax
 import numpy as np
 
+import benchmarks.common as common
 from benchmarks.common import D_IN, HIDDEN, N_CLASSES, RunResult, run_experiment
+from repro.core.partpsp import partpsp_step
+from repro.engine import run_partpsp, stack_rounds
 
 # per-node parameter dimensions of the benchmark MLP
 D_TOTAL = D_IN * HIDDEN + HIDDEN * D_IN + D_IN * N_CLASSES
@@ -32,15 +45,146 @@ def run(steps: int = 150) -> list[RunResult]:
     return results
 
 
-def main(steps: int = 150) -> list[str]:
+def engine_vs_loop(steps: int = 200, n_nodes: int = 16,
+                   d_shared: int = 1960) -> tuple[str, float]:
+    """Per-round DPPS protocol wall time: scan engine vs the seed loop.
+
+    Table IV measures the *protocol's* per-round time cost (the gradient
+    compute is common to every algorithm), so this compares the noised DPPS
+    round (perturb + estimate + Laplace noise + gossip, Alg. 1) at N=16 on
+    a reduced shared dimension (paper MLP layer / 4). The seed driver is
+    reproduced faithfully: one jitted dispatch plus a per-round host metric
+    pull (as benchmarks/common.py's loop does); the engine runs the whole
+    segment as one scan dispatch and pulls the metric trajectory once. Both
+    are warmed and timed three times, minimum reported.
+    """
+    topo = common.make_topology_n("exp", n_nodes)
+    from repro.core.topology import calibrate_constants
+
+    from repro.core.dpps import DPPSConfig, dpps_init, dpps_step
+    from repro.engine import run_dpps
+
+    cp, lam = calibrate_constants(topo)
+    key = jax.random.PRNGKey(common.SEED)
+    s0 = [jax.random.normal(key, (n_nodes, d_shared))]
+    eps_seq = [0.01 * jax.random.normal(jax.random.fold_in(key, 1),
+                                        (steps, n_nodes, d_shared))]
+    cfg = DPPSConfig(b=3.0, gamma_n=1e-4, c_prime=cp, lam=lam,
+                     sync_interval=2)
+    plan = common.ProtocolPlan.from_topology(
+        topo, schedule="dense", use_kernels=False, sync_interval=2)
+    cfg_r = plan.resolve_dpps(cfg)
+    state0 = dpps_init(s0, cfg_r)
+
+    # -- seed driver: jitted dispatch + metric pull, every round -------------
+    step = jax.jit(functools.partial(dpps_step, cfg=cfg_r))
+    # Pre-materialize the per-period mixing operands (the seed indexed a
+    # precomputed host list, so the loop must not pay mix_at dispatches).
+    mixes = [plan.mix_at(t) for t in range(plan.period)]
+
+    def time_loop() -> float:
+        state, ests = state0, []
+        t0 = time.time()
+        for t in range(steps):
+            state, m = step(state, [eps_seq[0][t]],
+                            jax.random.fold_in(key, t),
+                            **mixes[t % plan.period])
+            ests.append(float(m["sensitivity_estimate"]))
+        return time.time() - t0
+
+    time_loop()  # warm every shape
+    t_loop = min(time_loop() for _ in range(3))
+
+    # -- scan engine: one dispatch + one trajectory pull per segment ---------
+    engine = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))
+    jax.block_until_ready(engine(state0, eps_seq, key)[1]["sensitivity_estimate"])
+
+    def time_engine() -> float:
+        t0 = time.time()
+        _, traj = engine(state0, eps_seq, key)
+        _ = np.asarray(traj["sensitivity_estimate"]).tolist()
+        return time.time() - t0
+
+    t_engine = min(time_engine() for _ in range(3))
+
+    speedup = t_loop / t_engine
+    row = (f"table4/engine_vs_loop,{t_engine / steps * 1e6:.0f},"
+           f"loop_us={t_loop / steps * 1e6:.0f};N={n_nodes};"
+           f"d_s={d_shared};speedup={speedup:.1f}x")
+    return row, speedup
+
+
+def engine_vs_loop_train(steps: int = 100, n_nodes: int = 16) -> str:
+    """Informational: end-to-end PartPSP training driver comparison.
+
+    At the paper MLP + batch 32 the two vmapped gradient passes dominate the
+    round, so the engine's dispatch amortization shows up as a smaller
+    (workload-dependent) factor — reported but not asserted.
+    """
+    topo, cfg, part, state0, plan, _, batch_at, key = common.build_setup(
+        algorithm="partpsp", partition_name="partpsp-1", topology="exp",
+        b=3.0, gamma_n=1e-4, sync_interval=2, n_nodes=n_nodes)
+    round_batches = [batch_at(t) for t in range(steps)]
+    ws = [topo.weight_matrix_jnp(t)
+          for t in range(getattr(topo, "period", 1))]
+    step = jax.jit(functools.partial(
+        partpsp_step, cfg=cfg, partition=part, loss_fn=common.mlp_loss))
+
+    def time_loop() -> float:
+        state, ests = state0, []
+        t0 = time.time()
+        for t in range(steps):
+            state, m = step(state, round_batches[t],
+                            jax.random.fold_in(key, t), w=ws[t % len(ws)])
+            ests.append(float(m["sensitivity_estimate"]))
+        return time.time() - t0
+
+    time_loop()
+    t_loop = min(time_loop() for _ in range(2))
+
+    cfg_e = plan.resolve_partpsp(cfg)
+    segments = [stack_rounds(lambda t: round_batches[t], s0,
+                             min(plan.chunk, steps - s0))
+                for s0 in range(0, steps, plan.chunk)]
+    run_chunk = jax.jit(functools.partial(
+        run_partpsp, cfg=cfg_e, partition=part, loss_fn=common.mlp_loss,
+        plan=plan))
+    for seg in segments:  # warm every segment shape
+        jax.block_until_ready(run_chunk(state0, seg, key)[1]["loss_mean"])
+
+    def time_engine() -> float:
+        state, ests = state0, []
+        t0 = time.time()
+        for seg in segments:
+            state, traj = run_chunk(state, seg, key)
+            ests.extend(np.asarray(traj["sensitivity_estimate"]).tolist())
+        return time.time() - t0
+
+    t_engine = min(time_engine() for _ in range(2))
+
+    return (f"table4/engine_vs_loop_train,{t_engine / steps * 1e6:.0f},"
+            f"loop_us={t_loop / steps * 1e6:.0f};N={n_nodes};batch=32;"
+            f"speedup={t_loop / t_engine:.2f}x")
+
+
+def main(steps: int = 150):
+    """Generator: measured rows stream out before the engine claim asserts,
+    so a sub-2x run on a loaded machine still reports its numbers."""
     results = run(steps)
-    rows = [r.csv() for r in results]
+    for r in results:
+        yield r.csv()
     t = {r.name.split("/")[1]: r.wall_s / r.steps for r in results}
     comm_full = 4 * D_TOTAL       # bytes/round/node (f32)
     comm_part = 4 * D_SHARED_1
-    rows.append(
+    yield (
         f"table4/claims,0,sgp_s={t['sgp']:.4f};sgpdp_s={t['sgpdp']:.4f};"
         f"partpsp_s={t['partpsp-1']:.4f};"
         f"comm_bytes_full={comm_full};comm_bytes_partpsp1={comm_part};"
         f"comm_reduction={comm_full / comm_part:.1f}x")
-    return rows
+    row, speedup = engine_vs_loop(steps=max(min(steps, 200), 50))
+    yield row
+    yield engine_vs_loop_train(steps=max(min(steps, 100), 20))
+    if speedup < 2.0:
+        raise AssertionError(
+            f"scan engine only {speedup:.2f}x faster per round than the "
+            f"Python loop (claim: >= 2x at the N=16 reduced config) [{row}]")

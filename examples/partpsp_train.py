@@ -7,16 +7,20 @@ launch/train.py). A few hundred steps of the ~100M-class reduced config:
 
     PYTHONPATH=src python examples/partpsp_train.py --steps 200
 
-This is a thin veneer over launch/train.py's build_trainer — the public API.
+This is a thin veneer over launch/train.py's build_engine_trainer — the
+public API. Training runs through the scan-compiled engine (repro.engine):
+each --chunk-round segment is a single XLA dispatch.
 """
 import argparse
 import json
 
 import jax
+import numpy as np
 
 from repro.core.partpsp import privacy_summary
 from repro.data import NodeShardedLoader, SyntheticLMStream
-from repro.launch.train import build_trainer
+from repro.engine import run_segments
+from repro.launch.train import build_engine_trainer
 
 
 def main():
@@ -27,28 +31,36 @@ def main():
     ap.add_argument("--b", type=float, default=3.0)
     ap.add_argument("--gamma-n", type=float, default=1e-6)
     ap.add_argument("--full-scale", action="store_true")
+    ap.add_argument("--chunk", type=int, default=25,
+                    help="rounds per compiled engine segment")
     args = ap.parse_args()
 
-    model, cfg_model, topo, cfg, partition, state, step = build_trainer(
+    (model, cfg_model, topo, cfg, partition, state, run_chunk,
+     plan) = build_engine_trainer(
         args.arch, reduced=not args.full_scale, n_nodes=args.nodes,
         algorithm="partpsp", b=args.b, gamma_n=args.gamma_n,
         gamma_l=0.05, gamma_s=0.05, clip=100.0, topology="dout", degree=2,
-        sync_interval=5, schedule="circulant")
+        sync_interval=5, schedule="circulant", chunk=args.chunk)
 
     print(f"PartPSP on {args.arch} ({'full' if args.full_scale else 'reduced'}) "
           f"| {args.nodes} nodes | d_s={partition.d_shared():,} "
-          f"d_l={partition.d_local():,} | circulant gossip")
+          f"d_l={partition.d_local():,} | circulant gossip | "
+          f"scan segments of {args.chunk}")
 
     stream = SyntheticLMStream(vocab_size=cfg_model.vocab_size, seq_len=64,
                                n_nodes=args.nodes, seed=0)
     loader = NodeShardedLoader(stream, per_node_batch=4, seed=0)
 
-    for t in range(args.steps):
-        batch = loader.batch_at(t)
-        state, m = step(state, batch, jax.random.fold_in(jax.random.PRNGKey(1), t))
-        if t % 20 == 0 or t == args.steps - 1:
-            print(f"step {t:4d}  loss {float(m['loss_mean']):.4f}  "
-                  f"S {float(m['sensitivity_used']):.2f}")
+    base_key = jax.random.PRNGKey(1)
+    for seg0, n, state, traj in run_segments(
+            run_chunk, state, loader.batch_at, base_key,
+            steps=args.steps, chunk=plan.chunk):
+        loss = np.asarray(traj["loss_mean"])
+        sens = np.asarray(traj["sensitivity_used"])
+        for i in range(n):
+            t = seg0 + i
+            if t % 20 == 0 or t == args.steps - 1:
+                print(f"step {t:4d}  loss {loss[i]:.4f}  S {sens[i]:.2f}")
 
     print("privacy:", json.dumps(privacy_summary(cfg, args.steps)))
 

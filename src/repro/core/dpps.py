@@ -17,26 +17,69 @@ protocol (the paper's SGP baseline).
 Everything here is jit-safe; the round index ``t`` and weights may be traced.
 The only static choices are the gossip schedule (dense vs circulant offsets)
 and whether synchronization code is emitted at all (``sync_interval > 0``).
+
+Multi-round execution should not loop over ``dpps_step`` in Python: the
+scan-compiled drivers in :mod:`repro.engine` (``engine.rounds.run_dpps`` /
+``engine.rounds.run_partpsp``) compile a whole training segment at once, and
+:mod:`repro.engine.shard` lowers the same round onto a device mesh with the
+node axis sharded (circulant gossip -> collective-permutes, dense gossip ->
+all-gather). The schedule / kernel-routing / sync knobs below are normally
+chosen per deployment by ``repro.engine.ProtocolPlan`` rather than by hand:
+
+* ``schedule``       <- ``ProtocolPlan.schedule`` (circulant whenever the
+  topology exposes offsets; dense is the paper-faithful baseline)
+* ``use_kernels``    <- ``ProtocolPlan.use_kernels`` (Pallas on TPU backends)
+* ``sync_interval``  <- ``ProtocolPlan.sync_interval`` (scaled with the
+  topology period so time-varying graphs sync on period boundaries)
+
+The ``gossip_fn`` / ``node_ops`` parameters of :func:`dpps_step` exist for
+that engine layer: they swap the node-axis reductions and the mixing step
+for mesh-collective implementations without touching the protocol maths.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import privacy
 from repro.core.pushsum import PushSumState, correct, gossip_circulant, gossip_dense, init_push_sum
-from repro.core.sensitivity import (
-    SensitivityState,
-    init_sensitivity,
-    network_sensitivity,
-    update_sensitivity,
-)
+from repro.core.sensitivity import SensitivityState, init_sensitivity
 from repro.core.tree_utils import PyTree, tree_l1_norm_per_node, tree_node_mean
 
-__all__ = ["DPPSConfig", "DPPSState", "dpps_init", "dpps_step"]
+__all__ = [
+    "DPPSConfig",
+    "DPPSState",
+    "NodeOps",
+    "LOCAL_NODE_OPS",
+    "dpps_init",
+    "dpps_step",
+]
+
+
+class NodeOps(NamedTuple):
+    """Node-axis reductions the protocol needs, swappable per execution mode.
+
+    The defaults (:data:`LOCAL_NODE_OPS`) reduce over a node-stacked leading
+    axis living on one device. ``repro.engine.shard`` substitutes
+    mesh-collective versions (``lax.pmax`` / ``lax.pmean`` over the gossip
+    axes) when the node axis is sharded under ``shard_map``.
+    """
+
+    vmax: Callable[[jnp.ndarray], jnp.ndarray]   # (N,) -> () global max
+    vmin: Callable[[jnp.ndarray], jnp.ndarray]   # (N,) -> () global min
+    vmean: Callable[[jnp.ndarray], jnp.ndarray]  # (N,) -> () global mean
+    leaf_mean: Callable[[jnp.ndarray], jnp.ndarray]  # (N, ...) -> (1, ...)
+
+
+LOCAL_NODE_OPS = NodeOps(
+    vmax=jnp.max,
+    vmin=jnp.min,
+    vmean=jnp.mean,
+    leaf_mean=lambda x: jnp.mean(x, axis=0, keepdims=True),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,13 +152,19 @@ def dpps_step(
     offsets: Sequence[int] | None = None,
     mix_weights: jnp.ndarray | None = None,
     return_s_half: bool = False,
+    gossip_fn: Callable[[PushSumState], PushSumState] | None = None,
+    node_ops: NodeOps = LOCAL_NODE_OPS,
 ) -> tuple[DPPSState, dict[str, Any]]:
     """One DPPS round. Returns (new state, diagnostics).
 
     Exactly one of ``w`` (dense) / ``offsets`` (circulant) must match
-    ``cfg.schedule``. Diagnostics contain the network sensitivity actually
-    used for noise, per-node estimates, perturbation/noise norms, and the
-    corrected iterates' consensus diagnostics needed by the paper's figures.
+    ``cfg.schedule`` — unless ``gossip_fn`` is given, in which case it
+    replaces the built-in mixing entirely (``repro.engine.shard`` uses this
+    to run Eq. 9 as mesh collectives). ``node_ops`` swaps the node-axis
+    reductions for sharded execution the same way. Diagnostics contain the
+    network sensitivity actually used for noise, per-node estimates,
+    perturbation/noise norms, and the corrected iterates' consensus
+    diagnostics needed by the paper's figures.
     """
     s = state.push.s
     n_nodes = state.push.a.shape[0]
@@ -141,7 +190,8 @@ def dpps_step(
     )
     s_local = jnp.where(state.t == 0, s_init, s_rec)
     sens = state.sens._replace(s_local=s_local)
-    s_net = network_sensitivity(sens)  # scalar all-reduce max (Alg. 1 line 4)
+    # scalar all-reduce max (Alg. 1 line 4); pmax over gossip axes when sharded
+    s_net = node_ops.vmax(sens.s_local)
 
     # Experiment-only calibration modes (paper Table II/III).
     if cfg.sensitivity_mode == "real":
@@ -176,7 +226,9 @@ def dpps_step(
 
     # -- 4. gossip (Eq. 9) ----------------------------------------------------
     push_half = PushSumState(s=s_noise, a=state.push.a)
-    if cfg.schedule == "circulant":
+    if gossip_fn is not None:
+        push_new = gossip_fn(push_half)
+    elif cfg.schedule == "circulant":
         if offsets is None:
             raise ValueError("circulant schedule requires offsets=")
         if mix_weights is None:
@@ -194,7 +246,7 @@ def dpps_step(
         do_sync = (state.t + 1) % cfg.sync_interval == 0
 
         def leaf_sync(mixed, noised):
-            mean = jnp.mean(noised, axis=0, keepdims=True)
+            mean = node_ops.leaf_mean(noised)
             synced = jnp.broadcast_to(mean, noised.shape)
             return jnp.where(do_sync, synced.astype(mixed.dtype), mixed)
 
@@ -214,10 +266,10 @@ def dpps_step(
         "sensitivity_used": s_used,
         "sensitivity_estimate": s_net,
         "sensitivity_local": sens.s_local,
-        "eps_l1_max": jnp.max(eps_l1),
-        "noise_l1_mean": jnp.mean(noise_l1),
-        "a_min": jnp.min(push_new.a),
-        "a_max": jnp.max(push_new.a),
+        "eps_l1_max": node_ops.vmax(eps_l1),
+        "noise_l1_mean": node_ops.vmean(noise_l1),
+        "a_min": node_ops.vmin(push_new.a),
+        "a_max": node_ops.vmax(push_new.a),
     }
     if return_s_half:
         diag["s_half"] = s_half

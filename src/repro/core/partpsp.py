@@ -16,6 +16,17 @@ Baselines (paper SV.D) are the same step under different configs:
 * PEDFL  — share everything, per-node Laplace noise with *fixed* scale
            calibrated to the clipping bound (no network sensitivity
            estimation) — the Laplace-mechanism decentralized FL baseline.
+
+``partpsp_step`` is the single-round primitive. Production paths do not call
+it in a Python loop: ``repro.engine.rounds.run_partpsp`` scans it over a
+whole segment of rounds (one compilation, chunked trajectory capture) and
+``repro.engine.shard.shard_run_partpsp`` runs the same scan with the node
+axis sharded over a device mesh. Deployment knobs that depend on topology
+and mesh shape (gossip schedule, Pallas kernel routing, sync interval) are
+selected by ``repro.engine.ProtocolPlan`` — see that class for how each knob
+maps onto ``DPPSConfig``. The ``gossip_fn`` / ``node_ops`` parameters below
+are forwarded verbatim to :func:`repro.core.dpps.dpps_step` for the sharded
+path.
 """
 from __future__ import annotations
 
@@ -25,7 +36,14 @@ from typing import Any, Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.dpps import DPPSConfig, DPPSState, dpps_init, dpps_step
+from repro.core.dpps import (
+    LOCAL_NODE_OPS,
+    DPPSConfig,
+    DPPSState,
+    NodeOps,
+    dpps_init,
+    dpps_step,
+)
 from repro.core.partition import SHARE_ALL, Partition
 from repro.core.privacy import PrivacyAccountant, l1_clip_per_node
 from repro.core.pushsum import correct
@@ -130,6 +148,8 @@ def partpsp_step(
     offsets: Sequence[int] | None = None,
     mix_weights: jnp.ndarray | None = None,
     return_s_half: bool = False,
+    gossip_fn: Any = None,
+    node_ops: NodeOps = LOCAL_NODE_OPS,
 ) -> tuple[PartPSPState, dict[str, Any]]:
     """One PartPSP round. ``batch`` leaves are node-stacked: (N, per_node, ...)."""
     n_nodes = state.dpps.push.a.shape[0]
@@ -172,13 +192,14 @@ def partpsp_step(
         state.dpps, eps, key_noise, cfg.dpps,
         w=w, offsets=offsets, mix_weights=mix_weights,
         return_s_half=return_s_half,
+        gossip_fn=gossip_fn, node_ops=node_ops,
     )
 
     new_state = PartPSPState(dpps=dpps_new, local=local_new)
     metrics = {
-        "loss_mean": jnp.mean(losses),
+        "loss_mean": node_ops.vmean(losses),
         "loss_per_node": losses,
-        "grad_l1_max": jnp.max(g_norms),
+        "grad_l1_max": node_ops.vmax(g_norms),
         **diag,
     }
     return new_state, metrics

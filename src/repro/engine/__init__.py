@@ -1,0 +1,36 @@
+"""repro.engine — scan-compiled, sharding-aware protocol execution.
+
+The architectural seam between the protocol maths (``repro.core``) and the
+drivers (``repro.launch``, ``benchmarks/``, ``examples/``):
+
+* :class:`ProtocolPlan` (plan.py)  — deployment choices (gossip schedule,
+  Pallas routing, sync cadence, scan chunking) derived from topology + mesh.
+* ``run_dpps`` / ``run_partpsp`` / ``run_decode`` (rounds.py) — multi-round
+  ``jax.lax.scan`` drivers: one dispatch per segment instead of per round.
+* ``shard_run_dpps`` / ``shard_run_partpsp`` (shard.py) — the same scans
+  under ``shard_map`` with the node axis on the mesh's gossip axis
+  (circulant gossip -> collective-permutes, dense -> all-gather).
+
+Later scaling work (async gossip, multi-pod node axes, batched serving)
+plugs in here rather than into the per-round protocol code.
+"""
+from repro.engine.plan import ProtocolPlan
+from repro.engine.rounds import (
+    run_decode,
+    run_dpps,
+    run_partpsp,
+    run_segments,
+    stack_rounds,
+)
+from repro.engine.shard import shard_run_dpps, shard_run_partpsp
+
+__all__ = [
+    "ProtocolPlan",
+    "run_dpps",
+    "run_partpsp",
+    "run_decode",
+    "run_segments",
+    "stack_rounds",
+    "shard_run_dpps",
+    "shard_run_partpsp",
+]

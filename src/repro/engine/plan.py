@@ -1,0 +1,171 @@
+"""ProtocolPlan — deployment-level protocol choices derived from topology + mesh.
+
+``DPPSConfig`` carries the *protocol* hyperparameters (b, gamma_n, C',
+lambda); the remaining knobs — gossip schedule, Pallas-kernel routing, sync
+interval, scan chunk length — are *deployment* decisions that depend on the
+topology structure and the device mesh, not on the privacy maths. The plan
+owns those and stamps them onto a config via :meth:`resolve_dpps` /
+:meth:`resolve_partpsp`, so every driver (train, serve, benchmarks) makes
+the same choices from one place.
+
+Schedule selection (:meth:`from_topology`):
+
+* ``circulant`` whenever the topology exposes per-round circulant offsets
+  (both paper topologies, d-Out and EXP, do — Remark 2). Mixing is then a
+  weighted sum of static rolls which lowers to collective-permutes on a
+  node-sharded mesh: O(d * d_s) wire bytes per round (EXPERIMENTS.md
+  SPerf #1).
+* ``dense`` (the paper-faithful ``W @ s`` baseline, all-gather on a mesh)
+  for non-circulant topologies or when forced with ``schedule="dense"``.
+
+Time-varying topologies (EXP) are handled by *superset offsets*: the static
+offset set is the union over the topology's period and the per-round weight
+vectors (zero on unused offsets) are stacked into a ``(period, K)`` array the
+scan indexes with ``t mod period``. This keeps every round of a
+``jax.lax.scan`` structurally identical — the whole segment compiles once.
+
+Kernel routing defaults to Pallas on TPU backends and the jnp oracles
+elsewhere (the kernels run in interpret mode off-TPU — correct but slow).
+``sync_interval="auto"`` syncs every ``max(2, 2 * period)`` rounds so
+time-varying graphs always complete full mixing periods between syncs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dpps import DPPSConfig
+from repro.core.partpsp import PartPSPConfig
+from repro.core.topology import Topology
+
+__all__ = ["ProtocolPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolPlan:
+    """Static protocol-execution choices plus their per-round array payloads.
+
+    Fields:
+      schedule       "dense" | "circulant" — which gossip lowering to emit.
+      period         topology period P (1 for static graphs).
+      offsets        static superset offsets (circulant only).
+      mix_weights    (P, K) per-round weights over ``offsets`` (circulant).
+      ws             (P, N, N) per-round weight matrices (dense only).
+      use_kernels    route noise/clip through the Pallas kernels.
+      sync_interval  full-sync cadence to stamp on DPPSConfig (None = keep
+                     whatever the config already says).
+      chunk          rounds per compiled scan segment (metrics are captured
+                     every round inside the segment; checkpoints naturally
+                     land on segment boundaries).
+    """
+
+    schedule: str
+    period: int
+    offsets: tuple[int, ...] | None = None
+    mix_weights: Any = None
+    ws: Any = None
+    use_kernels: bool = False
+    sync_interval: int | None = None
+    chunk: int = 50
+
+    @classmethod
+    def from_topology(
+        cls,
+        topo: Topology,
+        *,
+        mesh=None,
+        schedule: str | None = None,
+        use_kernels: bool | None = None,
+        sync_interval: int | str | None = None,
+        chunk: int = 50,
+    ) -> "ProtocolPlan":
+        """Derive the plan for ``topo`` (and optionally a device mesh).
+
+        ``schedule=None`` picks circulant when the topology supports it;
+        ``use_kernels=None`` picks Pallas iff the default backend is TPU;
+        ``sync_interval="auto"`` derives the cadence from the period. When a
+        mesh is given its gossip-axis extent must divide the node count so
+        the sharded engine (``repro.engine.shard``) can block-shard nodes.
+        """
+        if schedule not in (None, "dense", "circulant"):
+            raise ValueError(f"unknown schedule {schedule!r}")
+        period = int(getattr(topo, "period", 1))
+        per_round: list[tuple[tuple[int, ...], np.ndarray]] | None = []
+        for t in range(period):
+            offs = topo.offsets(t)
+            if offs is None:
+                per_round = None
+                break
+            per_round.append(topo.mixing_weights(t))
+
+        if schedule is None:
+            schedule = "circulant" if per_round is not None else "dense"
+        if schedule == "circulant" and per_round is None:
+            raise ValueError(
+                f"{type(topo).__name__} is not circulant; use schedule='dense'")
+
+        if mesh is not None:
+            from repro.launch.mesh import n_gossip_nodes
+
+            n_shards = n_gossip_nodes(mesh)
+            if topo.n_nodes % max(n_shards, 1) != 0:
+                raise ValueError(
+                    f"n_nodes={topo.n_nodes} not divisible by the mesh's "
+                    f"{n_shards} gossip shards")
+
+        offsets = None
+        mix_weights = None
+        ws = None
+        if schedule == "circulant":
+            superset = tuple(sorted({o for offs, _ in per_round for o in offs}))
+            rows = np.zeros((period, len(superset)), np.float32)
+            col = {o: i for i, o in enumerate(superset)}
+            for t, (offs, wts) in enumerate(per_round):
+                for o, wv in zip(offs, wts):
+                    rows[t, col[o]] += wv
+            offsets = superset
+            mix_weights = jnp.asarray(rows)
+        else:
+            ws = jnp.stack(
+                [topo.weight_matrix_jnp(t) for t in range(period)], axis=0)
+
+        if use_kernels is None:
+            use_kernels = jax.default_backend() == "tpu"
+        if sync_interval == "auto":
+            sync_interval = max(2, 2 * period)
+
+        return cls(schedule=schedule, period=period, offsets=offsets,
+                   mix_weights=mix_weights, ws=ws, use_kernels=use_kernels,
+                   sync_interval=sync_interval, chunk=chunk)
+
+    # -- per-round mixing operands -------------------------------------------
+
+    def mix_at(self, t) -> dict[str, Any]:
+        """dpps_step mixing kwargs for (possibly traced) round index ``t``."""
+        if self.schedule == "circulant":
+            if self.period == 1:
+                wts = self.mix_weights[0]
+            else:
+                wts = jax.lax.dynamic_index_in_dim(
+                    self.mix_weights, jnp.mod(t, self.period), 0, keepdims=False)
+            return dict(offsets=self.offsets, mix_weights=wts)
+        if self.period == 1:
+            return dict(w=self.ws[0])
+        return dict(w=jax.lax.dynamic_index_in_dim(
+            self.ws, jnp.mod(t, self.period), 0, keepdims=False))
+
+    # -- config stamping -----------------------------------------------------
+
+    def resolve_dpps(self, cfg: DPPSConfig) -> DPPSConfig:
+        updates: dict[str, Any] = dict(schedule=self.schedule,
+                                       use_kernels=self.use_kernels)
+        if self.sync_interval is not None:
+            updates["sync_interval"] = int(self.sync_interval)
+        return dataclasses.replace(cfg, **updates)
+
+    def resolve_partpsp(self, cfg: PartPSPConfig) -> PartPSPConfig:
+        return dataclasses.replace(cfg, dpps=self.resolve_dpps(cfg.dpps))

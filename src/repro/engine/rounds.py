@@ -1,0 +1,212 @@
+"""Scan-compiled multi-round protocol drivers.
+
+The seed repo dispatched ``dpps_step`` / ``partpsp_step`` from a Python loop
+— one XLA dispatch (plus host-side key folding) per round, which dominates
+the per-round cost at protocol scale. These drivers wrap the round in
+``jax.lax.scan`` so an entire training segment compiles and dispatches once:
+
+* :func:`run_dpps`     — T rounds of the raw DPPS protocol (Alg. 1).
+* :func:`run_partpsp`  — T rounds of PartPSP training (Alg. 2); the batch
+  stream is a stacked pytree with a leading round axis.
+* :func:`run_decode`   — scan-compiled autoregressive decode for serving.
+* :func:`stack_rounds` — host helper stacking per-round pytrees into the
+  ``(T, ...)`` layout the scans consume.
+
+Trajectory capture is chunked: each driver captures per-round metrics as
+scan outputs, and callers split long runs into ``ProtocolPlan.chunk``-sized
+segments so metrics stay bounded and checkpoints land on segment boundaries
+(see ``launch/train.py``).
+
+PRNG discipline: drivers receive one *base* key and fold the absolute round
+counter carried in the protocol state into it each round —
+``fold_in(base_key, state.t)``. A Python loop calling the per-round step
+with ``fold_in(base_key, t)`` therefore produces bit-identical trajectories
+(tests/test_engine.py pins this for both schedules), and resuming from a
+checkpointed state continues the exact same noise stream.
+
+The private ``_gossip_builder`` / ``_node_ops`` / ``_key_fold`` hooks are
+the seam ``repro.engine.shard`` uses to run the identical scan under
+``shard_map`` with mesh-collective gossip.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dpps import DPPSConfig, DPPSState, dpps_step
+from repro.core.partpsp import PartPSPConfig, PartPSPState, partpsp_step
+from repro.core.sensitivity import real_sensitivity
+from repro.core.tree_utils import PyTree
+from repro.engine.plan import ProtocolPlan
+
+__all__ = ["run_dpps", "run_partpsp", "run_decode", "run_segments",
+           "stack_rounds"]
+
+
+def stack_rounds(make_round: Callable[[int], PyTree], t0: int, n: int) -> PyTree:
+    """Stack host-produced per-round pytrees into leading-(T,) scan inputs."""
+    items = [make_round(t) for t in range(t0, t0 + n)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *items)
+
+
+def run_segments(run_chunk: Callable, state, batch_at: Callable[[int], PyTree],
+                 key: jax.Array, *, steps: int, chunk: int, start: int = 0):
+    """Drive a jitted segment runner over ``steps`` rounds in ``chunk``s.
+
+    Yields ``(t0, n, state, traj)`` after each segment: the segment's first
+    absolute round, its length (the final segment may be shorter), the
+    advanced state, and the per-round metric trajectory. Host work (batch
+    stacking via ``batch_at``) happens between dispatches, and checkpoints
+    naturally land on segment boundaries.
+    """
+    for t0 in range(start, start + steps, chunk):
+        n = min(chunk, start + steps - t0)
+        state, traj = run_chunk(state, stack_rounds(batch_at, t0, n), key)
+        yield t0, n, state, traj
+
+
+def _round_kwargs(plan: ProtocolPlan, t, gossip_builder, node_ops):
+    """Mixing/reduction kwargs for the round at (possibly traced) index t."""
+    mix = plan.mix_at(t)
+    kwargs: dict[str, Any] = {}
+    if gossip_builder is not None:
+        kwargs["gossip_fn"] = gossip_builder(mix)
+    else:
+        kwargs.update(mix)
+    if node_ops is not None:
+        kwargs["node_ops"] = node_ops
+    return kwargs
+
+
+def _capture(diag: dict[str, Any], track_real: bool) -> dict[str, Any]:
+    diag = dict(diag)
+    s_half = diag.pop("s_half", None)
+    if track_real:
+        diag["sensitivity_real"] = real_sensitivity(s_half)
+    return diag
+
+
+def run_dpps(
+    state: DPPSState,
+    eps_seq: PyTree | None,
+    key: jax.Array,
+    *,
+    cfg: DPPSConfig,
+    plan: ProtocolPlan,
+    rounds: int | None = None,
+    track_real: bool = False,
+    _gossip_builder=None,
+    _node_ops=None,
+    _key_fold=None,
+) -> tuple[DPPSState, dict[str, jnp.ndarray]]:
+    """Scan ``rounds`` DPPS rounds in one compiled program.
+
+    ``eps_seq``: per-round perturbations, leaves shaped (T, N, ...) — or
+    ``None`` for pure consensus (zero perturbation, ``rounds`` required).
+    Returns the final state and the per-round diagnostic trajectory (leaves
+    (T,) / (T, N)). ``track_real`` additionally records the exact
+    sensitivity per round (O(N^2 d) — validation only, paper Fig. 2).
+    """
+    cfg = plan.resolve_dpps(cfg)
+    if eps_seq is None:
+        if rounds is None:
+            raise ValueError("rounds= is required when eps_seq is None")
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, state.push.s)
+        xs: Any = jnp.arange(rounds)
+        eps_at = lambda x: zeros
+    else:
+        xs = eps_seq
+        eps_at = lambda x: x
+
+    def body(st: DPPSState, x):
+        k = jax.random.fold_in(key, st.t)
+        if _key_fold is not None:
+            k = _key_fold(k)
+        kwargs = _round_kwargs(plan, st.t, _gossip_builder, _node_ops)
+        st2, diag = dpps_step(st, eps_at(x), k, cfg,
+                              return_s_half=track_real, **kwargs)
+        return st2, _capture(diag, track_real)
+
+    return jax.lax.scan(body, state, xs)
+
+
+def run_partpsp(
+    state: PartPSPState,
+    batches: PyTree,
+    key: jax.Array,
+    *,
+    cfg: PartPSPConfig,
+    partition,
+    loss_fn,
+    plan: ProtocolPlan,
+    track_real: bool = False,
+    _gossip_builder=None,
+    _node_ops=None,
+    _key_fold=None,
+) -> tuple[PartPSPState, dict[str, jnp.ndarray]]:
+    """Scan one segment of PartPSP training (Alg. 2) in one compiled program.
+
+    ``batches``: stacked round batches, leaves (T, N, per_node, ...) — use
+    :func:`stack_rounds` to build them from a host loader. Metrics are
+    captured every round; the returned trajectory has (T,)-leading leaves.
+    """
+    cfg = plan.resolve_partpsp(cfg)
+
+    def body(st: PartPSPState, batch_t):
+        k = jax.random.fold_in(key, st.dpps.t)
+        if _key_fold is not None:
+            k = _key_fold(k)
+        kwargs = _round_kwargs(plan, st.dpps.t, _gossip_builder, _node_ops)
+        st2, m = partpsp_step(st, batch_t, k, cfg=cfg, partition=partition,
+                              loss_fn=loss_fn, return_s_half=track_real,
+                              **kwargs)
+        return st2, _capture(m, track_real)
+
+    return jax.lax.scan(body, state, batches)
+
+
+def run_decode(
+    decode_fn: Callable,
+    cache: PyTree,
+    tok0: jnp.ndarray,
+    key: jax.Array,
+    *,
+    start_pos: int,
+    steps: int,
+    temperature: float = 1.0,
+    step_inputs: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, PyTree]:
+    """Scan-compiled autoregressive decode (serving hot loop).
+
+    ``decode_fn(cache, step_in, pos) -> (logits, new_cache)``. For token
+    models the sampled token feeds back as the next ``step_in``; embedding
+    models pass precomputed ``step_inputs`` of shape (steps, B, d_model).
+    Returns ((steps, B) sampled tokens, final cache).
+    """
+    positions = start_pos + jnp.arange(steps, dtype=jnp.int32)
+
+    def sample(logits, k):
+        k, sub = jax.random.split(k)
+        tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        return tok.astype(jnp.int32), k
+
+    if step_inputs is None:
+        def body(carry, pos):
+            tok, cache, k = carry
+            logits, cache = decode_fn(cache, tok, pos)
+            tok, k = sample(logits, k)
+            return (tok, cache, k), tok
+        xs: Any = positions
+    else:
+        def body(carry, x):
+            tok, cache, k = carry
+            pos, step_in = x
+            logits, cache = decode_fn(cache, step_in, pos)
+            tok, k = sample(logits, k)
+            return (tok, cache, k), tok
+        xs = (positions, step_inputs)
+
+    (_, cache, _), toks = jax.lax.scan(body, (tok0, cache, key), xs)
+    return toks, cache

@@ -10,6 +10,15 @@ it); on a real fleet the same code paths run on the production mesh.
 Key flags mirror the paper's experimental grid: --algorithm
 {partpsp,sgp,sgpdp,pedfl}, --b (privacy budget), --gamma-n, --topology
 {dout,exp}, --degree, --sync-interval, --schedule {dense,circulant}.
+
+Execution drivers (--driver):
+
+* ``engine`` (default) — the scan-compiled engine (repro.engine): training
+  runs in --chunk-round segments, each one XLA dispatch, with per-round
+  metrics captured inside the scan and checkpoints on segment boundaries.
+* ``loop``   — the per-round Python loop (one dispatch per round). Kept as
+  the reference path; tests/test_engine.py pins that both produce identical
+  trajectories for the same seed.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ from repro.core.partpsp import (
 )
 from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
 from repro.data import NodeShardedLoader, SyntheticLMStream
+from repro.engine import ProtocolPlan, run_partpsp, run_segments
 from repro.models import Transformer
 
 
@@ -43,10 +53,11 @@ def make_topology(kind: str, n_nodes: int, degree: int):
     return DOutGraph(n_nodes=n_nodes, d=degree)
 
 
-def build_trainer(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str,
-                  b: float, gamma_n: float, gamma_l: float, gamma_s: float,
-                  clip: float, topology: str, degree: int, sync_interval: int,
-                  schedule: str, use_kernels: bool = False, seed: int = 0):
+def _build_setup(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str,
+                 b: float, gamma_n: float, gamma_l: float, gamma_s: float,
+                 clip: float, topology: str, degree: int, sync_interval: int,
+                 schedule: str, use_kernels: bool = False, seed: int = 0):
+    """Model + topology + config + node-stacked initial state (both drivers)."""
     arch = get_config(arch_name)
     model_cfg = arch.smoke if reduced else arch.model
     model = Transformer(model_cfg)
@@ -75,6 +86,19 @@ def build_trainer(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str
             for pat, act in rules)
     partition = Partition.from_rules(stacked, rules, default="local")
     state = partpsp_init(stacked, partition, cfg)
+    return model, model_cfg, topo, cfg, partition, state
+
+
+def build_trainer(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str,
+                  b: float, gamma_n: float, gamma_l: float, gamma_s: float,
+                  clip: float, topology: str, degree: int, sync_interval: int,
+                  schedule: str, use_kernels: bool = False, seed: int = 0):
+    """Per-round reference driver: a jitted single-step function."""
+    model, model_cfg, topo, cfg, partition, state = _build_setup(
+        arch_name, reduced=reduced, n_nodes=n_nodes, algorithm=algorithm,
+        b=b, gamma_n=gamma_n, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
+        topology=topology, degree=degree, sync_interval=sync_interval,
+        schedule=schedule, use_kernels=use_kernels, seed=seed)
 
     if cfg.dpps.schedule == "circulant":
         offsets, wts = topo.mixing_weights(0)
@@ -85,6 +109,37 @@ def build_trainer(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str
     step = jax.jit(functools.partial(
         partpsp_step, cfg=cfg, partition=partition, loss_fn=model.loss_fn, **mix))
     return model, model_cfg, topo, cfg, partition, state, step
+
+
+def build_engine_trainer(arch_name: str, *, reduced: bool, n_nodes: int,
+                         algorithm: str, b: float, gamma_n: float,
+                         gamma_l: float, gamma_s: float, clip: float,
+                         topology: str, degree: int, sync_interval: int,
+                         schedule: str, use_kernels: bool = False,
+                         seed: int = 0, chunk: int = 50):
+    """Scan-engine driver: a jitted segment runner (one dispatch per chunk).
+
+    Returns ``(model, model_cfg, topo, cfg, partition, state, run_chunk,
+    plan)`` where ``run_chunk(state, batches, base_key)`` advances one
+    segment. ``batches`` leaves are (chunk, n_nodes, ...) — build them with
+    :func:`repro.engine.stack_rounds`. The engine folds the absolute round
+    counter into ``base_key``, so trajectories are identical to the loop
+    driver's and segments resume seamlessly from checkpoints.
+    """
+    model, model_cfg, topo, cfg, partition, state = _build_setup(
+        arch_name, reduced=reduced, n_nodes=n_nodes, algorithm=algorithm,
+        b=b, gamma_n=gamma_n, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
+        topology=topology, degree=degree, sync_interval=sync_interval,
+        schedule=schedule, use_kernels=use_kernels, seed=seed)
+
+    plan = ProtocolPlan.from_topology(
+        topo, schedule=schedule, use_kernels=use_kernels,
+        sync_interval=sync_interval, chunk=chunk)
+    cfg = plan.resolve_partpsp(cfg)
+    run_chunk = jax.jit(functools.partial(
+        run_partpsp, cfg=cfg, partition=partition, loss_fn=model.loss_fn,
+        plan=plan))
+    return model, model_cfg, topo, cfg, partition, state, run_chunk, plan
 
 
 def main() -> None:
@@ -108,24 +163,36 @@ def main() -> None:
     ap.add_argument("--sync-interval", type=int, default=5)
     ap.add_argument("--schedule", choices=("dense", "circulant"), default="dense")
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--driver", choices=("engine", "loop"), default="engine",
+                    help="scan-compiled engine segments vs per-round loop")
+    ap.add_argument("--chunk", type=int, default=50,
+                    help="rounds per compiled engine segment")
     ap.add_argument("--seed", type=int, default=2024)   # paper's seed
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args()
+    if args.chunk < 1:
+        ap.error("--chunk must be >= 1")
 
-    model, model_cfg, topo, cfg, partition, state, step = build_trainer(
-        args.arch, reduced=args.reduced, n_nodes=args.nodes,
-        algorithm=args.algorithm, b=args.b, gamma_n=args.gamma_n,
-        gamma_l=args.gamma_l, gamma_s=args.gamma_s, clip=args.clip,
-        topology=args.topology, degree=args.degree,
-        sync_interval=args.sync_interval, schedule=args.schedule,
-        use_kernels=args.use_kernels, seed=args.seed)
+    build_kwargs = dict(
+        reduced=args.reduced, n_nodes=args.nodes, algorithm=args.algorithm,
+        b=args.b, gamma_n=args.gamma_n, gamma_l=args.gamma_l,
+        gamma_s=args.gamma_s, clip=args.clip, topology=args.topology,
+        degree=args.degree, sync_interval=args.sync_interval,
+        schedule=args.schedule, use_kernels=args.use_kernels, seed=args.seed)
+    if args.driver == "engine":
+        (model, model_cfg, topo, cfg, partition, state, run_chunk,
+         plan) = build_engine_trainer(args.arch, chunk=args.chunk,
+                                      **build_kwargs)
+    else:
+        model, model_cfg, topo, cfg, partition, state, step = build_trainer(
+            args.arch, **build_kwargs)
 
     print(f"arch={args.arch} ({'reduced' if args.reduced else 'FULL'}) "
           f"algorithm={args.algorithm} nodes={args.nodes} topo={args.topology}"
-          f"(d={args.degree}) d_s={partition.d_shared():,} "
-          f"d_l={partition.d_local():,}")
+          f"(d={args.degree}) driver={args.driver} "
+          f"d_s={partition.d_shared():,} d_l={partition.d_local():,}")
 
     stream = SyntheticLMStream(vocab_size=model_cfg.vocab_size,
                                seq_len=args.seq_len, n_nodes=args.nodes,
@@ -133,9 +200,7 @@ def main() -> None:
     loader = NodeShardedLoader(stream, per_node_batch=args.per_node_batch,
                                seed=args.seed)
 
-    history = []
-    t0 = time.time()
-    for t in range(args.steps):
+    def batch_at(t: int):
         batch = loader.batch_at(t)
         if model_cfg.input_mode == "embeddings":
             toks = batch["tokens"]
@@ -143,17 +208,37 @@ def main() -> None:
             batch = {"embeds": jax.random.normal(
                         key_e, toks.shape + (model_cfg.d_model,)) * 0.1,
                      "labels": toks}
-        key = jax.random.fold_in(jax.random.PRNGKey(args.seed), t)
-        state, metrics = step(state, batch, key)
-        row = {"step": t,
-               "loss": float(metrics["loss_mean"]),
-               "sensitivity": float(metrics["sensitivity_used"]),
-               "grad_l1_max": float(metrics["grad_l1_max"])}
+        return batch
+
+    base_key = jax.random.PRNGKey(args.seed)
+    history = []
+    t0 = time.time()
+
+    def log_row(row):
         history.append(row)
+        t = row["step"]
         if t % args.log_every == 0 or t == args.steps - 1:
             print(f"step {t:5d} loss={row['loss']:.4f} "
                   f"S={row['sensitivity']:.3f} "
                   f"({(time.time()-t0)/(t+1):.2f}s/step)")
+
+    if args.driver == "engine":
+        for seg0, n, state, traj in run_segments(
+                run_chunk, state, batch_at, base_key,
+                steps=args.steps, chunk=plan.chunk):
+            for i in range(n):
+                log_row({"step": seg0 + i,
+                         "loss": float(traj["loss_mean"][i]),
+                         "sensitivity": float(traj["sensitivity_used"][i]),
+                         "grad_l1_max": float(traj["grad_l1_max"][i])})
+    else:
+        for t in range(args.steps):
+            key = jax.random.fold_in(base_key, t)
+            state, metrics = step(state, batch_at(t), key)
+            log_row({"step": t,
+                     "loss": float(metrics["loss_mean"]),
+                     "sensitivity": float(metrics["sensitivity_used"]),
+                     "grad_l1_max": float(metrics["grad_l1_max"])})
 
     print("privacy:", json.dumps(privacy_summary(cfg, args.steps)))
     if args.metrics_out:

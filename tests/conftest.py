@@ -1,8 +1,12 @@
 import os
 
-# Tests run on the single real CPU device — the 512-device forcing is
-# exclusively dryrun.py's (see the brief). Keep compilation light.
+# Tests run on the CPU platform — the 512-device forcing is exclusively
+# dryrun.py's (see the brief). A small host-device count is forced so the
+# sharded engine tests (tests/test_engine.py) can build a real 4-shard mesh;
+# everything else still executes on device 0 and stays light. setdefault
+# keeps any externally provided XLA_FLAGS authoritative.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 import jax  # noqa: E402
 

@@ -1,0 +1,334 @@
+"""Engine equivalence: the scan-compiled drivers (repro.engine) must produce
+numerically identical trajectories to the per-round Python loop for the same
+PRNG keys — for DPPS and PartPSP, on both dense and circulant schedules —
+and the sharded (shard_map) path must match the single-device engine in the
+noiseless regime (noised shards draw independent keys by design)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.dpps import DPPSConfig, dpps_init, dpps_step
+from repro.core.partition import Partition
+from repro.core.partpsp import make_baseline_config, partpsp_init, partpsp_step
+from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
+from repro.engine import (
+    ProtocolPlan,
+    run_decode,
+    run_dpps,
+    run_partpsp,
+    shard_run_dpps,
+    shard_run_partpsp,
+    stack_rounds,
+)
+
+N, T = 8, 6
+TOPO = DOutGraph(n_nodes=N, d=2)
+CP, LAM = calibrate_constants(TOPO)
+
+
+def _s0(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(key, (N, 11)),
+            jax.random.normal(jax.random.fold_in(key, 1), (N, 2, 3))]
+
+
+def _eps_seq(s0, seed=10, scale=0.1):
+    key = jax.random.PRNGKey(seed)
+    return [scale * jax.random.normal(jax.random.fold_in(key, i),
+                                      (T,) + x.shape)
+            for i, x in enumerate(s0)]
+
+
+def _assert_trees_close(a, b, atol=1e-6):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# DPPS: scan == loop, bit-for-bit with noise on
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["dense", "circulant"])
+def test_dpps_engine_matches_loop(schedule):
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     sync_interval=3, schedule=schedule)
+    plan = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                      use_kernels=False, sync_interval=3)
+    cfg_r = plan.resolve_dpps(cfg)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    base = jax.random.PRNGKey(42)
+
+    state = dpps_init(s0, cfg_r)
+    for t in range(T):
+        eps_t = [e[t] for e in eps_seq]
+        k = jax.random.fold_in(base, state.t)
+        state, _ = dpps_step(state, eps_t, k, cfg_r, **plan.mix_at(t))
+
+    engine = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))
+    state_e, traj = engine(dpps_init(s0, cfg_r), eps_seq, base)
+
+    _assert_trees_close(state.push.s, state_e.push.s)
+    _assert_trees_close(state.push.a, state_e.push.a)
+    np.testing.assert_allclose(np.asarray(state.sens.s_local),
+                               np.asarray(state_e.sens.s_local), rtol=1e-5)
+    assert traj["sensitivity_used"].shape == (T,)
+
+
+def test_dpps_engine_time_varying_exp():
+    """EXP's per-round offset sets run as one static superset in the scan."""
+    topo = ExpGraph(n_nodes=N)
+    cp, lam = calibrate_constants(topo)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.01, c_prime=cp, lam=lam,
+                     schedule="circulant")
+    plan = ProtocolPlan.from_topology(topo, use_kernels=False)
+    assert plan.period == topo.period and plan.schedule == "circulant"
+    cfg_r = plan.resolve_dpps(cfg)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0, seed=11)
+    base = jax.random.PRNGKey(3)
+
+    state = dpps_init(s0, cfg_r)
+    for t in range(T):
+        eps_t = [e[t] for e in eps_seq]
+        state, _ = dpps_step(state, eps_t, jax.random.fold_in(base, state.t),
+                             cfg_r, **plan.mix_at(t))
+    state_e, _ = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))(
+        dpps_init(s0, cfg_r), eps_seq, base)
+    _assert_trees_close(state.push.s, state_e.push.s)
+
+
+def test_dpps_engine_segments_resume():
+    """Two chunked segments == one long segment (checkpoint/resume seam)."""
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM)
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False)
+    cfg_r = plan.resolve_dpps(cfg)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    base = jax.random.PRNGKey(7)
+    engine = functools.partial(run_dpps, cfg=cfg, plan=plan)
+
+    one, _ = engine(dpps_init(s0, cfg_r), eps_seq, base)
+    half = T // 2
+    st, _ = engine(dpps_init(s0, cfg_r), [e[:half] for e in eps_seq], base)
+    two, _ = engine(st, [e[half:] for e in eps_seq], base)
+    _assert_trees_close(one.push.s, two.push.s)
+    np.testing.assert_allclose(np.asarray(one.sens.s_local),
+                               np.asarray(two.sens.s_local), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PartPSP: scan == loop on the training step
+# ---------------------------------------------------------------------------
+
+def _mlp_setup():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = {"l1": jax.random.normal(k1, (12, 8)) / 3.0,
+              "l2": jax.random.normal(k2, (8, 4)) / 3.0}
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (N,) + x.shape) + 0.0, params)
+    part = Partition.from_rules(stacked, (("l1", "shared"),), default="local")
+
+    def loss_fn(p, batch, k):
+        x, y = batch
+        logits = jnp.tanh(x @ p["l1"]) @ p["l2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    bk = jax.random.PRNGKey(5)
+    batches = (jax.random.normal(bk, (T, N, 6, 12)),
+               jax.random.randint(jax.random.fold_in(bk, 1), (T, N, 6), 0, 4))
+    return stacked, part, loss_fn, batches
+
+
+@pytest.mark.parametrize("schedule", ["dense", "circulant"])
+def test_partpsp_engine_matches_loop(schedule):
+    stacked, part, loss_fn, batches = _mlp_setup()
+    cfg = make_baseline_config("partpsp", b=5.0, gamma_n=1e-4, c_prime=CP,
+                               lam=LAM, schedule=schedule, sync_interval=3)
+    plan = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                      use_kernels=False, sync_interval=3)
+    cfg_r = plan.resolve_partpsp(cfg)
+    state0 = partpsp_init(stacked, part, cfg_r)
+    base = jax.random.PRNGKey(9)
+
+    state = state0
+    for t in range(T):
+        batch_t = jax.tree_util.tree_map(lambda x: x[t], batches)
+        state, _ = partpsp_step(state, batch_t,
+                                jax.random.fold_in(base, state.dpps.t),
+                                cfg=cfg_r, partition=part, loss_fn=loss_fn,
+                                **plan.mix_at(t))
+
+    engine = jax.jit(functools.partial(
+        run_partpsp, cfg=cfg, partition=part, loss_fn=loss_fn, plan=plan))
+    state_e, traj = engine(state0, batches, base)
+
+    _assert_trees_close(state.dpps.push.s, state_e.dpps.push.s)
+    _assert_trees_close(state.local, state_e.local)
+    np.testing.assert_allclose(np.asarray(state.dpps.sens.s_local),
+                               np.asarray(state_e.dpps.sens.s_local),
+                               rtol=1e-5)
+    assert traj["loss_mean"].shape == (T,)
+    assert np.isfinite(np.asarray(traj["loss_mean"])).all()
+
+
+def test_partpsp_engine_track_real():
+    """track_real computes the exact sensitivity inside the scan."""
+    stacked, part, loss_fn, batches = _mlp_setup()
+    cfg = make_baseline_config("partpsp", b=5.0, gamma_n=1e-4, c_prime=CP,
+                               lam=LAM)
+    plan = ProtocolPlan.from_topology(TOPO, schedule="dense",
+                                      use_kernels=False)
+    state0 = partpsp_init(stacked, part, plan.resolve_partpsp(cfg))
+    _, traj = jax.jit(functools.partial(
+        run_partpsp, cfg=cfg, partition=part, loss_fn=loss_fn, plan=plan,
+        track_real=True))(state0, batches, jax.random.PRNGKey(2))
+    real = np.asarray(traj["sensitivity_real"])
+    est = np.asarray(traj["sensitivity_estimate"])
+    assert real.shape == (T,)
+    # Remark 1's guarantee: the estimate upper-bounds reality every round.
+    assert (real <= est + 1e-4).all()
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine (shard_map): noiseless bit-equivalence + collective lowering
+# ---------------------------------------------------------------------------
+
+def _mesh():
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 forced host devices (see conftest XLA_FLAGS)")
+    devs = np.asarray(jax.devices()[:4]).reshape(4, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+@pytest.mark.parametrize("schedule", ["dense", "circulant"])
+def test_sharded_dpps_matches_engine_noiseless(schedule):
+    mesh = _mesh()
+    topo = DOutGraph(n_nodes=N, d=3)
+    cp, lam = calibrate_constants(topo)
+    cfg = DPPSConfig(noise=False, gamma_n=0.0, c_prime=cp, lam=lam,
+                     sync_interval=3, schedule=schedule)
+    plan = ProtocolPlan.from_topology(topo, mesh=mesh, schedule=schedule,
+                                      use_kernels=False, sync_interval=3)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    base = jax.random.PRNGKey(42)
+    cfg_r = plan.resolve_dpps(cfg)
+
+    ref, traj_ref = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))(
+        dpps_init(s0, cfg_r), eps_seq, base)
+    sh, traj_sh = shard_run_dpps(mesh, dpps_init(s0, cfg_r), eps_seq, base,
+                                 cfg=cfg, plan=plan)
+    _assert_trees_close(ref.push.s, sh.push.s, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(traj_ref["sensitivity_estimate"]),
+                               np.asarray(traj_sh["sensitivity_estimate"]),
+                               rtol=1e-5)
+
+
+def test_sharded_partpsp_matches_engine_noiseless():
+    mesh = _mesh()
+    stacked, part, loss_fn, batches = _mlp_setup()
+    cfg = make_baseline_config("sgp", c_prime=CP, lam=LAM, sync_interval=3)
+    plan = ProtocolPlan.from_topology(TOPO, mesh=mesh, use_kernels=False,
+                                      sync_interval=3)
+    state0 = partpsp_init(stacked, part, plan.resolve_partpsp(cfg))
+    base = jax.random.PRNGKey(9)
+
+    ref, _ = jax.jit(functools.partial(
+        run_partpsp, cfg=cfg, partition=part, loss_fn=loss_fn, plan=plan))(
+        state0, batches, base)
+    sh, traj = shard_run_partpsp(mesh, state0, batches, base, cfg=cfg,
+                                 partition=part, loss_fn=loss_fn, plan=plan)
+    _assert_trees_close(ref.dpps.push.s, sh.dpps.push.s, atol=1e-5)
+    _assert_trees_close(ref.local, sh.local, atol=1e-5)
+    assert "loss_per_node" not in traj  # per-node series dropped when sharded
+
+
+def test_sharded_noised_runs_and_is_finite():
+    mesh = _mesh()
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM)
+    plan = ProtocolPlan.from_topology(TOPO, mesh=mesh, use_kernels=False)
+    s0 = _s0()
+    st, traj = shard_run_dpps(mesh, dpps_init(s0, plan.resolve_dpps(cfg)),
+                              _eps_seq(s0), jax.random.PRNGKey(1),
+                              cfg=cfg, plan=plan)
+    assert all(np.isfinite(np.asarray(x)).all() for x in st.push.s)
+    assert np.isfinite(np.asarray(traj["sensitivity_used"])).all()
+
+
+@pytest.mark.parametrize("schedule,marker", [
+    ("circulant", "collective-permute"),
+    ("dense", "all-gather"),
+])
+def test_sharded_gossip_lowers_to_collectives(schedule, marker):
+    """The tentpole's lowering claim, pinned on compiled HLO."""
+    mesh = _mesh()
+    cfg = DPPSConfig(noise=False, gamma_n=0.0, c_prime=CP, lam=LAM,
+                     schedule=schedule)
+    plan = ProtocolPlan.from_topology(TOPO, mesh=mesh, schedule=schedule,
+                                      use_kernels=False)
+    s0 = [jax.random.normal(jax.random.PRNGKey(0), (N, 16))]
+    eps_seq = [jnp.zeros((T,) + s0[0].shape)]
+    fn = functools.partial(shard_run_dpps, mesh, cfg=cfg, plan=plan)
+    txt = jax.jit(lambda st, eps, k: fn(st, eps, k)).lower(
+        dpps_init(s0, plan.resolve_dpps(cfg)), eps_seq,
+        jax.random.PRNGKey(0)).compile().as_text()
+    assert marker in txt
+
+
+# ---------------------------------------------------------------------------
+# ProtocolPlan + decode driver
+# ---------------------------------------------------------------------------
+
+def test_plan_auto_choices():
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=None,
+                                      sync_interval="auto")
+    assert plan.schedule == "circulant"          # d-Out is circulant
+    assert plan.offsets == (0, 1)
+    assert plan.use_kernels is False             # CPU backend in tests
+    assert plan.sync_interval == 2               # max(2, 2 * period), period 1
+
+    exp = ProtocolPlan.from_topology(ExpGraph(n_nodes=10),
+                                     sync_interval="auto")
+    assert exp.period == ExpGraph(n_nodes=10).period
+    assert exp.mix_weights.shape == (exp.period, len(exp.offsets))
+    # every round's weights live on the static superset and sum to 1
+    np.testing.assert_allclose(np.asarray(exp.mix_weights).sum(axis=1), 1.0,
+                               rtol=1e-6)
+
+    cfg = DPPSConfig(schedule="dense", sync_interval=0)
+    resolved = plan.resolve_dpps(cfg)
+    assert resolved.schedule == "circulant"
+    assert resolved.sync_interval == 2
+
+
+def test_plan_dense_forced_for_non_circulant_request():
+    with pytest.raises(ValueError):
+        ProtocolPlan.from_topology(TOPO, schedule="bogus")
+
+
+def test_run_decode_scans_and_feeds_back():
+    """Greedy-ish sanity: sampled token feeds back as next input."""
+    vocab, b, steps = 7, 3, 5
+
+    def decode_fn(cache, tok, pos):
+        # logits peak at (tok + 1) mod vocab; cache counts calls
+        logits = jax.nn.one_hot((tok + 1) % vocab, vocab) * 50.0
+        return logits, cache + 1
+
+    tok0 = jnp.zeros((b,), jnp.int32)
+    toks, cache = jax.jit(functools.partial(
+        run_decode, decode_fn, start_pos=4, steps=steps, temperature=0.5))(
+        jnp.zeros(()), tok0, jax.random.PRNGKey(0))
+    assert toks.shape == (steps, b)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.arange(1, steps + 1)[:, None] % vocab
+                                  * np.ones((1, b), np.int64))
+    assert int(cache) == steps

@@ -2,6 +2,8 @@
 (B-window strong connectivity), and the paper's connectivity/λ relations."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import (

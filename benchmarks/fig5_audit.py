@@ -1,0 +1,189 @@
+"""Beyond-paper Fig. 5 — empirical vs theoretical epsilon across noise
+mechanisms and threat models (the privacy audit lab, repro.audit).
+
+For each (mechanism x threat model) cell the distinguishing attack of
+``repro.audit.attacks`` runs the real protocol on adjacent Def. 2-4 inputs
+whose L1 distance exactly equals the broadcast sensitivity, and reports a
+Clopper–Pearson empirical epsilon lower bound next to the ledger's
+theoretical claim.
+
+Claims validated (assertions):
+
+* The honest Laplace mechanism survives the battery under *all three*
+  threat models: every empirical lower bound stays below the theoretical
+  epsilon (the paper's Theorem-1 guarantee holds against the strongest
+  adversary we field).
+* The deliberately-broken mechanism (noise scale halved) is FLAGGED —
+  the harness has the statistical power to catch a real violation, so the
+  green cells above are evidence, not vacuity.
+* Graph-homomorphic correlated noise (Vlaski & Sayed, arXiv:2010.12288)
+  separates by threat model: it passes under the local eavesdropper but is
+  FLAGGED under the global observer, whose sum test cancels the zero-sum
+  noise. Protocol-level DP claims are threat-model claims.
+
+Also reported (not asserted): the Gaussian mechanism's (loose) bound, the
+reconstruction-attack error table, and a membership-inference epsilon on
+PartPSP-trained shared parameters.
+
+    PYTHONPATH=src python -m benchmarks.run --only fig5
+    PYTHONPATH=src python -m benchmarks.fig5_audit --smoke \
+        --ledger-out audit_ledger.jsonl     # CI artifact mode
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.audit import (
+    AuditConfig,
+    CURIOUS_NEIGHBOR,
+    GLOBAL_OBSERVER,
+    LOCAL_EAVESDROPPER,
+    THREAT_MODELS,
+    distinguishing_attack,
+    example_scores,
+    get_mechanism,
+    membership_inference,
+    reconstruction_attack,
+)
+
+AUDITED_MECHANISMS = ("laplace", "gaussian", "graph_homomorphic",
+                      "broken_laplace")
+
+
+def run_grid(trials: int = 1500, n_nodes: int = 4, seed: int = 0):
+    """The full mechanism x threat battery; returns DistinguishingResults."""
+    audit = AuditConfig(trials=trials, n_nodes=n_nodes, seed=seed)
+    results = []
+    for mech_name in AUDITED_MECHANISMS:
+        for threat in THREAT_MODELS:
+            results.append(distinguishing_attack(
+                threat, mechanism=get_mechanism(mech_name), audit=audit))
+    return results
+
+
+def run_membership(steps: int = 60, trials: int = 200):
+    """Membership inference on PartPSP shared parameters (reduced MLP).
+
+    Trains the benchmark MLP with PartPSP-1, then thresholds per-example
+    losses of node 0's round-0 training batch (members) against fresh
+    draws from the same task (non-members) under the consensus params.
+    """
+    import functools
+
+    import jax.numpy as jnp
+
+    from benchmarks.common import SEED, build_setup, mlp_loss
+    from repro.core.partpsp import consensus_params
+    from repro.engine import run_partpsp, run_segments
+
+    _, cfg, part, state, plan, task, batch_at, key = build_setup(
+        algorithm="partpsp", partition_name="partpsp-1", topology="2-out",
+        b=1.0, gamma_n=1e-4)
+    cfg = plan.resolve_partpsp(cfg)
+    run_chunk = jax.jit(functools.partial(
+        run_partpsp, cfg=cfg, partition=part, loss_fn=mlp_loss, plan=plan))
+    for _, _, state, _ in run_segments(run_chunk, state, batch_at, key,
+                                       steps=steps, chunk=plan.chunk):
+        pass
+    p0 = jax.tree_util.tree_map(lambda x: x[0],
+                                consensus_params(state, part))
+
+    xb, yb = batch_at(0)
+    x_in, y_in = xb[0][:trials], yb[0][:trials]
+    x_out, y_out = task.sample(jax.random.PRNGKey(SEED + 123), trials)
+    key_s = jax.random.PRNGKey(0)
+    s_in = example_scores(mlp_loss, p0, jnp.asarray(x_in),
+                          jnp.asarray(y_in), key_s)
+    s_out = example_scores(mlp_loss, p0, jnp.asarray(x_out),
+                           jnp.asarray(y_out), key_s)
+    return membership_inference(s_in, s_out)
+
+
+def main(steps: int = 1500, ledger_out: str | None = None) -> list[str]:
+    """Benchmark-harness entry: ``steps`` doubles as the trial count.
+
+    Trial counts below 400 are raised to 400 — under that, the
+    Clopper–Pearson intervals are too wide for the broken-mechanism
+    flagging claim to have the power the assertions rely on.
+    """
+    trials = max(int(steps), 400)
+    rows: list[str] = []
+    if trials != int(steps):
+        print(f"fig5: raising trials {steps} -> {trials} "
+              "(minimum for the flagging claims' statistical power)")
+    t0 = time.time()
+    results = run_grid(trials=trials)
+    for r in results:
+        us = (time.time() - t0) / len(results) * 1e6
+        rows.append(
+            f"fig5/{r.mechanism}/{r.threat},{us:.0f},"
+            f"eps_theory={r.theoretical_epsilon:.3f};"
+            f"eps_emp={r.empirical.epsilon_lower:.3f};"
+            f"flagged={r.flagged}")
+
+    if ledger_out:
+        # One combined JSONL: the grid's per-round ledgers + verdicts.
+        # Written *before* the claim assertions so a failing audit still
+        # leaves its evidence on disk (CI uploads it with if: always()).
+        with open(ledger_out, "w") as fh:
+            for r in results:
+                for e in r.ledger.entries:
+                    fh.write(json.dumps(
+                        {**e, "threat": r.threat,
+                         "empirical_epsilon_lower":
+                             r.empirical.epsilon_lower,
+                         "flagged": r.flagged}) + "\n")
+        rows.append(f"fig5/ledger,0,path={ledger_out}")
+
+    by = {(r.mechanism, r.threat): r for r in results}
+    # Claim 1: honest Laplace survives every threat model.
+    for threat in THREAT_MODELS:
+        r = by[("laplace", threat.name)]
+        assert not r.flagged, (
+            f"Laplace DPPS leaked more than claimed under {threat.name}: "
+            f"empirical {r.empirical.epsilon_lower:.3f} > "
+            f"theoretical {r.theoretical_epsilon:.3f}")
+    # Claim 2: the harness catches a broken mechanism.
+    assert any(by[("broken_laplace", t.name)].flagged
+               for t in THREAT_MODELS), \
+        "attack battery failed to flag the half-noise mechanism"
+    # Claim 3: graph-homomorphic noise is threat-model dependent.
+    assert not by[("graph_homomorphic", LOCAL_EAVESDROPPER.name)].flagged
+    assert by[("graph_homomorphic", GLOBAL_OBSERVER.name)].flagged, \
+        "global observer failed to break zero-sum correlated noise"
+
+    # Reconstruction table (reported).
+    for mech_name in ("laplace", "graph_homomorphic"):
+        rec = reconstruction_attack(
+            mechanism=get_mechanism(mech_name),
+            audit=AuditConfig(trials=min(trials, 800)))
+        rows.append(f"fig5/reconstruct/{mech_name},0,"
+                    f"victim_err={rec['victim_err']:.3f};"
+                    f"sum_err={rec['sum_err']:.4f}")
+    return rows
+
+
+def cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=1500)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny battery (N=4, few hundred trials) for CI")
+    ap.add_argument("--ledger-out", default=None)
+    ap.add_argument("--with-membership", action="store_true",
+                    help="also run the PartPSP membership-inference attack")
+    args = ap.parse_args()
+    trials = 400 if args.smoke else args.trials
+    for row in main(trials, ledger_out=args.ledger_out):
+        print(row)
+    if args.with_membership:
+        est = run_membership()
+        print(f"fig5/membership/partpsp-1,0,"
+              f"eps_emp={est.epsilon_lower:.3f};trials={est.trials}")
+
+
+if __name__ == "__main__":
+    cli()

@@ -16,21 +16,23 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,fig4,table2,table3,table4,"
-                         "kernels,roofline")
+                    help="comma list: fig2,fig3,fig4,fig5,table2,table3,"
+                         "table4,kernels,roofline")
     ap.add_argument("--steps", type=int, default=None,
                     help="override per-benchmark step counts (smoke: 20)")
     ap.add_argument("--full", action="store_true", help="paper-size grids")
     args = ap.parse_args()
 
     from benchmarks import (fig2_sensitivity, fig3_ras, fig4_scale,
-                            kernel_bench, roofline, table2_accuracy,
-                            table3_real_vs_esti, table4_time)
+                            fig5_audit, kernel_bench, roofline,
+                            table2_accuracy, table3_real_vs_esti,
+                            table4_time)
 
     suites = {
         "fig2": lambda: fig2_sensitivity.main(args.steps or 120),
         "fig3": lambda: fig3_ras.main(args.steps or 100),
         "fig4": lambda: fig4_scale.main(args.steps or 80),
+        "fig5": lambda: fig5_audit.main(args.steps or 1500),
         "table2": lambda: table2_accuracy.main(args.steps or 250, args.full),
         "table3": lambda: table3_real_vs_esti.main(args.steps or 250),
         "table4": lambda: table4_time.main(args.steps or 150),

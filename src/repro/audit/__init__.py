@@ -1,0 +1,79 @@
+"""repro.audit — empirical privacy audit lab for DPPS/PartPSP.
+
+The rest of the repo *reproduces* the paper's mechanism; this subsystem
+*stress-tests* its central claim. It records what the network actually
+reveals (``transcript``), models who is listening (``threat``), attacks
+the recordings (``attacks``), accounts what was promised (``ledger``),
+and swaps the noise generator itself (``mechanisms``) so alternative —
+and deliberately broken — mechanisms face the same battery.
+
+Typical session::
+
+    from repro.audit import (AuditConfig, distinguishing_attack,
+                             LOCAL_EAVESDROPPER, get_mechanism)
+    r = distinguishing_attack(LOCAL_EAVESDROPPER,
+                              mechanism=get_mechanism("laplace"),
+                              audit=AuditConfig(trials=2000))
+    assert not r.flagged     # empirical epsilon stays below the claim
+
+See benchmarks/fig5_audit.py for the full mechanism x threat-model grid
+and EXPERIMENTS.md SAudit for measured numbers.
+"""
+from repro.audit.attacks import (
+    AuditConfig,
+    DistinguishingResult,
+    EpsilonEstimate,
+    clopper_pearson,
+    distinguishing_attack,
+    empirical_epsilon_lower_bound,
+    example_scores,
+    membership_inference,
+    reconstruction_attack,
+)
+from repro.audit.ledger import PrivacyLedger
+from repro.audit.mechanisms import (
+    GaussianMechanism,
+    GraphHomomorphicMechanism,
+    LaplaceMechanism,
+    MECHANISMS,
+    NoiseMechanism,
+    get_mechanism,
+    theoretical_epsilon,
+)
+from repro.audit.threat import (
+    CURIOUS_NEIGHBOR,
+    GLOBAL_OBSERVER,
+    LOCAL_EAVESDROPPER,
+    THREAT_MODELS,
+    Observation,
+    ThreatModel,
+)
+from repro.audit.transcript import Transcript, TranscriptTap
+
+__all__ = [
+    "AuditConfig",
+    "CURIOUS_NEIGHBOR",
+    "DistinguishingResult",
+    "EpsilonEstimate",
+    "GLOBAL_OBSERVER",
+    "GaussianMechanism",
+    "GraphHomomorphicMechanism",
+    "LOCAL_EAVESDROPPER",
+    "LaplaceMechanism",
+    "MECHANISMS",
+    "NoiseMechanism",
+    "Observation",
+    "PrivacyLedger",
+    "THREAT_MODELS",
+    "ThreatModel",
+    "Transcript",
+    "TranscriptTap",
+    "clopper_pearson",
+    "distinguishing_attack",
+    "empirical_epsilon_lower_bound",
+    "example_scores",
+    "get_mechanism",
+    "membership_inference",
+    "reconstruction_attack",
+    "theoretical_epsilon",
+]

@@ -1,0 +1,160 @@
+"""Pluggable per-round noise mechanisms for the DPPS protocol.
+
+``repro.core.dpps.dpps_step`` draws its Eq.-8 noise through the
+``mechanism`` seam when one is supplied (the same injection style as the
+``gossip_fn`` / ``node_ops`` engine seams). A mechanism receives the round
+key, the node-stacked tree to noise, and the calibrated Laplace scale
+``S / b`` (network sensitivity over privacy budget), and returns the raw
+noise tree — ``dpps_step`` applies the ``gamma_n`` rate and tracks the
+noise L1 norms exactly as for the built-in path.
+
+Mechanisms:
+
+* :class:`LaplaceMechanism`  — the paper's Lemma-1 mechanism; with
+  ``scale_factor=1`` it is bit-identical to ``mechanism=None`` (pinned in
+  tests/test_audit.py). ``scale_factor`` exists for the audit battery:
+  0.5 is the deliberately-broken variant the attack harness must flag.
+* :class:`GaussianMechanism` — classical (eps, delta) Gaussian noise with
+  ``sigma = (S/b) * sqrt(2 ln(1.25/delta))``; conservative here because it
+  is calibrated on the L1 sensitivity while Gaussian DP only needs L2
+  (||.||_2 <= ||.||_1).
+* :class:`GraphHomomorphicMechanism` — network-correlated zero-sum noise in
+  the style of Vlaski & Sayed (arXiv:2010.12288): each node's draw has the
+  network mean subtracted, so exact averaging (and any adversary who can
+  sum all N messages) cancels it entirely. Private against local views,
+  *not* against a global observer — the audit battery demonstrates the
+  gap empirically (benchmarks/fig5_audit.py).
+
+Every mechanism reports its nominal per-round epsilon for the ledger via
+:meth:`NoiseMechanism.epsilon_per_round`; ``theoretical_epsilon`` below is
+what the ledger and the acceptance tests compare empirical lower bounds
+against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dpps import LOCAL_NODE_OPS, NodeOps
+from repro.core.privacy import laplace_noise_tree, noise_tree
+from repro.core.tree_utils import PyTree
+
+__all__ = [
+    "NoiseMechanism",
+    "LaplaceMechanism",
+    "GaussianMechanism",
+    "GraphHomomorphicMechanism",
+    "MECHANISMS",
+    "get_mechanism",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseMechanism:
+    """Base mechanism: interface + the pure-DP Laplace accounting default."""
+
+    name: str = "laplace"
+
+    def sample(self, key: jax.Array, tree: PyTree, scale: jnp.ndarray,
+               *, node_ops: NodeOps = LOCAL_NODE_OPS) -> PyTree:
+        """Raw noise tree for this round; ``scale`` is the Laplace scale S/b."""
+        raise NotImplementedError
+
+    def epsilon_per_round(self, b: float, gamma_n: float) -> float:
+        """Nominal per-round epsilon claimed by this mechanism (Theorem 1
+        composition uses this linearly)."""
+        if gamma_n <= 0:
+            return float("inf")
+        return b / gamma_n
+
+    @property
+    def delta(self) -> float:
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LaplaceMechanism(NoiseMechanism):
+    """Paper Lemma 1: i.i.d. Lap(0, S/b) per element.
+
+    ``scale_factor`` rescales the calibrated noise — 1.0 reproduces the
+    built-in path bit-for-bit; values < 1 under-noise (the audit battery's
+    deliberately-broken mechanism) and inflate the true epsilon to
+    ``(b / gamma_n) / scale_factor`` while still *claiming*
+    ``b / gamma_n``.
+    """
+
+    name: str = "laplace"
+    scale_factor: float = 1.0
+
+    def sample(self, key, tree, scale, *, node_ops=LOCAL_NODE_OPS):
+        return laplace_noise_tree(key, tree, scale * self.scale_factor)
+
+    def true_epsilon_per_round(self, b: float, gamma_n: float) -> float:
+        """The epsilon actually delivered (differs when scale_factor != 1)."""
+        return self.epsilon_per_round(b, gamma_n) / self.scale_factor
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianMechanism(NoiseMechanism):
+    """(eps, delta) Gaussian mechanism, sigma = (S/b) sqrt(2 ln(1.25/delta))."""
+
+    name: str = "gaussian"
+    delta_: float = 1e-5
+
+    def sample(self, key, tree, scale, *, node_ops=LOCAL_NODE_OPS):
+        sigma_mult = math.sqrt(2.0 * math.log(1.25 / self.delta_))
+        return noise_tree(key, tree,
+                          jnp.asarray(scale, jnp.float32) * sigma_mult,
+                          sampler=jax.random.normal)
+
+    @property
+    def delta(self) -> float:
+        return self.delta_
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphHomomorphicMechanism(NoiseMechanism):
+    """Zero-sum correlated noise: q_i = z_i - mean_j z_j, z i.i.d. Laplace.
+
+    The network mean of the injected noise is exactly zero every round, so
+    the consensus average is undisturbed (the graph-homomorphic property of
+    Vlaski & Sayed) — and so a global observer summing all N messages
+    removes the noise entirely. The nominal epsilon reported below is the
+    *local-view* figure (each marginal is approximately Laplace with
+    (1 - 1/N) of the scale); against a global observer the true epsilon is
+    unbounded, which the attack battery measures rather than asserts.
+    """
+
+    name: str = "graph_homomorphic"
+
+    def sample(self, key, tree, scale, *, node_ops=LOCAL_NODE_OPS):
+        z = laplace_noise_tree(key, tree, scale)
+        return jax.tree_util.tree_map(
+            lambda x: x - jnp.broadcast_to(node_ops.leaf_mean(x), x.shape), z)
+
+
+MECHANISMS = {
+    "laplace": LaplaceMechanism(),
+    "gaussian": GaussianMechanism(),
+    "graph_homomorphic": GraphHomomorphicMechanism(),
+    "broken_laplace": LaplaceMechanism(name="broken_laplace",
+                                       scale_factor=0.5),
+}
+
+
+def get_mechanism(name: str) -> NoiseMechanism:
+    try:
+        return MECHANISMS[name]
+    except KeyError:
+        raise ValueError(f"unknown mechanism {name!r}; "
+                         f"have {sorted(MECHANISMS)}") from None
+
+
+def theoretical_epsilon(mechanism: NoiseMechanism | None, b: float,
+                        gamma_n: float, rounds: int = 1) -> float:
+    """Ledger-side claimed epsilon after ``rounds`` (linear composition)."""
+    mech = mechanism or LaplaceMechanism()
+    return rounds * mech.epsilon_per_round(b, gamma_n)

@@ -1,0 +1,129 @@
+"""Threat models: what each adversary class sees of a DPPS transcript.
+
+Decentralized gossip privacy depends sharply on who the adversary is
+(Koskela & Kulkarni, arXiv:2505.19969): a link eavesdropper sees one
+node's wire, a curious neighbor sees everything arriving at its own
+in-edges, and a global observer sees every message in the network. The
+paper's Theorem 1 guarantee is stated against the per-round query release
+— i.e. against the *strongest* of these — so the empirical epsilon
+measured under every view must stay below the theoretical one (the
+acceptance property tests/test_audit.py pins). Mechanisms whose guarantee
+is threat-model-dependent (graph-homomorphic correlated noise, Vlaski &
+Sayed arXiv:2010.12288) separate cleanly here: private against a local
+eavesdropper, fully broken against a global observer who can sum the
+zero-sum noise away.
+
+A :class:`ThreatModel` is a pure *view*: it never touches protocol state,
+only selects rows of a recorded :class:`~repro.audit.transcript.Transcript`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.audit.transcript import Transcript
+from repro.core.topology import Topology
+
+__all__ = [
+    "Observation",
+    "ThreatModel",
+    "LOCAL_EAVESDROPPER",
+    "CURIOUS_NEIGHBOR",
+    "GLOBAL_OBSERVER",
+    "THREAT_MODELS",
+]
+
+
+class Observation(NamedTuple):
+    """An adversary's view of a transcript.
+
+    ``visible`` are the node indices whose outgoing wire the adversary
+    reads; ``messages``/``sens_local``/``weights`` are the corresponding
+    transcript rows ((T, k, d_s) / (T, k) / (T, k)); ``sensitivity`` is the
+    broadcast network scalar (T,), observable by every adversary class
+    because Alg. 1 line 4 sends it in the clear.
+    """
+
+    visible: tuple[int, ...]
+    messages: jnp.ndarray | None
+    sens_local: jnp.ndarray | None
+    sensitivity: jnp.ndarray | None
+    weights: jnp.ndarray | None
+
+    def node_messages(self, node: int) -> jnp.ndarray:
+        """(T, d_s) message stream of one visible node."""
+        if self.messages is None:
+            raise ValueError("transcript was recorded without messages")
+        return self.messages[:, self.visible.index(node), :]
+
+
+@dataclasses.dataclass(frozen=True)
+class ThreatModel:
+    """A named view over transcripts; ``kind`` picks the visibility rule.
+
+    * ``eavesdropper`` — taps the victim's outgoing links only: sees the
+      victim's noised messages, weight, and the broadcast scalars.
+    * ``neighbor``     — an honest-but-curious out-neighbor of the victim:
+      sees every message arriving on its own in-edges (the victim's among
+      them). Needs the ``topo`` to resolve its in-neighborhood.
+    * ``global``       — sees every node's wire (the composition of all
+      eavesdroppers; the strongest view and the one Theorem 1 is priced
+      against).
+    """
+
+    name: str
+    kind: str
+
+    def __post_init__(self):
+        if self.kind not in ("eavesdropper", "neighbor", "global"):
+            raise ValueError(f"unknown threat kind {self.kind!r}")
+
+    def visible_nodes(
+        self, *, victim: int, n_nodes: int, topo: Topology | None = None,
+        t: int = 0,
+    ) -> tuple[int, ...]:
+        if self.kind == "global":
+            return tuple(range(n_nodes))
+        if self.kind == "eavesdropper":
+            return (victim,)
+        if topo is None:
+            raise ValueError("the curious-neighbor view needs topo= to "
+                             "resolve the adversary's in-edges")
+        edges = topo.edges(t)
+        receivers = sorted(r for (s, r) in edges if s == victim and r != victim)
+        if not receivers:
+            raise ValueError(f"victim {victim} has no out-neighbor to be "
+                             "curious")
+        adversary = receivers[0]
+        senders = sorted(s for (s, r) in edges if r == adversary)
+        return tuple(senders)
+
+    def observe(
+        self,
+        transcript: Transcript,
+        *,
+        victim: int,
+        topo: Topology | None = None,
+        t: int = 0,
+    ) -> Observation:
+        visible = self.visible_nodes(victim=victim,
+                                     n_nodes=transcript.n_nodes,
+                                     topo=topo, t=t)
+        idx = jnp.asarray(visible)
+        take = lambda x: None if x is None else x[:, idx]
+        return Observation(
+            visible=visible,
+            messages=take(transcript.messages),
+            sens_local=take(transcript.sens_local),
+            sensitivity=transcript.sensitivity,
+            weights=take(transcript.weights),
+        )
+
+
+LOCAL_EAVESDROPPER = ThreatModel("local_eavesdropper", "eavesdropper")
+CURIOUS_NEIGHBOR = ThreatModel("curious_neighbor", "neighbor")
+GLOBAL_OBSERVER = ThreatModel("global_observer", "global")
+
+THREAT_MODELS = (LOCAL_EAVESDROPPER, CURIOUS_NEIGHBOR, GLOBAL_OBSERVER)

@@ -1,0 +1,112 @@
+"""Transcript taps: record exactly what the network reveals per round.
+
+The DPPS wire protocol (paper Alg. 1) makes three quantities visible
+outside a node each round:
+
+* the noised outgoing message ``s^(t+1/2) + gamma_n * n^(t)`` (Eq. 8-9) —
+  every out-neighbor (and anyone tapping the link) receives it;
+* the push-sum weight ``a_i`` gossiped alongside it (Eq. 9);
+* the per-node sensitivity scalar ``S_i`` broadcast for the network max
+  (Alg. 1 line 4) — sent in the clear by construction.
+
+A :class:`TranscriptTap` is a static spec of which of those to record.
+``repro.core.dpps.dpps_step`` calls :meth:`TranscriptTap.capture` when a
+tap is supplied, appending ``tap_*`` entries to the round diagnostics; the
+scan drivers (``repro.engine.rounds``) stack them into (T, ...) trajectory
+leaves, and :meth:`Transcript.from_trajectory` reassembles the result into
+a round-indexed transcript the threat models in :mod:`repro.audit.threat`
+take views over.
+
+Zero-cost contract: with ``tap=None`` (the default everywhere) no capture
+code is traced at all — the compiled program is bit-identical to the
+engine without the tap (pinned against the PR-1 driver in
+tests/test_audit.py). With a tap enabled the protocol state trajectory is
+unchanged; only extra scan outputs are emitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_utils import PyTree
+
+__all__ = ["TranscriptTap", "Transcript", "flatten_messages"]
+
+TAP_PREFIX = "tap_"
+
+
+def flatten_messages(tree: PyTree) -> jnp.ndarray:
+    """Node-stacked tree -> (N, d_s) wire layout (leaves concatenated)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    return jnp.concatenate([x.reshape(n, -1) for x in leaves], axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TranscriptTap:
+    """Which wire-visible quantities to record each round.
+
+    All fields are static trace-time switches; the tap itself holds no
+    arrays. ``messages`` dominates the recording cost (T x N x d_s floats)
+    — disable it for long ledger-only runs.
+    """
+
+    messages: bool = True      # noised outgoing messages, (N, d_s)
+    sensitivity: bool = True   # broadcast S_i scalars (N,) + network S ()
+    weights: bool = True       # outgoing push-sum weights a_i, (N,)
+
+    def capture(
+        self,
+        *,
+        s_noise: PyTree,
+        a_out: jnp.ndarray,
+        sens_local: jnp.ndarray,
+        sens_scalar: jnp.ndarray,
+    ) -> dict[str, jnp.ndarray]:
+        """Called by ``dpps_step``; returns the round's ``tap_*`` entries."""
+        out: dict[str, jnp.ndarray] = {}
+        if self.messages:
+            out[TAP_PREFIX + "messages"] = flatten_messages(s_noise)
+        if self.sensitivity:
+            out[TAP_PREFIX + "sens_local"] = sens_local
+            out[TAP_PREFIX + "sensitivity"] = sens_scalar
+        if self.weights:
+            out[TAP_PREFIX + "weights"] = a_out
+        return out
+
+
+class Transcript(NamedTuple):
+    """Round-indexed wire recording; ``None`` fields were not tapped.
+
+    Shapes: ``messages`` (T, N, d_s); ``sens_local`` (T, N);
+    ``sensitivity`` (T,); ``weights`` (T, N).
+    """
+
+    messages: jnp.ndarray | None
+    sens_local: jnp.ndarray | None
+    sensitivity: jnp.ndarray | None
+    weights: jnp.ndarray | None
+
+    @classmethod
+    def from_trajectory(cls, traj: dict[str, Any]) -> "Transcript":
+        """Extract the ``tap_*`` leaves a scan driver captured."""
+        get = lambda k: traj.get(TAP_PREFIX + k)
+        return cls(messages=get("messages"), sens_local=get("sens_local"),
+                   sensitivity=get("sensitivity"), weights=get("weights"))
+
+    @property
+    def rounds(self) -> int:
+        for x in self:
+            if x is not None:
+                return int(x.shape[0])
+        raise ValueError("empty transcript (tap recorded nothing)")
+
+    @property
+    def n_nodes(self) -> int:
+        for x in (self.messages, self.sens_local, self.weights):
+            if x is not None:
+                return int(x.shape[1])
+        raise ValueError("transcript has no per-node field")

@@ -150,8 +150,15 @@ def partpsp_step(
     return_s_half: bool = False,
     gossip_fn: Any = None,
     node_ops: NodeOps = LOCAL_NODE_OPS,
+    mechanism: Any = None,
+    tap: Any = None,
 ) -> tuple[PartPSPState, dict[str, Any]]:
-    """One PartPSP round. ``batch`` leaves are node-stacked: (N, per_node, ...)."""
+    """One PartPSP round. ``batch`` leaves are node-stacked: (N, per_node, ...).
+
+    ``mechanism`` / ``tap`` are the audit-lab seams forwarded verbatim to
+    :func:`repro.core.dpps.dpps_step` (pluggable noise mechanism, transcript
+    tap); both are zero-cost when ``None``.
+    """
     n_nodes = state.dpps.push.a.shape[0]
     key_loss1, key_loss2, key_noise = jax.random.split(key, 3)
     node_keys1 = jax.random.split(key_loss1, n_nodes)
@@ -193,6 +200,7 @@ def partpsp_step(
         w=w, offsets=offsets, mix_weights=mix_weights,
         return_s_half=return_s_half,
         gossip_fn=gossip_fn, node_ops=node_ops,
+        mechanism=mechanism, tap=tap,
     )
 
     new_state = PartPSPState(dpps=dpps_new, local=local_new)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from repro.core.tree_utils import PyTree, tree_l1_norm_per_node
 
 __all__ = [
+    "noise_like",
+    "noise_tree",
     "laplace_noise_like",
     "laplace_noise_tree",
     "l1_clip_per_node",
@@ -33,26 +35,41 @@ __all__ = [
 ]
 
 
-def laplace_noise_like(key: jax.Array, x: jnp.ndarray, scale) -> jnp.ndarray:
-    """i.i.d. Laplace(0, scale) with the shape/dtype of ``x``.
+def noise_like(key: jax.Array, x: jnp.ndarray, scale, *,
+               sampler=jax.random.laplace) -> jnp.ndarray:
+    """i.i.d. ``sampler`` noise times ``scale`` with the shape/dtype of ``x``.
 
     ``scale`` may be a scalar or broadcastable to node-leading shape
     ((N,) -> per-node scales; the DPPS protocol uses the shared network
-    maximum so all nodes see the same scale).
+    maximum so all nodes see the same scale). ``sampler`` is any
+    ``jax.random``-style draw, e.g. ``jax.random.normal`` for the Gaussian
+    mechanism (repro.audit.mechanisms).
     """
-    noise = jax.random.laplace(key, shape=x.shape, dtype=jnp.float32)
+    noise = sampler(key, shape=x.shape, dtype=jnp.float32)
     scale = jnp.asarray(scale, jnp.float32)
     if scale.ndim == 1 and x.ndim >= 1 and scale.shape[0] == x.shape[0]:
         scale = scale.reshape((-1,) + (1,) * (x.ndim - 1))
     return (noise * scale).astype(x.dtype)
 
 
-def laplace_noise_tree(key: jax.Array, tree: PyTree, scale) -> PyTree:
-    """Independent Laplace noise for every leaf (split keys per leaf)."""
+def noise_tree(key: jax.Array, tree: PyTree, scale, *,
+               sampler=jax.random.laplace) -> PyTree:
+    """Independent ``sampler`` noise for every leaf (split keys per leaf)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
-    noisy = [laplace_noise_like(k, x, scale) for k, x in zip(keys, leaves)]
+    noisy = [noise_like(k, x, scale, sampler=sampler)
+             for k, x in zip(keys, leaves)]
     return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+def laplace_noise_like(key: jax.Array, x: jnp.ndarray, scale) -> jnp.ndarray:
+    """i.i.d. Laplace(0, scale) with the shape/dtype of ``x`` (Lemma 1)."""
+    return noise_like(key, x, scale)
+
+
+def laplace_noise_tree(key: jax.Array, tree: PyTree, scale) -> PyTree:
+    """Independent Laplace noise for every leaf (split keys per leaf)."""
+    return noise_tree(key, tree, scale)
 
 
 def l1_clip_per_node(tree: PyTree, clip: float) -> tuple[PyTree, jnp.ndarray]:
@@ -91,12 +108,18 @@ class PrivacyAccountant:
     Per Theorem 1 each DPPS round is (b / gamma_n)-DP w.r.t. the query
     neighbourhood of Def. 2-4. Synchronization rounds exchange exact values
     and are *not* private; the accountant flags them.
+
+    ``budget`` is an optional epsilon ceiling for the whole run:
+    :meth:`remaining` reports the headroom and :attr:`exhausted` flips once
+    the linear composition exceeds it (``launch/train.py`` warns, and
+    aborts under ``--strict-budget``).
     """
 
     b: float
     gamma_n: float
     rounds: int = 0
     unprotected_rounds: int = 0
+    budget: float | None = None
 
     @property
     def epsilon_per_round(self) -> float:
@@ -106,6 +129,8 @@ class PrivacyAccountant:
 
     @property
     def epsilon_total(self) -> float:
+        if self.rounds == 0:
+            return 0.0  # not 0 * inf = nan when gamma_n <= 0
         return self.rounds * self.epsilon_per_round
 
     def step(self, *, protected: bool = True) -> "PrivacyAccountant":
@@ -115,10 +140,23 @@ class PrivacyAccountant:
             unprotected_rounds=self.unprotected_rounds + (0 if protected else 1),
         )
 
+    def remaining(self) -> float:
+        """Epsilon headroom left under ``budget`` (inf when no budget set)."""
+        if self.budget is None:
+            return float("inf")
+        return max(self.budget - self.epsilon_total, 0.0)
+
+    @property
+    def exhausted(self) -> bool:
+        return self.budget is not None and self.epsilon_total > self.budget
+
     def summary(self) -> dict[str, Any]:
         return {
             "epsilon_per_round": self.epsilon_per_round,
             "epsilon_total": self.epsilon_total,
             "rounds": self.rounds,
             "unprotected_rounds": self.unprotected_rounds,
+            "budget": self.budget,
+            "remaining": self.remaining(),
+            "exhausted": self.exhausted,
         }

@@ -89,18 +89,38 @@ def network_sensitivity(state: SensitivityState) -> jnp.ndarray:
     return jnp.max(state.s_local)
 
 
-def real_sensitivity(s_half: PyTree) -> jnp.ndarray:
+def real_sensitivity(s_half: PyTree, *, chunk: int | None = None) -> jnp.ndarray:
     """Exact max_{i,j} ||s_i^(t+1/2) - s_j^(t+1/2)||_1 (validation only).
 
-    O(N^2 d) — used by tests/benchmarks at small scale, never in the
-    production step.
+    O(N^2 d) compute — used by tests/benchmarks, never in the production
+    step. The dense form materializes an (N, N, d) difference tensor;
+    ``chunk`` bounds that to (chunk, N, d) by sweeping row blocks under
+    ``lax.map`` (sequential, so peak memory is one block), which is what
+    lets privacy audits at N = 64 run on the CPU container. Results are
+    bit-identical to the dense path: every pairwise distance is computed
+    with the same per-leaf reduction order, and the max of block maxima
+    equals the global max exactly. ``chunk=None`` (or ``chunk >= N``)
+    keeps the original single-shot form.
     """
-
-    def pair_dist(x):  # x: (N, ...)
-        flat = x.reshape(x.shape[0], -1)
-        return jnp.sum(jnp.abs(flat[:, None, :] - flat[None, :, :]), axis=-1)
-
     leaves = jax.tree_util.tree_leaves(s_half)
-    dists = [pair_dist(x) for x in leaves]
-    total = sum(dists[1:], start=dists[0])  # (N, N)
-    return jnp.max(total)
+    flats = [x.reshape(x.shape[0], -1) for x in leaves]
+    n = flats[0].shape[0]
+
+    if chunk is None or chunk >= n:
+        dists = [jnp.sum(jnp.abs(f[:, None, :] - f[None, :, :]), axis=-1)
+                 for f in flats]
+        total = sum(dists[1:], start=dists[0])  # (N, N)
+        return jnp.max(total)
+
+    def block_max(i0):
+        # dynamic_slice clamps the final block start to n - chunk; the
+        # resulting row overlap only recomputes pairs, never skips them.
+        dists = []
+        for f in flats:
+            rows = jax.lax.dynamic_slice_in_dim(f, i0, chunk, axis=0)
+            dists.append(jnp.sum(jnp.abs(rows[:, None, :] - f[None, :, :]),
+                                 axis=-1))
+        return jnp.max(sum(dists[1:], start=dists[0]))
+
+    starts = jnp.arange(0, n, chunk)
+    return jnp.max(jax.lax.map(block_max, starts))

@@ -57,8 +57,18 @@ __all__ = [
 
 # Per-node metric trajectories are dropped under sharding (scalar metrics are
 # pmax/pmean-reduced and replicated; per-node series would force ragged
-# out_specs for little diagnostic value on a fleet).
+# out_specs for little diagnostic value on a fleet). Transcript-tap series
+# (repro.audit) are per-node wire recordings and are dropped the same way —
+# the audit lab runs on the single-device engine by design.
 _PER_NODE_METRICS = ("sensitivity_local", "loss_per_node")
+
+
+def _drop_unsharded(traj: dict[str, Any]) -> dict[str, Any]:
+    for name in _PER_NODE_METRICS:
+        traj.pop(name, None)
+    for name in [k for k in traj if k.startswith("tap_")]:
+        traj.pop(name)
+    return traj
 
 
 def _gossip_axis(mesh) -> tuple[str, int]:
@@ -217,9 +227,7 @@ def shard_run_dpps(
 
     def fn(state, eps_seq, key):
         final, traj = inner(state, eps_seq, key)
-        for name in _PER_NODE_METRICS:
-            traj.pop(name, None)
-        return final, traj
+        return final, _drop_unsharded(traj)
 
     state_specs = _dpps_state_specs(state, axis_name)
     eps_specs = jax.tree_util.tree_map(_seq_spec(axis_name), eps_seq)
@@ -259,9 +267,7 @@ def shard_run_partpsp(
 
     def fn(state, batches, key):
         final, traj = inner(state, batches, key)
-        for name in _PER_NODE_METRICS:
-            traj.pop(name, None)
-        return final, traj
+        return final, _drop_unsharded(traj)
 
     state_specs = _partpsp_state_specs(state, axis_name)
     batch_specs = jax.tree_util.tree_map(_seq_spec(axis_name), batches)

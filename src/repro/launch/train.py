@@ -11,6 +11,12 @@ Key flags mirror the paper's experimental grid: --algorithm
 {partpsp,sgp,sgpdp,pedfl}, --b (privacy budget), --gamma-n, --topology
 {dout,exp}, --degree, --sync-interval, --schedule {dense,circulant}.
 
+Privacy accounting (repro.audit.ledger) runs on both drivers: every round
+is recorded in a streaming ledger (per-round epsilon, sensitivity estimate,
+sync/unprotected rounds), serialized to JSONL with --ledger-out. A total
+epsilon ceiling can be set with --privacy-budget; training warns when it is
+exceeded, and aborts mid-run (non-zero exit) under --strict-budget.
+
 Execution drivers (--driver):
 
 * ``engine`` (default) — the scan-compiled engine (repro.engine): training
@@ -31,6 +37,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.audit.ledger import PrivacyLedger
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.partition import Partition
@@ -39,7 +46,6 @@ from repro.core.partpsp import (
     make_baseline_config,
     partpsp_init,
     partpsp_step,
-    privacy_summary,
 )
 from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
 from repro.data import NodeShardedLoader, SyntheticLMStream
@@ -171,6 +177,12 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--ledger-out", default=None,
+                    help="stream the per-round privacy ledger to this JSONL")
+    ap.add_argument("--privacy-budget", type=float, default=None,
+                    help="total epsilon ceiling for the run")
+    ap.add_argument("--strict-budget", action="store_true",
+                    help="abort training once --privacy-budget is exceeded")
     args = ap.parse_args()
     if args.chunk < 1:
         ap.error("--chunk must be >= 1")
@@ -214,6 +226,13 @@ def main() -> None:
     history = []
     t0 = time.time()
 
+    protected = cfg.dpps.noise and cfg.dpps.gamma_n > 0
+    sync_interval = cfg.dpps.sync_interval
+    ledger = PrivacyLedger(
+        b=cfg.dpps.b, gamma_n=cfg.dpps.gamma_n, budget=args.privacy_budget,
+        mechanism="laplace", path=args.ledger_out, algorithm=args.algorithm)
+    budget_hit = False
+
     def log_row(row):
         history.append(row)
         t = row["step"]
@@ -222,29 +241,57 @@ def main() -> None:
                   f"S={row['sensitivity']:.3f} "
                   f"({(time.time()-t0)/(t+1):.2f}s/step)")
 
+    def check_budget() -> bool:
+        nonlocal budget_hit
+        if ledger.accountant.exhausted and not budget_hit:
+            budget_hit = True
+            first = next(e for e in ledger.entries if e["exhausted"])
+            note = (" (engine driver enforces at segment granularity)"
+                    if args.driver == "engine" else "")
+            print(f"WARNING: privacy budget {args.privacy_budget} exceeded "
+                  f"at round {first['round']} (epsilon_total="
+                  f"{first['epsilon_total']:.3f}){note}")
+        return budget_hit and args.strict_budget
+
     if args.driver == "engine":
         for seg0, n, state, traj in run_segments(
                 run_chunk, state, batch_at, base_key,
                 steps=args.steps, chunk=plan.chunk):
+            ledger.record_trajectory(traj, t0=seg0, protected=protected,
+                                     sync_interval=sync_interval)
             for i in range(n):
                 log_row({"step": seg0 + i,
                          "loss": float(traj["loss_mean"][i]),
                          "sensitivity": float(traj["sensitivity_used"][i]),
                          "grad_l1_max": float(traj["grad_l1_max"][i])})
+            if check_budget():
+                break
     else:
         for t in range(args.steps):
             key = jax.random.fold_in(base_key, t)
             state, metrics = step(state, batch_at(t), key)
+            ledger.record_round(
+                t,
+                sensitivity_estimate=float(metrics["sensitivity_estimate"]),
+                sens_local=metrics["sensitivity_local"],
+                protected=protected,
+                synced=is_sync_round(t, sync_interval))
             log_row({"step": t,
                      "loss": float(metrics["loss_mean"]),
                      "sensitivity": float(metrics["sensitivity_used"]),
                      "grad_l1_max": float(metrics["grad_l1_max"])})
+            if check_budget():
+                break
 
-    print("privacy:", json.dumps(privacy_summary(cfg, args.steps)))
+    ledger.close()
+    print("privacy:", json.dumps(ledger.summary()))
+    if args.ledger_out:
+        print("privacy ledger written to", args.ledger_out)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=1)
-    if args.checkpoint:
+    strict_abort = budget_hit and args.strict_budget
+    if args.checkpoint and not strict_abort:
         # consensus shared params are identical across nodes; persist node
         # 0's view (s-bar + its personalized local params) for serving
         final = jax.tree_util.tree_map(
@@ -253,6 +300,13 @@ def main() -> None:
                         metadata={"arch": args.arch,
                                   "algorithm": args.algorithm})
         print("checkpoint written to", args.checkpoint)
+    if strict_abort:
+        if args.checkpoint:
+            # the whole point of strict mode is that over-budget parameters
+            # are never released — including via the serving checkpoint
+            print("checkpoint NOT written (over budget):", args.checkpoint)
+        raise SystemExit(
+            "aborted: privacy budget exhausted (--strict-budget)")
 
 
 if __name__ == "__main__":

@@ -35,15 +35,6 @@ chosen per deployment by ``repro.engine.ProtocolPlan`` rather than by hand:
 The ``gossip_fn`` / ``node_ops`` parameters of :func:`dpps_step` exist for
 that engine layer: they swap the node-axis reductions and the mixing step
 for mesh-collective implementations without touching the protocol maths.
-The privacy-audit lab (:mod:`repro.audit`) adds two more seams of the same
-shape: ``mechanism`` swaps the Laplace draw of Eq. 8 for a pluggable
-:class:`repro.audit.mechanisms.NoiseMechanism` (Gaussian, graph-homomorphic
-correlated noise, deliberately-broken variants), and ``tap`` records the
-exact wire-visible quantities of the round (outgoing noised messages,
-broadcast sensitivity scalars, push-sum weights) for the threat-model views
-in :mod:`repro.audit.threat`. Both default to ``None`` and are provably
-zero-cost when off — the traced program is unchanged
-(tests/test_audit.py pins the compiled HLO against the PR-1 engine).
 """
 from __future__ import annotations
 
@@ -65,20 +56,7 @@ __all__ = [
     "LOCAL_NODE_OPS",
     "dpps_init",
     "dpps_step",
-    "is_sync_round",
 ]
-
-
-def is_sync_round(t, sync_interval: int):
-    """Whether round ``t`` ends with a full synchronization (paper SIII.C).
-
-    The single point of truth for the sync schedule: ``dpps_step`` evaluates
-    it on the traced round counter, and the privacy ledger / training
-    drivers evaluate it host-side to mark unprotected rounds — both must
-    agree or the audit trail misstates which rounds leaked exact values.
-    ``sync_interval`` must be a static int; ``t`` may be traced.
-    """
-    return sync_interval > 0 and (t + 1) % sync_interval == 0
 
 
 class NodeOps(NamedTuple):
@@ -176,8 +154,6 @@ def dpps_step(
     return_s_half: bool = False,
     gossip_fn: Callable[[PushSumState], PushSumState] | None = None,
     node_ops: NodeOps = LOCAL_NODE_OPS,
-    mechanism: Any = None,
-    tap: Any = None,
 ) -> tuple[DPPSState, dict[str, Any]]:
     """One DPPS round. Returns (new state, diagnostics).
 
@@ -189,15 +165,6 @@ def dpps_step(
     network sensitivity actually used for noise, per-node estimates,
     perturbation/noise norms, and the corrected iterates' consensus
     diagnostics needed by the paper's figures.
-
-    ``mechanism`` (a :class:`repro.audit.mechanisms.NoiseMechanism`) replaces
-    the built-in Laplace draw of Eq. 8; it receives the same per-round key,
-    the tree to noise, and the calibrated scale ``S / b``, and takes
-    precedence over ``use_kernels``. ``tap`` (a
-    :class:`repro.audit.transcript.TranscriptTap`) appends the round's
-    wire-visible quantities to the diagnostics under ``tap_*`` keys. Both
-    are ``None`` by default, in which case this function traces to exactly
-    the PR-1 program.
     """
     s = state.push.s
     n_nodes = state.push.a.shape[0]
@@ -212,7 +179,6 @@ def dpps_step(
     else:
         eps_l1 = tree_l1_norm_per_node(eps)
     need_s_half = (return_s_half or cfg.sensitivity_mode == "real"
-                   or mechanism is not None
                    or not (cfg.noise and cfg.gamma_n > 0))
     s_half = (jax.tree_util.tree_map(jnp.add, s, eps)
               if (need_s_half or not cfg.use_kernels) else None)
@@ -240,7 +206,7 @@ def dpps_step(
     # -- 3. Laplace noise (Eq. 8, Lemma 1) -----------------------------------
     if cfg.noise and cfg.gamma_n > 0:
         noise_scale = s_used / cfg.b
-        if mechanism is None and cfg.use_kernels:
+        if cfg.use_kernels:
             from repro.kernels import ops as kops
 
             # Fused kernel: s + eps + gamma_n * Lap(bits; scale) with the
@@ -248,10 +214,7 @@ def dpps_step(
             s_noise, _, noise_l1 = kops.dpps_perturb_tree(
                 s, eps, key, noise_scale, cfg.gamma_n)
         else:
-            noise = (mechanism.sample(key, s_half, noise_scale,
-                                      node_ops=node_ops)
-                     if mechanism is not None
-                     else _draw_noise(key, s_half, noise_scale, False))
+            noise = _draw_noise(key, s_half, noise_scale, False)
             noise_l1 = tree_l1_norm_per_node(noise)
             s_noise = jax.tree_util.tree_map(
                 lambda x, n: x + cfg.gamma_n * n.astype(x.dtype), s_half, noise
@@ -280,7 +243,7 @@ def dpps_step(
     # *noised* parameters, resetting consensus error and the sensitivity
     # recursion. Emitted only when sync_interval > 0 (keeps dry-run HLO pure).
     if cfg.sync_interval > 0:
-        do_sync = is_sync_round(state.t, cfg.sync_interval)
+        do_sync = (state.t + 1) % cfg.sync_interval == 0
 
         def leaf_sync(mixed, noised):
             mean = node_ops.leaf_mean(noised)
@@ -308,14 +271,6 @@ def dpps_step(
         "a_min": node_ops.vmin(push_new.a),
         "a_max": node_ops.vmax(push_new.a),
     }
-    if tap is not None:
-        # Wire-visible payloads of this round (see repro.audit.transcript):
-        # every node broadcasts its noised message s_noise + push-sum weight
-        # a (Eq. 9) and its sensitivity scalar S_i for the max (Alg. 1
-        # line 4); s_used is the resulting network scalar all nodes share.
-        diag.update(tap.capture(
-            s_noise=s_noise, a_out=state.push.a,
-            sens_local=s_local, sens_scalar=s_used))
     if return_s_half:
         diag["s_half"] = s_half
     return new_state, diag

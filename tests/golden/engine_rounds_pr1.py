@@ -35,7 +35,28 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.dpps import DPPSConfig, DPPSState, dpps_step
+# PR-1 golden copies pin *both* layers of the tap-off trace: the scan
+# driver (this file) and the round step itself (core_dpps_pr1.py). A
+# regression in the live dpps_step's default (tap=None / mechanism=None)
+# path therefore diverges from this module's HLO even though the live
+# rounds.py would follow it.
+import importlib.util as _ilu
+import os as _os
+import sys as _sys
+
+_spec = _ilu.spec_from_file_location(
+    "core_dpps_pr1",
+    _os.path.join(_os.path.dirname(_os.path.abspath(__file__)),
+                  "core_dpps_pr1.py"))
+_dpps_pr1 = _ilu.module_from_spec(_spec)
+# sys.modules registration: dataclasses resolves the golden module's
+# string annotations (from __future__ import annotations) by module name.
+_sys.modules[_spec.name] = _dpps_pr1
+_spec.loader.exec_module(_dpps_pr1)
+DPPSConfig = _dpps_pr1.DPPSConfig
+DPPSState = _dpps_pr1.DPPSState
+dpps_step = _dpps_pr1.dpps_step
+dpps_init = _dpps_pr1.dpps_init
 from repro.core.partpsp import PartPSPConfig, PartPSPState, partpsp_step
 from repro.core.sensitivity import real_sensitivity
 from repro.core.tree_utils import PyTree
@@ -84,10 +105,7 @@ def _capture(diag: dict[str, Any], track_real: bool) -> dict[str, Any]:
     diag = dict(diag)
     s_half = diag.pop("s_half", None)
     if track_real:
-        # chunk= bounds the O(N^2 d) pairwise buffer so audits at N=64 fit
-        # on the CPU container; bit-identical to the dense path (and a
-        # no-op at N <= 16).
-        diag["sensitivity_real"] = real_sensitivity(s_half, chunk=16)
+        diag["sensitivity_real"] = real_sensitivity(s_half)
     return diag
 
 
@@ -100,8 +118,6 @@ def run_dpps(
     plan: ProtocolPlan,
     rounds: int | None = None,
     track_real: bool = False,
-    tap=None,
-    mechanism=None,
     _gossip_builder=None,
     _node_ops=None,
     _key_fold=None,
@@ -113,14 +129,6 @@ def run_dpps(
     Returns the final state and the per-round diagnostic trajectory (leaves
     (T,) / (T, N)). ``track_real`` additionally records the exact
     sensitivity per round (O(N^2 d) — validation only, paper Fig. 2).
-
-    ``tap`` (:class:`repro.audit.transcript.TranscriptTap`) captures the
-    wire-visible quantities of every round as extra ``tap_*`` trajectory
-    leaves — reassemble them with ``Transcript.from_trajectory``.
-    ``mechanism`` swaps the Laplace draw for a pluggable
-    :class:`repro.audit.mechanisms.NoiseMechanism`. Both default to ``None``
-    and leave the compiled program bit-identical to the PR-1 engine
-    (pinned in tests/test_audit.py).
     """
     cfg = plan.resolve_dpps(cfg)
     if eps_seq is None:
@@ -139,8 +147,7 @@ def run_dpps(
             k = _key_fold(k)
         kwargs = _round_kwargs(plan, st.t, _gossip_builder, _node_ops)
         st2, diag = dpps_step(st, eps_at(x), k, cfg,
-                              return_s_half=track_real,
-                              mechanism=mechanism, tap=tap, **kwargs)
+                              return_s_half=track_real, **kwargs)
         return st2, _capture(diag, track_real)
 
     return jax.lax.scan(body, state, xs)
@@ -156,8 +163,6 @@ def run_partpsp(
     loss_fn,
     plan: ProtocolPlan,
     track_real: bool = False,
-    tap=None,
-    mechanism=None,
     _gossip_builder=None,
     _node_ops=None,
     _key_fold=None,
@@ -167,8 +172,6 @@ def run_partpsp(
     ``batches``: stacked round batches, leaves (T, N, per_node, ...) — use
     :func:`stack_rounds` to build them from a host loader. Metrics are
     captured every round; the returned trajectory has (T,)-leading leaves.
-    ``tap`` / ``mechanism`` are the audit-lab seams (see :func:`run_dpps`);
-    zero-cost when ``None``.
     """
     cfg = plan.resolve_partpsp(cfg)
 
@@ -179,7 +182,7 @@ def run_partpsp(
         kwargs = _round_kwargs(plan, st.dpps.t, _gossip_builder, _node_ops)
         st2, m = partpsp_step(st, batch_t, k, cfg=cfg, partition=partition,
                               loss_fn=loss_fn, return_s_half=track_real,
-                              mechanism=mechanism, tap=tap, **kwargs)
+                              **kwargs)
         return st2, _capture(m, track_real)
 
     return jax.lax.scan(body, state, batches)

@@ -1,0 +1,372 @@
+"""Privacy audit lab (repro.audit): the guarantee survives the attack
+battery, a broken mechanism is flagged, and the transcript tap is provably
+zero-cost when off (compiled HLO pinned against the PR-1 engine)."""
+import functools
+import importlib.util
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.audit import (
+    CURIOUS_NEIGHBOR,
+    GLOBAL_OBSERVER,
+    LOCAL_EAVESDROPPER,
+    THREAT_MODELS,
+    AuditConfig,
+    GaussianMechanism,
+    GraphHomomorphicMechanism,
+    LaplaceMechanism,
+    PrivacyLedger,
+    Transcript,
+    TranscriptTap,
+    clopper_pearson,
+    distinguishing_attack,
+    empirical_epsilon_lower_bound,
+    get_mechanism,
+    membership_inference,
+    reconstruction_attack,
+)
+from repro.core.dpps import DPPSConfig, dpps_init, dpps_step
+from repro.core.topology import DOutGraph, calibrate_constants
+from repro.engine import ProtocolPlan, run_dpps
+
+N, T = 8, 6
+TOPO = DOutGraph(n_nodes=N, d=2)
+CP, LAM = calibrate_constants(TOPO)
+AUDIT = AuditConfig(trials=800, alpha=0.02, seed=3)
+
+
+def _s0(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(key, (N, 11)),
+            jax.random.normal(jax.random.fold_in(key, 1), (N, 2, 3))]
+
+
+def _eps_seq(s0, seed=10, scale=0.1):
+    key = jax.random.PRNGKey(seed)
+    return [scale * jax.random.normal(jax.random.fold_in(key, i),
+                                      (T,) + x.shape)
+            for i, x in enumerate(s0)]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: empirical epsilon <= theoretical for every threat model,
+# and the same harness flags a deliberately broken mechanism.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("threat", THREAT_MODELS, ids=lambda t: t.name)
+def test_laplace_survives_attack_battery(threat):
+    """Theorem 1 holds empirically: the Clopper-Pearson lower bound stays
+    below the ledger's theoretical epsilon under every threat model."""
+    r = distinguishing_attack(threat, audit=AUDIT)
+    # the audited claim is the per-round epsilon (the statistic reads the
+    # first round; see distinguishing_attack)
+    assert r.theoretical_epsilon == pytest.approx(AUDIT.b / AUDIT.gamma_n)
+    assert r.empirical.epsilon_lower <= r.theoretical_epsilon, r.row()
+    assert not r.flagged
+    # the attack has teeth: it extracts a non-trivial fraction of epsilon
+    assert r.empirical.epsilon_lower > 0.3 * r.theoretical_epsilon, r.row()
+
+
+def test_broken_mechanism_is_flagged():
+    """Noise scale halved => true epsilon doubles; the battery must see it."""
+    r = distinguishing_attack(LOCAL_EAVESDROPPER,
+                              mechanism=get_mechanism("broken_laplace"),
+                              audit=AUDIT)
+    assert r.flagged
+    assert r.empirical.epsilon_lower > r.theoretical_epsilon, r.row()
+
+
+def test_graph_homomorphic_depends_on_threat_model():
+    """Zero-sum correlated noise: fine locally, broken globally."""
+    mech = GraphHomomorphicMechanism()
+    local = distinguishing_attack(LOCAL_EAVESDROPPER, mechanism=mech,
+                                  audit=AUDIT)
+    global_ = distinguishing_attack(GLOBAL_OBSERVER, mechanism=mech,
+                                    audit=AUDIT)
+    assert not local.flagged
+    assert global_.flagged
+    assert global_.empirical.epsilon_lower > 2 * local.empirical.epsilon_lower
+
+
+def test_reconstruction_sum_cancellation():
+    """The global observer's sum recovers the exact network perturbation
+    under zero-sum noise, and nothing close to it under honest Laplace."""
+    honest = reconstruction_attack(audit=AUDIT)
+    zero_sum = reconstruction_attack(
+        mechanism=GraphHomomorphicMechanism(), audit=AUDIT)
+    assert zero_sum["sum_err"] < 1e-3
+    assert honest["sum_err"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Zero-cost tap: compiled HLO with tap=None is the PR-1 program
+# ---------------------------------------------------------------------------
+
+def _golden_rounds():
+    path = os.path.join(os.path.dirname(__file__), "golden",
+                        "engine_rounds_pr1.py")
+    spec = importlib.util.spec_from_file_location("engine_rounds_pr1", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _strip_hlo_noise(txt: str) -> str:
+    txt = re.sub(r"metadata=\{[^}]*\}", "", txt)
+    return re.sub(r'"[^"]*source_file[^"]*"', "", txt)
+
+
+def _compiled(run_fn, cfg, plan, state, eps_seq, key) -> str:
+    fn = jax.jit(functools.partial(run_fn, cfg=cfg, plan=plan))
+    return fn.lower(state, eps_seq, key).compile().as_text()
+
+
+def test_tap_none_hlo_identical_to_pr1_engine():
+    """The pinned zero-cost claim: with tap=None (the default) the current
+    run_dpps compiles to the same HLO as the PR-1 engine. The golden side
+    freezes both layers (rounds driver + dpps_step), so a regression in
+    either live default path breaks the comparison."""
+    golden = _golden_rounds()
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      sync_interval=3)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    key = jax.random.PRNGKey(0)
+
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     sync_interval=3)
+    state = dpps_init(s0, plan.resolve_dpps(cfg))
+    now = _compiled(run_dpps, cfg, plan, state, eps_seq, key)
+
+    g_cfg = golden.DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                              sync_interval=3)
+    g_state = golden.dpps_init(s0, plan.resolve_dpps(g_cfg))
+    pr1 = _compiled(golden.run_dpps, g_cfg, plan, g_state, eps_seq, key)
+    assert _strip_hlo_noise(now) == _strip_hlo_noise(pr1)
+
+    tapped = _compiled(functools.partial(run_dpps, tap=TranscriptTap()),
+                       cfg, plan, state, eps_seq, key)
+    assert _strip_hlo_noise(tapped) != _strip_hlo_noise(now)
+
+
+def test_tap_does_not_change_protocol_trajectory():
+    """Enabling the tap adds outputs but never touches the protocol state."""
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     sync_interval=3)
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      sync_interval=3)
+    s0 = _s0()
+    state0 = dpps_init(s0, plan.resolve_dpps(cfg))
+    eps_seq = _eps_seq(s0)
+    key = jax.random.PRNGKey(7)
+
+    off, traj_off = jax.jit(functools.partial(
+        run_dpps, cfg=cfg, plan=plan))(state0, eps_seq, key)
+    on, traj_on = jax.jit(functools.partial(
+        run_dpps, cfg=cfg, plan=plan, tap=TranscriptTap()))(
+        state0, eps_seq, key)
+
+    for a, b in zip(jax.tree_util.tree_leaves(off.push),
+                    jax.tree_util.tree_leaves(on.push)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not any(k.startswith("tap_") for k in traj_off)
+    tr = Transcript.from_trajectory(traj_on)
+    assert tr.messages.shape == (T, N, 11 + 6)
+    assert tr.sensitivity.shape == (T,)
+    assert tr.weights.shape == (T, N)
+
+
+def test_tap_engine_matches_loop():
+    """Engine-vs-loop bit-equivalence still holds with the tap enabled,
+    including the captured transcript itself."""
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     sync_interval=3)
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      sync_interval=3)
+    cfg_r = plan.resolve_dpps(cfg)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    base = jax.random.PRNGKey(42)
+    tap = TranscriptTap()
+
+    state = dpps_init(s0, cfg_r)
+    loop_msgs = []
+    for t in range(T):
+        eps_t = [e[t] for e in eps_seq]
+        k = jax.random.fold_in(base, state.t)
+        state, diag = dpps_step(state, eps_t, k, cfg_r, tap=tap,
+                                **plan.mix_at(t))
+        loop_msgs.append(np.asarray(diag["tap_messages"]))
+
+    state_e, traj = jax.jit(functools.partial(
+        run_dpps, cfg=cfg, plan=plan, tap=tap))(dpps_init(s0, cfg_r),
+                                                eps_seq, base)
+    for a, b in zip(jax.tree_util.tree_leaves(state.push),
+                    jax.tree_util.tree_leaves(state_e.push)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    np.testing.assert_allclose(np.stack(loop_msgs),
+                               np.asarray(traj["tap_messages"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Mechanisms seam
+# ---------------------------------------------------------------------------
+
+def test_laplace_mechanism_bit_identical_to_builtin():
+    """mechanism=LaplaceMechanism() reproduces mechanism=None exactly."""
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM)
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False)
+    s0 = _s0()
+    state0 = dpps_init(s0, plan.resolve_dpps(cfg))
+    eps_seq = _eps_seq(s0)
+    key = jax.random.PRNGKey(5)
+
+    ref, _ = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))(
+        state0, eps_seq, key)
+    mech, _ = jax.jit(functools.partial(
+        run_dpps, cfg=cfg, plan=plan, mechanism=LaplaceMechanism()))(
+        state0, eps_seq, key)
+    for a, b in zip(jax.tree_util.tree_leaves(ref.push),
+                    jax.tree_util.tree_leaves(mech.push)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_graph_homomorphic_noise_is_zero_sum():
+    mech = GraphHomomorphicMechanism()
+    tree = [jnp.zeros((6, 40)), jnp.zeros((6, 3, 5))]
+    noise = mech.sample(jax.random.PRNGKey(0), tree, 0.7)
+    for leaf in noise:
+        np.testing.assert_allclose(np.asarray(leaf).sum(axis=0), 0.0,
+                                   atol=1e-5)
+
+
+def test_gaussian_mechanism_scale():
+    mech = GaussianMechanism(delta_=1e-5)
+    tree = [jnp.zeros((2, 200_000))]
+    noise = mech.sample(jax.random.PRNGKey(1), tree, 1.0)
+    want = np.sqrt(2 * np.log(1.25 / 1e-5))
+    assert float(jnp.std(noise[0])) == pytest.approx(want, rel=0.05)
+    assert mech.delta == 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Threat views + statistics machinery
+# ---------------------------------------------------------------------------
+
+def test_threat_model_visibility():
+    topo = DOutGraph(n_nodes=4, d=2)
+    assert LOCAL_EAVESDROPPER.visible_nodes(
+        victim=0, n_nodes=4, topo=topo) == (0,)
+    # victim 0 sends to {0, 1}; the curious node is 1; 1 receives from {0, 1}
+    assert CURIOUS_NEIGHBOR.visible_nodes(
+        victim=0, n_nodes=4, topo=topo) == (0, 1)
+    assert GLOBAL_OBSERVER.visible_nodes(
+        victim=0, n_nodes=4, topo=topo) == (0, 1, 2, 3)
+
+
+def test_observation_slices_transcript():
+    tr = Transcript(messages=jnp.arange(2 * 4 * 3, dtype=jnp.float32
+                                        ).reshape(2, 4, 3),
+                    sens_local=jnp.ones((2, 4)),
+                    sensitivity=jnp.ones((2,)),
+                    weights=jnp.ones((2, 4)))
+    obs = CURIOUS_NEIGHBOR.observe(tr, victim=0,
+                                   topo=DOutGraph(n_nodes=4, d=2))
+    assert obs.visible == (0, 1)
+    assert obs.messages.shape == (2, 2, 3)
+    np.testing.assert_array_equal(np.asarray(obs.node_messages(0)),
+                                  np.asarray(tr.messages[:, 0]))
+
+
+def test_clopper_pearson_basics():
+    lo, hi = clopper_pearson(0, 100, 0.05)
+    assert lo == 0.0 and 0.0 < hi < 0.06
+    lo, hi = clopper_pearson(100, 100, 0.05)
+    assert hi == 1.0 and lo > 0.94
+    lo, hi = clopper_pearson(50, 100, 0.05)
+    assert lo < 0.5 < hi
+
+
+def test_empirical_epsilon_identical_worlds_is_zero():
+    rng = np.random.default_rng(0)
+    a, b = rng.normal(size=2000), rng.normal(size=2000)
+    est = empirical_epsilon_lower_bound(a, b, alpha=0.05)
+    assert est.epsilon_lower < 0.2
+
+
+def test_membership_inference_directionality():
+    rng = np.random.default_rng(1)
+    out = rng.normal(2.0, 0.5, size=500)       # non-members: higher loss
+    in_leak = rng.normal(0.0, 0.5, size=500)   # members memorized
+    leaky = membership_inference(in_leak, out)
+    private = membership_inference(rng.normal(2.0, 0.5, size=500), out)
+    assert leaky.epsilon_lower > 1.0
+    assert private.epsilon_lower < 0.3
+
+
+# ---------------------------------------------------------------------------
+# Ledger + accountant budget
+# ---------------------------------------------------------------------------
+
+def test_accountant_budget_ceiling():
+    from repro.core.privacy import PrivacyAccountant
+
+    acct = PrivacyAccountant(b=2.0, gamma_n=1.0, budget=5.0)
+    assert acct.remaining() == pytest.approx(5.0)
+    assert not acct.exhausted
+    acct = acct.step().step()               # epsilon_total = 4
+    assert acct.remaining() == pytest.approx(1.0)
+    assert not acct.exhausted
+    acct = acct.step()                      # epsilon_total = 6 > 5
+    assert acct.exhausted
+    assert acct.remaining() == 0.0
+    s = acct.summary()
+    assert s["budget"] == 5.0 and s["exhausted"] and s["remaining"] == 0.0
+
+
+def test_accountant_no_budget_never_exhausts():
+    from repro.core.privacy import PrivacyAccountant
+
+    acct = PrivacyAccountant(b=100.0, gamma_n=1.0)
+    for _ in range(50):
+        acct = acct.step()
+    assert not acct.exhausted
+    assert acct.remaining() == float("inf")
+    assert acct.summary()["budget"] is None
+
+def test_ledger_streams_jsonl_and_tracks_budget(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    with PrivacyLedger(b=1.0, gamma_n=0.5, budget=5.0, path=path) as led:
+        for t in range(4):
+            led.record_round(t, sensitivity_estimate=1.0 + t,
+                             synced=(t == 2))
+        assert led.accountant.rounds == 3          # sync round unprotected
+        assert led.accountant.unprotected_rounds == 1
+        assert led.theoretical_epsilon() == pytest.approx(6.0)
+        assert led.accountant.exhausted            # 6 > budget 5
+        s = led.summary()
+        assert s["exhausted"] and s["remaining"] == 0.0
+        assert s["rounds_recorded"] == 4
+    rows = PrivacyLedger.read_jsonl(path)
+    assert len(rows) == 4
+    assert rows[2]["synced"] and rows[2]["epsilon_round"] == 0.0
+    assert rows[3]["epsilon_total"] == pytest.approx(6.0)
+    json.dumps(rows)  # every entry JSON-round-trips
+
+
+def test_ledger_record_trajectory_engine_layout():
+    led = PrivacyLedger(b=2.0, gamma_n=1.0)
+    traj = {"sensitivity_estimate": jnp.asarray([1.0, 2.0, 3.0]),
+            "sensitivity_real": jnp.asarray([0.5, 1.5, 2.5]),
+            "sensitivity_local": jnp.ones((3, 4))}
+    led.record_trajectory(traj, t0=10, sync_interval=2)
+    assert [e["round"] for e in led.entries] == [10, 11, 12]
+    assert led.entries[1]["synced"]                # (11 + 1) % 2 == 0
+    assert led.entries[0]["sensitivity_real"] == pytest.approx(0.5)
+    assert led.summary()["sensitivity_violations"] == 0

@@ -86,3 +86,11 @@ def test_accountant_linear_composition():
 def test_accountant_no_noise_infinite_epsilon():
     acct = PrivacyAccountant(b=1.0, gamma_n=0.0)
     assert acct.epsilon_per_round == float("inf")
+
+
+def test_accountant_budget_ceiling():
+    # (duplicated hypothesis-free in tests/test_audit.py so the budget
+    # contract is exercised even without the [test] extra)
+    acct = PrivacyAccountant(b=2.0, gamma_n=1.0, budget=5.0)
+    acct = acct.step().step().step()        # epsilon_total = 6 > 5
+    assert acct.exhausted and acct.remaining() == 0.0

@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--full-scale", action="store_true")
     ap.add_argument("--chunk", type=int, default=25,
                     help="rounds per compiled engine segment")
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="packed (N, d_s) wire-buffer runtime "
+                         "(--no-packed keeps the pytree path)")
+    ap.add_argument("--wire-dtype", choices=("f32", "bf16"), default="f32",
+                    help="gossip wire format (bf16 halves wire bytes)")
     args = ap.parse_args()
 
     (model, cfg_model, topo, cfg, partition, state, run_chunk,
@@ -40,11 +46,13 @@ def main():
         args.arch, reduced=not args.full_scale, n_nodes=args.nodes,
         algorithm="partpsp", b=args.b, gamma_n=args.gamma_n,
         gamma_l=0.05, gamma_s=0.05, clip=100.0, topology="dout", degree=2,
-        sync_interval=5, schedule="circulant", chunk=args.chunk)
+        sync_interval=5, schedule="circulant", chunk=args.chunk,
+        packed=args.packed, wire_dtype=args.wire_dtype)
 
+    mode = f"packed/{args.wire_dtype}" if args.packed else "pytree"
     print(f"PartPSP on {args.arch} ({'full' if args.full_scale else 'reduced'}) "
           f"| {args.nodes} nodes | d_s={partition.d_shared():,} "
-          f"d_l={partition.d_local():,} | circulant gossip | "
+          f"d_l={partition.d_local():,} | circulant gossip [{mode}] | "
           f"scan segments of {args.chunk}")
 
     stream = SyntheticLMStream(vocab_size=cfg_model.vocab_size, seq_len=64,

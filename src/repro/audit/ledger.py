@@ -46,7 +46,10 @@ class PrivacyLedger:
     ``budget`` forwards to the accountant's epsilon ceiling;
     ``path`` enables streaming JSONL (one entry per line, flushed per
     round so the trail survives crashes). ``mechanism`` is a display name
-    recorded with every entry.
+    recorded with every entry; ``wire_dtype`` records the gossip wire
+    format the round's messages actually left the node in (the packed
+    engine's bf16 wire halves the bytes an eavesdropper sees — the audit
+    trail must say which format the transcript was recorded at).
     """
 
     b: float
@@ -55,6 +58,7 @@ class PrivacyLedger:
     mechanism: str = "laplace"
     path: str | None = None
     algorithm: str = "dpps"
+    wire_dtype: str = "f32"
 
     accountant: PrivacyAccountant = dataclasses.field(init=False)
     entries: list[dict[str, Any]] = dataclasses.field(
@@ -92,6 +96,7 @@ class PrivacyLedger:
             "round": int(t),
             "mechanism": self.mechanism,
             "algorithm": self.algorithm,
+            "wire_dtype": self.wire_dtype,
             "protected": bool(protected),
             "synced": bool(synced),
             "epsilon_round": _f(eps_round),
@@ -153,6 +158,7 @@ class PrivacyLedger:
                for k, v in self.accountant.summary().items()}
         out["mechanism"] = self.mechanism
         out["algorithm"] = self.algorithm
+        out["wire_dtype"] = self.wire_dtype
         if self.entries:
             ests = [e["sensitivity_estimate"] for e in self.entries
                     if e["sensitivity_estimate"] is not None]

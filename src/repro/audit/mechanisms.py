@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dpps import LOCAL_NODE_OPS, NodeOps
-from repro.core.privacy import laplace_noise_tree, noise_tree
+from repro.core.privacy import laplace_noise_tree, noise_tree, noise_wire
 from repro.core.tree_utils import PyTree
 
 __all__ = [
@@ -90,7 +90,10 @@ class LaplaceMechanism(NoiseMechanism):
     scale_factor: float = 1.0
 
     def sample(self, key, tree, scale, *, node_ops=LOCAL_NODE_OPS):
-        return laplace_noise_tree(key, tree, scale * self.scale_factor)
+        # noise_wire is the protocol's canonical Eq.-8 draw (one flat
+        # counter pass over the wire row); drawing through the same helper
+        # is what keeps scale_factor=1 bit-identical to mechanism=None.
+        return noise_wire(key, tree, scale * self.scale_factor)
 
     def true_epsilon_per_round(self, b: float, gamma_n: float) -> float:
         """The epsilon actually delivered (differs when scale_factor != 1)."""

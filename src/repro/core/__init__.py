@@ -5,10 +5,13 @@
 * privacy     — Laplace mechanism, L1/L2 clipping, epsilon accounting
 * sensitivity — Remark-1 recursion + real-sensitivity probe (Lemma 2)
 * dpps        — Algorithm 1 (protocol-level DP gossip)
+* packing     — PackedLayout: the contiguous (N, d_s) wire buffer the
+                packed engine runs the protocol hot path over
 * partition   — partial-communication shared/local split (SIII.C)
 * partpsp     — Algorithm 2 + SGP / SGPDP / PEDFL baselines
 """
 from repro.core.dpps import DPPSConfig, DPPSState, dpps_init, dpps_step
+from repro.core.packing import PackedLayout
 from repro.core.partition import SHARE_ALL, SHARE_NONE, Partition
 from repro.core.partpsp import (
     PartPSPConfig,
@@ -32,6 +35,7 @@ from repro.core.topology import (
 
 __all__ = [
     "DPPSConfig", "DPPSState", "dpps_init", "dpps_step",
+    "PackedLayout",
     "Partition", "SHARE_ALL", "SHARE_NONE",
     "PartPSPConfig", "PartPSPState", "partpsp_init", "partpsp_step",
     "consensus_params", "make_baseline_config",

@@ -1,0 +1,252 @@
+"""PackedLayout — one contiguous (N, d_s) wire buffer for the shared tree.
+
+DPPS's per-round cost is memory traffic over the shared parameters:
+perturb, norm, noise, mix. Executed leaf-by-leaf over a 20-leaf model
+pytree, every one of those passes pays ~20x the kernel launches and HBM
+round-trips the maths requires. :class:`PackedLayout` flattens the shared
+tree once into a single ``(N, d_pad)`` float32 buffer — ``d_pad`` is the
+wire dimension ``d_s`` rounded up to the 128-lane kernel tile — and the
+protocol hot path (``repro.core.dpps.dpps_step`` with ``layout=``,
+scheduled by ``repro.engine`` when ``ProtocolPlan.packed`` is on) runs
+every elementwise pass and the dense mixing contraction as *one* op over
+that buffer. Packing/unpacking happens only at segment boundaries
+(``repro.engine.rounds`` packs before the scan and unpacks after it).
+
+Bit-equivalence contract: for float32 trees the packed protocol round is
+bit-identical to the pytree round (the pytree path stays the oracle —
+pinned in tests/test_engine.py). Both paths are built on the same
+*flat-wire-row* primitives, so there is nothing to diverge:
+
+* :meth:`l1_norm_per_node` is one reduction over the (N, d_s) wire slice
+  — exactly the flat-row accumulation ``tree_utils.tree_l1_norm_per_node``
+  performs after concatenating leaf rows in leaf order;
+* :meth:`laplace_noise_flat` is the same single (N, d_s) counter draw
+  ``privacy.noise_wire`` makes for the pytree path (which slices that row
+  back into leaves), behind the same materialization barrier;
+* where per-leaf producers must stay adjacent to their adds for XLA's
+  FMA-contraction decisions to match the oracle's (the Eq. 25
+  perturbation), :meth:`add_wire` keeps each leaf in its own
+  concatenation region.
+
+Padding lanes hold zeros in the state, the perturbation, and the noise, so
+they are inert through perturb/noise/gossip/sync and invisible to every
+norm; :meth:`wire_slice` strips them for anything wire-visible (the audit
+transcript tap records exactly the ``d_s`` packed wire values).
+
+Non-float32 leaves are supported for pack/unpack round-trips (the buffer
+is always f32; :meth:`unpack` restores leaf dtypes), but the protocol's
+bit-equivalence guarantee is stated for f32 shared trees — which is what
+the training state uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_utils import PyTree
+
+__all__ = ["Segment", "PackedLayout", "LANE"]
+
+# The TPU lane width every kernel in repro.kernels tiles against
+# (kernels/laplace_noise.LANE); the packed buffer pads d_s up to it so the
+# fused kernels and the MXU mixing block see aligned operands.
+LANE = 128
+
+
+class Segment(NamedTuple):
+    """One leaf's slot in the packed buffer."""
+
+    shape: tuple[int, ...]  # per-node shape (leaf shape without the N axis)
+    dtype: jnp.dtype        # original leaf dtype (restored by unpack)
+    offset: int             # start column in the packed buffer
+    size: int               # prod(shape) columns
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static description of the shared tree's flat wire layout.
+
+    Holds no arrays — only shapes, dtypes and offsets — so it is a
+    trace-time constant that jitted protocol code closes over.
+    """
+
+    treedef: object
+    segments: tuple[Segment, ...]
+    d_s: int       # true wire dimension (sum of segment sizes)
+    d_pad: int     # d_s rounded up to a LANE multiple (buffer columns)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_tree(cls, tree: PyTree, *, lane: int = LANE) -> "PackedLayout":
+        """Derive the layout from a node-stacked shared tree (leaves (N, ...))."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            raise ValueError("cannot pack an empty shared tree")
+        segments = []
+        offset = 0
+        for leaf in leaves:
+            shape = tuple(leaf.shape[1:])
+            size = math.prod(shape) if shape else 1
+            segments.append(Segment(shape, jnp.dtype(leaf.dtype), offset, size))
+            offset += size
+        d_s = offset
+        d_pad = -(-d_s // lane) * lane
+        return cls(treedef=treedef, segments=tuple(segments), d_s=d_s,
+                   d_pad=d_pad)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def pad(self) -> int:
+        return self.d_pad - self.d_s
+
+    def wire_bytes_per_node(self, wire_dtype: str = "f32") -> int:
+        """Bytes one node puts on the wire per round (d_s, not d_pad —
+        padding lanes never leave the host)."""
+        itemsize = {"f32": 4, "bf16": 2}[wire_dtype]
+        return self.d_s * itemsize
+
+    # -- pack / unpack (jit-safe; leading dims ride along) -------------------
+
+    def _check_leaves(self, tree: PyTree) -> list:
+        """Leaf list of ``tree``, validated against the layout (zip would
+        silently truncate a mismatched tree into a corrupt buffer)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != self.n_segments:
+            raise ValueError(
+                f"tree has {len(leaves)} leaves but layout packs "
+                f"{self.n_segments} segments")
+        return leaves
+
+    def _lead(self, leaf: jnp.ndarray, seg: Segment) -> tuple[int, ...]:
+        nrest = len(seg.shape)
+        return tuple(leaf.shape[:leaf.ndim - nrest]) if nrest else tuple(
+            leaf.shape)
+
+    def pack(self, tree: PyTree) -> jnp.ndarray:
+        """Tree with leaves (lead..., *seg.shape) -> (lead..., d_pad) f32.
+
+        ``lead`` is any leading prefix shared by all leaves — ``(N,)`` for
+        protocol state, ``(T, N)`` for stacked scan inputs.
+        """
+        leaves = self._check_leaves(tree)
+        lead = self._lead(leaves[0], self.segments[0])
+        flat = [x.astype(jnp.float32).reshape(lead + (seg.size,))
+                for x, seg in zip(leaves, self.segments)]
+        if self.pad:
+            flat.append(jnp.zeros(lead + (self.pad,), jnp.float32))
+        return jnp.concatenate(flat, axis=-1)
+
+    def view_tree(self, buf: jnp.ndarray) -> PyTree:
+        """Slice the buffer back into leaf-shaped f32 views (no dtype cast).
+
+        The norm/noise/tap helpers below go through this view so every
+        reduction and draw sees the exact leaf shapes of the pytree oracle.
+        """
+        lead = tuple(buf.shape[:-1])
+        leaves = [
+            jax.lax.slice_in_dim(buf, seg.offset, seg.offset + seg.size,
+                                 axis=buf.ndim - 1).reshape(lead + seg.shape)
+            for seg in self.segments
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def unpack(self, buf: jnp.ndarray) -> PyTree:
+        """(lead..., d_pad) buffer -> tree with original dtypes restored."""
+        lead = tuple(buf.shape[:-1])
+        leaves = [
+            jax.lax.slice_in_dim(buf, seg.offset, seg.offset + seg.size,
+                                 axis=buf.ndim - 1)
+            .reshape(lead + seg.shape).astype(seg.dtype)
+            for seg in self.segments
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def wire_slice(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """Drop padding lanes: (..., d_pad) -> (..., d_s) — the wire bytes."""
+        if not self.pad:
+            return buf
+        return jax.lax.slice_in_dim(buf, 0, self.d_s, axis=buf.ndim - 1)
+
+    # -- protocol helpers (bit-exact vs the pytree oracle) -------------------
+
+    def l1_norm_per_node(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """Per-node L1 norm of a (..., d_pad) buffer -> (...,).
+
+        One reduction over the (N, d_s) wire slice — the same flat-row
+        accumulation ``tree_l1_norm_per_node`` performs on the unpacked
+        tree (that function concatenates leaf rows into exactly this
+        layout), so the result is bit-identical to the pytree oracle's.
+        The padding lanes are sliced off so the reduce shape matches the
+        oracle's (they hold zeros, but a wider reduce could re-tree the
+        accumulation).
+        """
+        return jnp.sum(jnp.abs(self.wire_slice(buf)), axis=-1)
+
+    def laplace_noise_flat(self, key: jax.Array, n_nodes: int,
+                           scale: jnp.ndarray) -> jnp.ndarray:
+        """The protocol's canonical Eq.-8 draw as the flat (N, d_s) row.
+
+        Literally the same call :func:`repro.core.privacy.noise_wire`
+        makes for the pytree oracle (which slices this row into leaves),
+        so the stream is bit-identical by construction — with the PRNG's
+        fixed cost paid once per round, not once per leaf.
+        """
+        from repro.core.privacy import flat_wire_draw
+
+        return flat_wire_draw(key, n_nodes, self.d_s, scale)
+
+    def flat_row(self, tree: PyTree) -> jnp.ndarray:
+        """Tree with leaves (N, *seg.shape) -> the un-padded (N, d_s) row.
+
+        For trees whose leaves are views of one flat row (e.g. a
+        ``noise_wire`` draw) XLA collapses the concatenate of contiguous
+        slices back to the row itself.
+        """
+        leaves = self._check_leaves(tree)
+        lead = self._lead(leaves[0], self.segments[0])
+        flats = [x.astype(jnp.float32).reshape(lead + (seg.size,))
+                 for x, seg in zip(leaves, self.segments)]
+        return flats[0] if len(flats) == 1 else jnp.concatenate(flats,
+                                                                axis=-1)
+
+    def append_pad(self, wire_row: jnp.ndarray,
+                   src_buf: jnp.ndarray) -> jnp.ndarray:
+        """Rebuild a (N, d_pad) buffer from a computed (N, d_s) wire row,
+        carrying ``src_buf``'s padding lanes through untouched (they are
+        zeros by construction)."""
+        if not self.pad:
+            return wire_row
+        return jnp.concatenate(
+            [wire_row,
+             jax.lax.slice_in_dim(src_buf, self.d_s, self.d_pad,
+                                  axis=src_buf.ndim - 1)], axis=-1)
+
+    def add_wire(self, buf: jnp.ndarray, tree: PyTree) -> jnp.ndarray:
+        """``buf + pack(tree)`` with the adds done per concatenation region.
+
+        Each leaf's producer (e.g. the ``-gamma_s * g`` perturbation of
+        Eq. 25) stays adjacent to its own add region, matching the pytree
+        oracle's per-leaf add for XLA's FMA-contraction decisions —
+        scaling or adding the packed buffer wholesale puts the multiplies
+        behind the concatenate, where the oracle's contraction choice
+        cannot be reproduced (a last-ulp bit-equivalence break).
+        """
+        leaves = self._check_leaves(tree)
+        lead = tuple(buf.shape[:-1])
+        flat = jnp.concatenate(
+            [x.astype(jnp.float32).reshape(lead + (seg.size,))
+             for x, seg in zip(leaves, self.segments)], axis=-1)
+        if not self.pad:
+            return buf + flat
+        return jnp.concatenate(
+            [self.wire_slice(buf) + flat,
+             jax.lax.slice_in_dim(buf, self.d_s, self.d_pad,
+                                  axis=buf.ndim - 1)], axis=-1)

@@ -44,6 +44,7 @@ from repro.core.dpps import (
     dpps_init,
     dpps_step,
 )
+from repro.core.packing import PackedLayout
 from repro.core.partition import SHARE_ALL, Partition
 from repro.core.privacy import PrivacyAccountant, l1_clip_per_node
 from repro.core.pushsum import correct
@@ -152,20 +153,31 @@ def partpsp_step(
     node_ops: NodeOps = LOCAL_NODE_OPS,
     mechanism: Any = None,
     tap: Any = None,
+    layout: PackedLayout | None = None,
 ) -> tuple[PartPSPState, dict[str, Any]]:
     """One PartPSP round. ``batch`` leaves are node-stacked: (N, per_node, ...).
 
     ``mechanism`` / ``tap`` are the audit-lab seams forwarded verbatim to
     :func:`repro.core.dpps.dpps_step` (pluggable noise mechanism, transcript
     tap); both are zero-cost when ``None``.
+
+    ``layout`` selects the packed runtime: ``state.dpps.push.s`` is then the
+    single contiguous ``(N, d_pad)`` buffer of :mod:`repro.core.packing`,
+    corrected (Eq. 10) in one buffer pass and carried packed through the
+    DPPS round. The gradient/clip maths intentionally runs on the same
+    per-leaf expressions as the pytree path — that is what keeps the two
+    paths bit-identical for f32 trees (tests/test_engine.py) — with the
+    shared tree materialized only as sliced views of the buffer where the
+    model's loss needs it (``partition.merge``).
     """
     n_nodes = state.dpps.push.a.shape[0]
     key_loss1, key_loss2, key_noise = jax.random.split(key, 3)
     node_keys1 = jax.random.split(key_loss1, n_nodes)
     node_keys2 = jax.random.split(key_loss2, n_nodes)
 
-    shared = state.dpps.push.s
-    y = correct(shared, state.dpps.push.a)  # corrected iterates (Eq. 10)
+    shared_buf = state.dpps.push.s       # packed: (N, d_pad); else leaf list
+    y_rep = correct(shared_buf, state.dpps.push.a)  # corrected (Eq. 10)
+    y = layout.unpack(y_rep) if layout is not None else y_rep
 
     # --- pass 1: local-parameter gradient at (y, l_t) — Eq. (5) -------------
     params_t = partition.merge(y, state.local)
@@ -191,8 +203,17 @@ def partpsp_step(
     else:
         from repro.core.tree_utils import tree_l1_norm_per_node
 
-        g_norms = tree_l1_norm_per_node(g_shared) if g_shared else jnp.zeros((n_nodes,))
-    eps = [(-cfg.gamma_s * g).astype(s.dtype) for g, s in zip(g_shared, shared)]
+        g_norms = (tree_l1_norm_per_node(g_shared) if g_shared
+                   else jnp.zeros((n_nodes,)))
+    if layout is not None:
+        # Identical per-leaf expression to the pytree path (its
+        # bit-equivalence oracle); the leaves go to dpps_step un-packed so
+        # the packed perturb add keeps each -gamma_s * g in its own
+        # region (PackedLayout.add_wire).
+        eps: Any = [(-cfg.gamma_s * g).astype(jnp.float32) for g in g_shared]
+    else:
+        eps = [(-cfg.gamma_s * g).astype(s.dtype)
+               for g, s in zip(g_shared, shared_buf)]
 
     # --- DPPS round on the shared leaves -------------------------------------
     dpps_new, diag = dpps_step(
@@ -200,7 +221,7 @@ def partpsp_step(
         w=w, offsets=offsets, mix_weights=mix_weights,
         return_s_half=return_s_half,
         gossip_fn=gossip_fn, node_ops=node_ops,
-        mechanism=mechanism, tap=tap,
+        mechanism=mechanism, tap=tap, layout=layout,
     )
 
     new_state = PartPSPState(dpps=dpps_new, local=local_new)

@@ -21,6 +21,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.tree_utils import PyTree, tree_l1_norm_per_node
 
@@ -29,6 +30,8 @@ __all__ = [
     "noise_tree",
     "laplace_noise_like",
     "laplace_noise_tree",
+    "noise_wire",
+    "flat_wire_draw",
     "l1_clip_per_node",
     "l2_clip_per_node",
     "PrivacyAccountant",
@@ -54,11 +57,20 @@ def noise_like(key: jax.Array, x: jnp.ndarray, scale, *,
 
 def noise_tree(key: jax.Array, tree: PyTree, scale, *,
                sampler=jax.random.laplace) -> PyTree:
-    """Independent ``sampler`` noise for every leaf (split keys per leaf)."""
+    """Independent ``sampler`` noise for every leaf (split keys per leaf).
+
+    The draws are materialized behind an optimization barrier: XLA may
+    otherwise fuse the sampler's transform into whatever consumes the
+    noise and contract mul+add chains differently per consumer (FMA), so
+    the same key would yield last-ulp-different noise in different
+    programs. The barrier pins the drawn values, which is what lets the
+    packed runtime (repro.core.packing) reproduce this stream bit-exactly.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
-    noisy = [noise_like(k, x, scale, sampler=sampler)
-             for k, x in zip(keys, leaves)]
+    noisy = jax.lax.optimization_barrier(
+        [noise_like(k, x, scale, sampler=sampler)
+         for k, x in zip(keys, leaves)])
     return jax.tree_util.tree_unflatten(treedef, noisy)
 
 
@@ -70,6 +82,51 @@ def laplace_noise_like(key: jax.Array, x: jnp.ndarray, scale) -> jnp.ndarray:
 def laplace_noise_tree(key: jax.Array, tree: PyTree, scale) -> PyTree:
     """Independent Laplace noise for every leaf (split keys per leaf)."""
     return noise_tree(key, tree, scale)
+
+
+def flat_wire_draw(key: jax.Array, n_nodes: int, d_s: int, scale, *,
+                   sampler=jax.random.laplace) -> jnp.ndarray:
+    """The one (N, d_s) counter draw behind :func:`noise_wire`.
+
+    Shared verbatim by the pytree path (which slices it into leaves) and
+    the packed runtime (`PackedLayout.laplace_noise_flat`, which consumes
+    the row directly) — one call site for the key use, shape and barrier
+    placement keeps the two streams bit-identical by construction. The
+    barrier materializes the draw so no consumer can re-derive it under a
+    different fusion (see :func:`noise_tree`).
+    """
+    return jax.lax.optimization_barrier(noise_like(
+        key, jax.ShapeDtypeStruct((n_nodes, d_s), jnp.float32), scale,
+        sampler=sampler))
+
+
+def noise_wire(key: jax.Array, tree: PyTree, scale, *,
+               sampler=jax.random.laplace) -> PyTree:
+    """One flat (N, d_s) draw sliced back into the tree's leaf shapes.
+
+    The protocol's canonical Eq.-8 draw since the packed runtime (PR 3):
+    a *single* counter-based draw over the concatenated wire row — one
+    threefry pass instead of one per leaf (the per-leaf form pays the
+    PRNG's fixed cost ~n_leaves times; at protocol cadence that dominates
+    the round). Leaves may be arrays or ShapeDtypeStructs (only shapes and
+    dtypes are read). Because the flat row is the wire order the packed
+    buffer uses, the stream is bit-identical between the packed and pytree
+    runtimes, and :class:`repro.audit.mechanisms.LaplaceMechanism` draws
+    through this same helper to stay bit-identical to ``mechanism=None``.
+    The draw is materialized behind a barrier for the same reason as
+    :func:`noise_tree`'s.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    n = leaves[0].shape[0]
+    sizes = [int(np.prod(leaf.shape[1:])) if len(leaf.shape) > 1 else 1
+             for leaf in leaves]
+    flat = flat_wire_draw(key, n, sum(sizes), scale, sampler=sampler)
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        seg = jax.lax.slice_in_dim(flat, off, off + size, axis=1)
+        out.append(seg.reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def l1_clip_per_node(tree: PyTree, clip: float) -> tuple[PyTree, jnp.ndarray]:

@@ -16,6 +16,21 @@ Two gossip schedules:
   so mixing is a weighted sum of ``d`` rolls along the node axis, which XLA
   lowers to ``d-1`` collective-permutes: O(d * d_s) wire bytes. This is the
   beyond-paper optimized schedule (EXPERIMENTS.md SPerf #1).
+
+Within-host kernel routing: with ``use_kernels=True`` the dense schedule's
+``W @ s`` runs through the MXU-shaped ``repro.kernels.pushsum_mix`` Pallas
+block (one VMEM-resident product per leaf instead of an HBM-bound einsum).
+The circulant schedule has no kernel variant by design — its rolls are
+permutations, pure data movement that XLA already lowers optimally (and to
+collective-permutes when the node axis is sharded), so there is no MXU op
+to fuse.
+
+``gossip_packed`` is the packed-runtime hot path: the shared tree lives in
+one ``(N, d_pad)`` buffer (see :mod:`repro.core.packing`) so dense mixing
+is exactly one contraction per round, and the wire format becomes a single
+cast — ``wire_dtype="bf16"`` mixes bf16 messages with fp32 accumulation
+(the push-sum weights ``a`` always mix in fp32; the correction y = s/a
+stays fp32).
 """
 from __future__ import annotations
 
@@ -31,6 +46,7 @@ __all__ = [
     "init_push_sum",
     "gossip_dense",
     "gossip_circulant",
+    "gossip_packed",
     "gossip",
     "correct",
     "consensus_error",
@@ -57,9 +73,24 @@ def _mix_dense(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("ij,j...->i...", w.astype(x.dtype), x)
 
 
-def gossip_dense(state: PushSumState, w: jnp.ndarray) -> PushSumState:
-    """One mixing round with an arbitrary (N, N) weight matrix."""
-    s_new = jax.tree_util.tree_map(lambda x: _mix_dense(w, x), state.s)
+def gossip_dense(state: PushSumState, w: jnp.ndarray, *,
+                 use_kernels: bool = False) -> PushSumState:
+    """One mixing round with an arbitrary (N, N) weight matrix.
+
+    ``use_kernels=True`` routes every leaf's ``W @ s`` through the MXU
+    block kernel ``repro.kernels.ops.pushsum_mix`` (Pallas on TPU,
+    interpret-mode oracle elsewhere); the (N,) push-sum weights stay on
+    the jnp matvec — too small to tile. The circulant schedule has no
+    kernel counterpart (its rolls are permutations, not contractions);
+    see :func:`gossip_circulant`.
+    """
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        s_new = jax.tree_util.tree_map(lambda x: kops.pushsum_mix(w, x),
+                                       state.s)
+    else:
+        s_new = jax.tree_util.tree_map(lambda x: _mix_dense(w, x), state.s)
     a_new = _mix_dense(w, state.a)
     return PushSumState(s=s_new, a=a_new)
 
@@ -87,6 +118,67 @@ def gossip_circulant(
         lambda x: _mix_circulant(offsets, weights, x), state.s
     )
     a_new = _mix_circulant(offsets, weights, state.a)
+    return PushSumState(s=s_new, a=a_new)
+
+
+def gossip_packed(
+    state: PushSumState,
+    *,
+    w: jnp.ndarray | None = None,
+    offsets: Sequence[int] | None = None,
+    weights: jnp.ndarray | None = None,
+    wire_dtype: str = "f32",
+    use_kernels: bool = False,
+) -> PushSumState:
+    """Eq. 9 over the packed (N, d_pad) buffer — one mix op per round.
+
+    ``state.s`` is the single contiguous buffer of
+    :class:`repro.core.packing.PackedLayout`, not a pytree. In fp32 wire
+    mode every op is the same op the pytree path applies per leaf, so the
+    result is bit-identical to the oracle (tests/test_engine.py pins it).
+    ``wire_dtype="bf16"`` casts the outgoing messages once (the packed
+    layout makes the wire format a single cast), mixes them with fp32
+    accumulation, and returns fp32; the push-sum weights ``a`` always mix
+    in fp32. Dense + ``use_kernels`` routes the contraction through the
+    MXU ``pushsum_mix`` block.
+    """
+    buf = state.s
+    bf16 = wire_dtype == "bf16"
+    wire = buf.astype(jnp.bfloat16) if bf16 else buf
+    if offsets is not None:
+        offsets = tuple(int(o) for o in offsets)
+        if weights is None:
+            weights = jnp.full((len(offsets),), 1.0 / len(offsets), jnp.float32)
+        if bf16:
+            # accumulate in fp32: each rolled bf16 message is upcast before
+            # the weighted sum (the cast is the wire round-trip).
+            acc = weights[0] * (wire if offsets[0] == 0 else
+                                jnp.roll(wire, offsets[0], axis=0)
+                                ).astype(jnp.float32)
+            for k, off in enumerate(offsets[1:], start=1):
+                acc = acc + weights[k] * jnp.roll(wire, off, axis=0).astype(
+                    jnp.float32)
+            s_new = acc
+        else:
+            s_new = _mix_circulant(offsets, weights, wire)
+        a_new = _mix_circulant(offsets, weights, state.a)
+        return PushSumState(s=s_new, a=a_new)
+    if w is None:
+        raise ValueError("gossip_packed() needs either w= or offsets=")
+    if bf16:
+        # Always the einsum here, even under use_kernels: the pushsum_mix
+        # kernel writes its accumulator back in the wire dtype, which
+        # would re-quantize the mixed state to bf16 every round — the
+        # wire format's contract is bf16 messages with an fp32 result.
+        s_new = jnp.einsum("ij,jd->id", w, wire,
+                           preferred_element_type=jnp.float32)
+    elif use_kernels:
+        from repro.kernels import ops as kops
+
+        s_new = kops.pushsum_mix(w, wire)
+    else:
+        s_new = _mix_dense(w, wire)
+    a_new = _mix_dense(w, state.a)
     return PushSumState(s=s_new, a=a_new)
 
 

@@ -15,6 +15,28 @@ import jax.numpy as jnp
 
 PyTree = Any
 
+# The protocol pins its noise draws and wire messages with
+# lax.optimization_barrier (see repro.core.privacy / repro.core.dpps), and
+# the audit battery vmaps whole protocol runs over attack trials. The jax
+# pinned in this container ships no batching rule for the barrier
+# primitive (added upstream later); register the trivial elementwise rule
+# — barrier every batched operand, keep the batch dims — so barriers work
+# under vmap. Guarded: on jax versions that moved these private internals
+# the upstream rule exists and the shim degrades to a no-op.
+try:
+    from jax._src.lax import lax as _lax_internal
+    from jax.interpreters import batching as _batching
+
+    if (_lax_internal.optimization_barrier_p
+            not in _batching.primitive_batchers):
+        def _optimization_barrier_batcher(args, dims):
+            return _lax_internal.optimization_barrier_p.bind(*args), dims
+
+        _batching.primitive_batchers[_lax_internal.optimization_barrier_p] = (
+            _optimization_barrier_batcher)
+except (ImportError, AttributeError):  # pragma: no cover - newer jax
+    pass
+
 __all__ = [
     "tree_l1_norm_per_node",
     "tree_l2_norm_sq_per_node",
@@ -36,10 +58,22 @@ def _per_node_reduce(x: jnp.ndarray, fn) -> jnp.ndarray:
 
 
 def tree_l1_norm_per_node(tree: PyTree) -> jnp.ndarray:
-    """sum_leaves ||leaf_i||_1 for each node i -> (N,)."""
+    """sum_leaves ||leaf_i||_1 for each node i -> (N,).
+
+    Computed in *flat wire-row order*: every leaf flattens to (N, -1),
+    the rows concatenate in leaf order, and one reduction sweeps the
+    (N, d_s) row. This is the packed runtime's native layout
+    (repro.core.packing stores exactly this row), so the packed path
+    computes the identical reduction over its buffer slice with no
+    per-leaf work — one reduce with one accumulation order on both paths
+    is what keeps their norms bit-identical (summing per-leaf norms
+    instead would pit two differently-fused reduction trees against each
+    other, which XLA resolves ulp-differently per program).
+    """
     leaves = jax.tree_util.tree_leaves(tree)
-    norms = [_per_node_reduce(jnp.abs(x), jnp.sum) for x in leaves]
-    return sum(norms[1:], start=norms[0])
+    flats = [x.reshape(x.shape[0] if x.ndim else 1, -1) for x in leaves]
+    row = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=1)
+    return jnp.sum(jnp.abs(row), axis=1)
 
 
 def tree_l2_norm_sq_per_node(tree: PyTree) -> jnp.ndarray:

@@ -21,6 +21,7 @@ from repro.engine.rounds import (
     run_partpsp,
     run_segments,
     stack_rounds,
+    wire_layout,
 )
 from repro.engine.shard import shard_run_dpps, shard_run_partpsp
 
@@ -31,6 +32,7 @@ __all__ = [
     "run_decode",
     "run_segments",
     "stack_rounds",
+    "wire_layout",
     "shard_run_dpps",
     "shard_run_partpsp",
 ]

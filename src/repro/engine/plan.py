@@ -61,6 +61,15 @@ class ProtocolPlan:
       chunk          rounds per compiled scan segment (metrics are captured
                      every round inside the segment; checkpoints naturally
                      land on segment boundaries).
+      packed         run the engine's scan over the packed (N, d_pad) wire
+                     buffer (repro.core.packing) — pack/unpack only at
+                     segment boundaries, every hot pass fused over one
+                     contiguous carry. Default on; the pytree path
+                     (packed=False) is kept as the bit-equivalence oracle
+                     (tests/test_engine.py pins packed == pytree in f32).
+      wire_dtype     gossip wire format, "f32" | "bf16". bf16 mixes the
+                     outgoing messages in bf16 with fp32 accumulation
+                     (half the wire bytes; requires packed=True).
     """
 
     schedule: str
@@ -71,6 +80,16 @@ class ProtocolPlan:
     use_kernels: bool = False
     sync_interval: int | None = None
     chunk: int = 50
+    packed: bool = True
+    wire_dtype: str = "f32"
+
+    def __post_init__(self):
+        if self.wire_dtype not in ("f32", "bf16"):
+            raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}")
+        if self.wire_dtype != "f32" and not self.packed:
+            raise ValueError("wire_dtype='bf16' requires packed=True "
+                             "(the packed layout is what makes the wire "
+                             "format a single cast)")
 
     @classmethod
     def from_topology(
@@ -82,6 +101,8 @@ class ProtocolPlan:
         use_kernels: bool | None = None,
         sync_interval: int | str | None = None,
         chunk: int = 50,
+        packed: bool = True,
+        wire_dtype: str = "f32",
     ) -> "ProtocolPlan":
         """Derive the plan for ``topo`` (and optionally a device mesh).
 
@@ -90,6 +111,8 @@ class ProtocolPlan:
         ``sync_interval="auto"`` derives the cadence from the period. When a
         mesh is given its gossip-axis extent must divide the node count so
         the sharded engine (``repro.engine.shard``) can block-shard nodes.
+        ``packed`` / ``wire_dtype`` select the packed flat-buffer runtime
+        and its wire format (see the class docstring).
         """
         if schedule not in (None, "dense", "circulant"):
             raise ValueError(f"unknown schedule {schedule!r}")
@@ -140,7 +163,8 @@ class ProtocolPlan:
 
         return cls(schedule=schedule, period=period, offsets=offsets,
                    mix_weights=mix_weights, ws=ws, use_kernels=use_kernels,
-                   sync_interval=sync_interval, chunk=chunk)
+                   sync_interval=sync_interval, chunk=chunk, packed=packed,
+                   wire_dtype=wire_dtype)
 
     # -- per-round mixing operands -------------------------------------------
 
@@ -162,7 +186,8 @@ class ProtocolPlan:
 
     def resolve_dpps(self, cfg: DPPSConfig) -> DPPSConfig:
         updates: dict[str, Any] = dict(schedule=self.schedule,
-                                       use_kernels=self.use_kernels)
+                                       use_kernels=self.use_kernels,
+                                       wire_dtype=self.wire_dtype)
         if self.sync_interval is not None:
             updates["sync_interval"] = int(self.sync_interval)
         return dataclasses.replace(cfg, **updates)

@@ -23,6 +23,15 @@ Laplace noise (the DP guarantee needs independent per-node noise; the draw
 is therefore *not* bit-identical to the single-device engine — noiseless
 runs are, which is what tests pin).
 
+The packed runtime (``ProtocolPlan.packed``, the default) needs no special
+handling here: ``repro.engine.rounds`` packs *inside* the shard_map body,
+so each shard flattens its local ``(N/shards, ...)`` block into its own
+``(N/shards, d_pad)`` buffer and the node axis shards exactly as before —
+the in/out specs below are written against the caller-visible pytree
+state. Dense gossip then all-gathers one contiguous buffer per round
+instead of one tensor per leaf. ``wire_dtype="bf16"`` is not implemented
+for the collective gossip path (dpps_step raises; use f32 on the mesh).
+
 Scope: one gossip axis (single-pod meshes — axis "data"). Multi-pod meshes
 (two gossip axes) currently go through the auto-sharded ``jax.jit`` path in
 ``launch/steps.py``; collapsing ("pod", "data") into one logical axis here

@@ -25,7 +25,9 @@ __all__ = [
     "default_interpret",
     "laplace_noise_tree",
     "dpps_perturb_tree",
+    "dpps_perturb_packed",
     "l1_clip_tree",
+    "l1_norm_packed",
     "pushsum_mix",
 ]
 
@@ -120,6 +122,43 @@ def dpps_perturb_tree(s_tree, eps_tree, key: jax.Array, scale, gamma_n,
         eps_l1 = eps_l1 + e1
         noise_l1 = noise_l1 + n1
     return jax.tree_util.tree_unflatten(treedef, out_leaves), eps_l1, noise_l1
+
+
+def dpps_perturb_packed(s: jnp.ndarray, eps: jnp.ndarray, key: jax.Array,
+                        scale, gamma_n, d_s: int,
+                        interpret: bool | None = None):
+    """Fused Alg.-1 lines 3+5 over the packed (N, d_pad) buffer.
+
+    One vmapped kernel call for the whole shared state instead of one per
+    leaf (``dpps_perturb_tree``). Only the first ``d_s`` lanes are fed to
+    the kernel — the layout's padding lanes stay exactly zero (no noise is
+    ever drawn for them, so the norms match the un-padded maths) and are
+    re-appended to the output. Returns (s_noise (N, d_pad), eps_l1 (N,),
+    noise_l1 (N,)).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    n_nodes, d_pad = s.shape
+    s_w, eps_w = s[:, :d_s], eps[:, :d_s]
+    node_keys = jax.random.split(key, n_nodes)
+    s_noise, eps_l1, noise_l1 = jax.vmap(
+        lambda kk, ss, ee: dpps_perturb_flat(ss, ee, kk, scale, gamma_n,
+                                             interpret)
+    )(node_keys, s_w, eps_w)
+    if d_pad != d_s:
+        s_noise = jnp.pad(s_noise, ((0, 0), (0, d_pad - d_s)))
+    return s_noise, eps_l1, noise_l1
+
+
+def l1_norm_packed(buf: jnp.ndarray, d_s: int,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Per-node L1 of the packed buffer's ``d_s`` wire lanes -> (N,)."""
+    interpret = default_interpret() if interpret is None else interpret
+
+    def node_norm(x):
+        tiles, _ = _pad_flat(x)
+        return _l1_norm_kernel(tiles, interpret=interpret)
+
+    return jax.vmap(node_norm)(buf[:, :d_s])
 
 
 def l1_norm_tree(tree, interpret: bool | None = None):

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from repro.audit.ledger import PrivacyLedger
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_NAMES, get_config
+from repro.core.dpps import is_sync_round
 from repro.core.partition import Partition
 from repro.core.partpsp import (
     consensus_params,
@@ -122,7 +123,8 @@ def build_engine_trainer(arch_name: str, *, reduced: bool, n_nodes: int,
                          gamma_l: float, gamma_s: float, clip: float,
                          topology: str, degree: int, sync_interval: int,
                          schedule: str, use_kernels: bool = False,
-                         seed: int = 0, chunk: int = 50):
+                         seed: int = 0, chunk: int = 50,
+                         packed: bool = True, wire_dtype: str = "f32"):
     """Scan-engine driver: a jitted segment runner (one dispatch per chunk).
 
     Returns ``(model, model_cfg, topo, cfg, partition, state, run_chunk,
@@ -131,6 +133,12 @@ def build_engine_trainer(arch_name: str, *, reduced: bool, n_nodes: int,
     :func:`repro.engine.stack_rounds`. The engine folds the absolute round
     counter into ``base_key``, so trajectories are identical to the loop
     driver's and segments resume seamlessly from checkpoints.
+
+    ``packed`` (default) runs each segment over the contiguous packed wire
+    buffer; the incoming state is donated to the jitted runner so XLA
+    aliases the carry in place instead of holding two copies of the shared
+    tree. ``wire_dtype="bf16"`` gossips bf16 messages with fp32
+    accumulation (packed only).
     """
     model, model_cfg, topo, cfg, partition, state = _build_setup(
         arch_name, reduced=reduced, n_nodes=n_nodes, algorithm=algorithm,
@@ -140,11 +148,12 @@ def build_engine_trainer(arch_name: str, *, reduced: bool, n_nodes: int,
 
     plan = ProtocolPlan.from_topology(
         topo, schedule=schedule, use_kernels=use_kernels,
-        sync_interval=sync_interval, chunk=chunk)
+        sync_interval=sync_interval, chunk=chunk, packed=packed,
+        wire_dtype=wire_dtype)
     cfg = plan.resolve_partpsp(cfg)
     run_chunk = jax.jit(functools.partial(
         run_partpsp, cfg=cfg, partition=partition, loss_fn=model.loss_fn,
-        plan=plan))
+        plan=plan), donate_argnums=(0,))
     return model, model_cfg, topo, cfg, partition, state, run_chunk, plan
 
 
@@ -173,6 +182,13 @@ def main() -> None:
                     help="scan-compiled engine segments vs per-round loop")
     ap.add_argument("--chunk", type=int, default=50,
                     help="rounds per compiled engine segment")
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the engine over the packed (N, d_s) wire "
+                         "buffer (--no-packed keeps the pytree path)")
+    ap.add_argument("--wire-dtype", choices=("f32", "bf16"), default="f32",
+                    help="gossip wire format; bf16 halves wire bytes "
+                         "(mix in bf16, accumulate fp32; needs --packed)")
     ap.add_argument("--seed", type=int, default=2024)   # paper's seed
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None)
@@ -186,6 +202,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.chunk < 1:
         ap.error("--chunk must be >= 1")
+    if args.wire_dtype != "f32" and (args.driver != "engine" or not args.packed):
+        ap.error("--wire-dtype bf16 requires --driver engine with --packed")
 
     build_kwargs = dict(
         reduced=args.reduced, n_nodes=args.nodes, algorithm=args.algorithm,
@@ -196,14 +214,18 @@ def main() -> None:
     if args.driver == "engine":
         (model, model_cfg, topo, cfg, partition, state, run_chunk,
          plan) = build_engine_trainer(args.arch, chunk=args.chunk,
+                                      packed=args.packed,
+                                      wire_dtype=args.wire_dtype,
                                       **build_kwargs)
     else:
         model, model_cfg, topo, cfg, partition, state, step = build_trainer(
             args.arch, **build_kwargs)
 
+    mode = (f"packed/{args.wire_dtype}" if args.driver == "engine"
+            and args.packed else "pytree")
     print(f"arch={args.arch} ({'reduced' if args.reduced else 'FULL'}) "
           f"algorithm={args.algorithm} nodes={args.nodes} topo={args.topology}"
-          f"(d={args.degree}) driver={args.driver} "
+          f"(d={args.degree}) driver={args.driver}[{mode}] "
           f"d_s={partition.d_shared():,} d_l={partition.d_local():,}")
 
     stream = SyntheticLMStream(vocab_size=model_cfg.vocab_size,
@@ -230,7 +252,8 @@ def main() -> None:
     sync_interval = cfg.dpps.sync_interval
     ledger = PrivacyLedger(
         b=cfg.dpps.b, gamma_n=cfg.dpps.gamma_n, budget=args.privacy_budget,
-        mechanism="laplace", path=args.ledger_out, algorithm=args.algorithm)
+        mechanism="laplace", path=args.ledger_out, algorithm=args.algorithm,
+        wire_dtype=cfg.dpps.wire_dtype)
     budget_hit = False
 
     def log_row(row):

@@ -17,6 +17,19 @@ scan outputs, and callers split long runs into ``ProtocolPlan.chunk``-sized
 segments so metrics stay bounded and checkpoints land on segment boundaries
 (see ``launch/train.py``).
 
+Packed carry: with ``plan.packed`` (the default) the drivers flatten the
+shared tree into one contiguous ``(N, d_pad)`` buffer
+(:class:`repro.core.packing.PackedLayout`) *before* the scan and unpack it
+*after* — the scan carry is a single fused buffer instead of a many-leaf
+tree, and every per-round pass (perturb, noise, norms, dense mix) runs
+once over it. Callers' view is unchanged: states in and out are ordinary
+pytree states, so checkpoints, metrics and the loop driver interoperate
+bit-for-bit (f32 wire mode is pinned bit-identical to the pytree path in
+tests/test_engine.py). Jit the drivers with ``donate_argnums=(0,)`` so XLA
+aliases the packed carry in place — the per-round Python loop holds two
+copies of the full shared tree per step; the donated packed scan holds
+one.
+
 PRNG discipline: drivers receive one *base* key and fold the absolute round
 counter carried in the protocol state into it each round —
 ``fold_in(base_key, state.t)``. A Python loop calling the per-round step
@@ -35,8 +48,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-# PR-1 golden copies pin *both* layers of the tap-off trace: the scan
-# driver (this file) and the round step itself (core_dpps_pr1.py). A
+# PR-3 golden copies pin *both* layers of the tap-off trace: the scan
+# driver (this file) and the round step itself (core_dpps_pr3.py). A
 # regression in the live dpps_step's default (tap=None / mechanism=None)
 # path therefore diverges from this module's HLO even though the live
 # rounds.py would follow it.
@@ -45,25 +58,27 @@ import os as _os
 import sys as _sys
 
 _spec = _ilu.spec_from_file_location(
-    "core_dpps_pr1",
+    "core_dpps_pr3",
     _os.path.join(_os.path.dirname(_os.path.abspath(__file__)),
-                  "core_dpps_pr1.py"))
-_dpps_pr1 = _ilu.module_from_spec(_spec)
+                  "core_dpps_pr3.py"))
+_dpps_pr3 = _ilu.module_from_spec(_spec)
 # sys.modules registration: dataclasses resolves the golden module's
 # string annotations (from __future__ import annotations) by module name.
-_sys.modules[_spec.name] = _dpps_pr1
-_spec.loader.exec_module(_dpps_pr1)
-DPPSConfig = _dpps_pr1.DPPSConfig
-DPPSState = _dpps_pr1.DPPSState
-dpps_step = _dpps_pr1.dpps_step
-dpps_init = _dpps_pr1.dpps_init
+_sys.modules[_spec.name] = _dpps_pr3
+_spec.loader.exec_module(_dpps_pr3)
+DPPSConfig = _dpps_pr3.DPPSConfig
+DPPSState = _dpps_pr3.DPPSState
+dpps_step = _dpps_pr3.dpps_step
+dpps_init = _dpps_pr3.dpps_init
+from repro.core.packing import PackedLayout
 from repro.core.partpsp import PartPSPConfig, PartPSPState, partpsp_step
+from repro.core.pushsum import PushSumState
 from repro.core.sensitivity import real_sensitivity
 from repro.core.tree_utils import PyTree
 from repro.engine.plan import ProtocolPlan
 
 __all__ = ["run_dpps", "run_partpsp", "run_decode", "run_segments",
-           "stack_rounds"]
+           "stack_rounds", "wire_layout"]
 
 
 def stack_rounds(make_round: Callable[[int], PyTree], t0: int, n: int) -> PyTree:
@@ -105,8 +120,48 @@ def _capture(diag: dict[str, Any], track_real: bool) -> dict[str, Any]:
     diag = dict(diag)
     s_half = diag.pop("s_half", None)
     if track_real:
-        diag["sensitivity_real"] = real_sensitivity(s_half)
+        # chunk= bounds the O(N^2 d) pairwise buffer so audits at N=64 fit
+        # on the CPU container; bit-identical to the dense path (and a
+        # no-op at N <= 16).
+        diag["sensitivity_real"] = real_sensitivity(s_half, chunk=16)
     return diag
+
+
+def wire_layout(plan: ProtocolPlan, shared: PyTree) -> PackedLayout | None:
+    """The packed layout the drivers will run ``shared`` under (or None
+    for the pytree path). Callers pre-packing inputs into wire layout
+    (e.g. an eps_seq buffer for :func:`run_dpps`) must pack with THIS
+    layout — it is None when packed=False, when nothing is shared, or
+    when the shared tree is already a single contiguous 2-D leaf (packing
+    one leaf removes no per-leaf work, it only adds wire-row copies —
+    measured ~1.6x slower at the table4 single-leaf scale; single-leaf
+    trees still pack when the plan needs the buffer form: bf16 wire or
+    the fused Pallas kernels)."""
+    leaves = jax.tree_util.tree_leaves(shared)
+    if not plan.packed or not leaves:
+        return None
+    if (len(leaves) == 1 and leaves[0].ndim == 2
+            and plan.wire_dtype == "f32" and not plan.use_kernels):
+        return None
+    # The 128-lane padding exists for the Pallas kernels' tile alignment;
+    # the jnp path gains nothing from it and would pay a pad slice+concat
+    # per round, so the buffer stays at the exact wire width there (the
+    # kernel wrappers also pad internally — the aligned carry just avoids
+    # the copy on TPU).
+    from repro.core.packing import LANE
+
+    return PackedLayout.from_tree(shared,
+                                  lane=LANE if plan.use_kernels else 1)
+
+
+def _pack_dpps(state: DPPSState, layout: PackedLayout) -> DPPSState:
+    return state._replace(push=PushSumState(s=layout.pack(state.push.s),
+                                            a=state.push.a))
+
+
+def _unpack_dpps(state: DPPSState, layout: PackedLayout) -> DPPSState:
+    return state._replace(push=PushSumState(s=layout.unpack(state.push.s),
+                                            a=state.push.a))
 
 
 def run_dpps(
@@ -118,6 +173,8 @@ def run_dpps(
     plan: ProtocolPlan,
     rounds: int | None = None,
     track_real: bool = False,
+    tap=None,
+    mechanism=None,
     _gossip_builder=None,
     _node_ops=None,
     _key_fold=None,
@@ -129,15 +186,38 @@ def run_dpps(
     Returns the final state and the per-round diagnostic trajectory (leaves
     (T,) / (T, N)). ``track_real`` additionally records the exact
     sensitivity per round (O(N^2 d) — validation only, paper Fig. 2).
+
+    ``tap`` (:class:`repro.audit.transcript.TranscriptTap`) captures the
+    wire-visible quantities of every round as extra ``tap_*`` trajectory
+    leaves — reassemble them with ``Transcript.from_trajectory``.
+    ``mechanism`` swaps the Laplace draw for a pluggable
+    :class:`repro.audit.mechanisms.NoiseMechanism`. Both default to ``None``
+    and leave the compiled program bit-identical to the PR-1 engine
+    (pinned in tests/test_audit.py).
     """
     cfg = plan.resolve_dpps(cfg)
+    layout = wire_layout(plan, state.push.s)
+    if layout is not None:
+        state = _pack_dpps(state, layout)
     if eps_seq is None:
         if rounds is None:
             raise ValueError("rounds= is required when eps_seq is None")
-        zeros = jax.tree_util.tree_map(jnp.zeros_like, state.push.s)
+        zeros = (jnp.zeros_like(state.push.s) if layout is not None
+                 else jax.tree_util.tree_map(jnp.zeros_like, state.push.s))
         xs: Any = jnp.arange(rounds)
         eps_at = lambda x: zeros
     else:
+        # A pytree eps_seq stays a pytree even when packed: each round's
+        # leaf slices go through the layout's per-region perturb add
+        # (PackedLayout.add_wire) — same element traffic as the buffer
+        # add, no pre-copy of the whole segment into wire layout. Callers
+        # that already hold the perturbations in wire layout pass one
+        # (T, N, d_pad) buffer instead and the round consumes it directly.
+        if layout is not None and isinstance(eps_seq, jnp.ndarray):
+            if eps_seq.shape[-1] != layout.d_pad:
+                raise ValueError(
+                    f"pre-packed eps_seq last dim {eps_seq.shape[-1]} != "
+                    f"layout d_pad {layout.d_pad}")
         xs = eps_seq
         eps_at = lambda x: x
 
@@ -147,10 +227,15 @@ def run_dpps(
             k = _key_fold(k)
         kwargs = _round_kwargs(plan, st.t, _gossip_builder, _node_ops)
         st2, diag = dpps_step(st, eps_at(x), k, cfg,
-                              return_s_half=track_real, **kwargs)
+                              return_s_half=track_real,
+                              mechanism=mechanism, tap=tap, layout=layout,
+                              **kwargs)
         return st2, _capture(diag, track_real)
 
-    return jax.lax.scan(body, state, xs)
+    final, traj = jax.lax.scan(body, state, xs)
+    if layout is not None:
+        final = _unpack_dpps(final, layout)
+    return final, traj
 
 
 def run_partpsp(
@@ -163,6 +248,8 @@ def run_partpsp(
     loss_fn,
     plan: ProtocolPlan,
     track_real: bool = False,
+    tap=None,
+    mechanism=None,
     _gossip_builder=None,
     _node_ops=None,
     _key_fold=None,
@@ -172,8 +259,13 @@ def run_partpsp(
     ``batches``: stacked round batches, leaves (T, N, per_node, ...) — use
     :func:`stack_rounds` to build them from a host loader. Metrics are
     captured every round; the returned trajectory has (T,)-leading leaves.
+    ``tap`` / ``mechanism`` are the audit-lab seams (see :func:`run_dpps`);
+    zero-cost when ``None``.
     """
     cfg = plan.resolve_partpsp(cfg)
+    layout = wire_layout(plan, state.dpps.push.s)
+    if layout is not None:
+        state = state._replace(dpps=_pack_dpps(state.dpps, layout))
 
     def body(st: PartPSPState, batch_t):
         k = jax.random.fold_in(key, st.dpps.t)
@@ -182,10 +274,14 @@ def run_partpsp(
         kwargs = _round_kwargs(plan, st.dpps.t, _gossip_builder, _node_ops)
         st2, m = partpsp_step(st, batch_t, k, cfg=cfg, partition=partition,
                               loss_fn=loss_fn, return_s_half=track_real,
+                              mechanism=mechanism, tap=tap, layout=layout,
                               **kwargs)
         return st2, _capture(m, track_real)
 
-    return jax.lax.scan(body, state, batches)
+    final, traj = jax.lax.scan(body, state, batches)
+    if layout is not None:
+        final = final._replace(dpps=_unpack_dpps(final.dpps, layout))
+    return final, traj
 
 
 def run_decode(

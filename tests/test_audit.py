@@ -110,8 +110,8 @@ def test_reconstruction_sum_cancellation():
 
 def _golden_rounds():
     path = os.path.join(os.path.dirname(__file__), "golden",
-                        "engine_rounds_pr1.py")
-    spec = importlib.util.spec_from_file_location("engine_rounds_pr1", path)
+                        "engine_rounds_pr3.py")
+    spec = importlib.util.spec_from_file_location("engine_rounds_pr3", path)
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
     return mod
@@ -127,9 +127,10 @@ def _compiled(run_fn, cfg, plan, state, eps_seq, key) -> str:
     return fn.lower(state, eps_seq, key).compile().as_text()
 
 
-def test_tap_none_hlo_identical_to_pr1_engine():
+def test_tap_none_hlo_identical_to_golden_engine():
     """The pinned zero-cost claim: with tap=None (the default) the current
-    run_dpps compiles to the same HLO as the PR-1 engine. The golden side
+    run_dpps compiles to the same HLO as the frozen audit-free engine
+    (PR-3 golden copies — the packed flat-buffer runtime). The golden side
     freezes both layers (rounds driver + dpps_step), so a regression in
     either live default path breaks the comparison."""
     golden = _golden_rounds()

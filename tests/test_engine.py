@@ -2,8 +2,14 @@
 numerically identical trajectories to the per-round Python loop for the same
 PRNG keys — for DPPS and PartPSP, on both dense and circulant schedules —
 and the sharded (shard_map) path must match the single-device engine in the
-noiseless regime (noised shards draw independent keys by design)."""
+noiseless regime (noised shards draw independent keys by design).
+
+Packed flat-buffer runtime (PR 3): the packed engine (ProtocolPlan.packed,
+the default) must be BIT-identical to the pytree path in f32 wire mode —
+state and trajectory, both schedules, transcript tap off and on — and its
+dense gossip must compile to exactly one mix contraction per round."""
 import functools
+import re
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +18,7 @@ import pytest
 from jax.sharding import Mesh
 
 from repro.core.dpps import DPPSConfig, dpps_init, dpps_step
+from repro.core.packing import PackedLayout
 from repro.core.partition import Partition
 from repro.core.partpsp import make_baseline_config, partpsp_init, partpsp_step
 from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
@@ -284,6 +291,180 @@ def test_sharded_gossip_lowers_to_collectives(schedule, marker):
 
 
 # ---------------------------------------------------------------------------
+# Packed flat-buffer runtime: bit-exact vs the pytree oracle + HLO pin
+# ---------------------------------------------------------------------------
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _run_both(schedule, *, tap=None, topo=TOPO, s0=None, eps_seq=None):
+    s0 = _s0() if s0 is None else s0
+    eps_seq = _eps_seq(s0) if eps_seq is None else eps_seq
+    cp, lam = calibrate_constants(topo)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=cp, lam=lam,
+                     sync_interval=3, schedule=schedule)
+    out = {}
+    for packed in (True, False):
+        plan = ProtocolPlan.from_topology(
+            topo, schedule=schedule, use_kernels=False, sync_interval=3,
+            packed=packed)
+        out[packed] = jax.jit(functools.partial(
+            run_dpps, cfg=cfg, plan=plan, tap=tap))(
+            dpps_init(s0, plan.resolve_dpps(cfg)), eps_seq,
+            jax.random.PRNGKey(42))
+    return out
+
+
+@pytest.mark.parametrize("schedule", ["dense", "circulant"])
+@pytest.mark.parametrize("tapped", [False, True], ids=["tap_off", "tap_on"])
+def test_packed_dpps_bit_identical_to_pytree(schedule, tapped):
+    """The tentpole contract: f32 packed == pytree, bit for bit — final
+    state and every trajectory leaf, tap off and on (the tap records the
+    same wire bytes either way)."""
+    from repro.audit.transcript import TranscriptTap
+
+    out = _run_both(schedule, tap=TranscriptTap() if tapped else None)
+    (st_p, tr_p), (st_t, tr_t) = out[True], out[False]
+    _assert_trees_equal(st_p, st_t)
+    assert set(tr_p) == set(tr_t)
+    for k in tr_p:
+        np.testing.assert_array_equal(np.asarray(tr_p[k]),
+                                      np.asarray(tr_t[k]))
+
+
+def test_packed_dpps_bit_identical_time_varying_multileaf():
+    """EXP topology + a ragged multi-leaf tree incl. the padding edge."""
+    key = jax.random.PRNGKey(8)
+    s0 = [jax.random.normal(key, (N, 130)),          # > one lane tile
+          jax.random.normal(jax.random.fold_in(key, 1), (N, 2, 3)),
+          jax.random.normal(jax.random.fold_in(key, 2), (N,))]
+    eps_seq = [0.1 * jax.random.normal(jax.random.fold_in(key, 3 + i),
+                                       (T,) + x.shape)
+               for i, x in enumerate(s0)]
+    for schedule in ("dense", "circulant"):
+        out = _run_both(schedule, topo=ExpGraph(n_nodes=N), s0=s0,
+                        eps_seq=eps_seq)
+        _assert_trees_equal(out[True], out[False])
+
+
+def test_packed_accepts_prepacked_wire_eps():
+    """Perturbations already in wire layout (packed with the engine's own
+    wire_layout) skip the per-leaf path and still match the pytree oracle
+    bit-for-bit."""
+    from repro.engine import wire_layout
+
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     sync_interval=3)
+    plan_p = ProtocolPlan.from_topology(TOPO, schedule="dense",
+                                        use_kernels=False, sync_interval=3)
+    eps_wire = wire_layout(plan_p, s0).pack(eps_seq)
+    plan_t = ProtocolPlan.from_topology(TOPO, schedule="dense",
+                                        use_kernels=False, sync_interval=3,
+                                        packed=False)
+    cfg_r = plan_p.resolve_dpps(cfg)
+    key = jax.random.PRNGKey(42)
+    out_p = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan_p))(
+        dpps_init(s0, cfg_r), eps_wire, key)
+    out_t = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan_t))(
+        dpps_init(s0, cfg_r), eps_seq, key)
+    _assert_trees_equal(out_p, out_t)
+
+
+@pytest.mark.parametrize("schedule", ["dense", "circulant"])
+@pytest.mark.parametrize("tapped", [False, True], ids=["tap_off", "tap_on"])
+def test_packed_partpsp_bit_identical_to_pytree(schedule, tapped):
+    """Training integration: the full PartPSP round (gradients, clip,
+    Eq. 25 perturbation, DPPS) is bit-identical packed vs pytree."""
+    from repro.audit.transcript import TranscriptTap
+
+    stacked, part, loss_fn, batches = _mlp_setup()
+    tap = TranscriptTap() if tapped else None
+    cfg = make_baseline_config("partpsp", b=5.0, gamma_n=1e-4, c_prime=CP,
+                               lam=LAM, schedule=schedule, sync_interval=3)
+    out = {}
+    for packed in (True, False):
+        plan = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                          use_kernels=False, sync_interval=3,
+                                          packed=packed)
+        state0 = partpsp_init(stacked, part, plan.resolve_partpsp(cfg))
+        out[packed] = jax.jit(functools.partial(
+            run_partpsp, cfg=cfg, partition=part, loss_fn=loss_fn,
+            plan=plan, tap=tap))(state0, batches, jax.random.PRNGKey(9))
+    (st_p, tr_p), (st_t, tr_t) = out[True], out[False]
+    _assert_trees_equal(st_p, st_t)
+    for k in tr_p:
+        np.testing.assert_array_equal(np.asarray(tr_p[k]),
+                                      np.asarray(tr_t[k]))
+
+
+def test_packed_dense_gossip_single_mix_contraction():
+    """The pinned fusion claim: the packed dense-gossip scan body contains
+    exactly ONE mix contraction per round — one (N, N) x (N, d_pad) dot
+    over the buffer instead of one per leaf. (The push-sum weight matvec
+    has output shape (N,) and is counted separately.)"""
+    s0 = _s0()  # 2 leaves -> the pytree path would emit 2 mix dots
+    layout = PackedLayout.from_tree(s0, lane=1)  # jnp path: exact wire width
+    eps_seq = _eps_seq(s0)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     schedule="dense")
+    plan = ProtocolPlan.from_topology(TOPO, schedule="dense",
+                                      use_kernels=False)
+    txt = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan)).lower(
+        dpps_init(s0, plan.resolve_dpps(cfg)), eps_seq,
+        jax.random.PRNGKey(0)).compile().as_text()
+    mix_dots = re.findall(
+        rf"= f32\[{N},{layout.d_pad}\][^\n]*? dot\(", txt)
+    assert len(mix_dots) == 1, (
+        f"expected exactly 1 packed mix contraction, found "
+        f"{len(mix_dots)}:\n" + "\n".join(mix_dots))
+    # and no per-leaf mix dots survive anywhere
+    for leaf in s0:
+        d = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+        assert not re.findall(rf"= f32\[{N},{d}\][^\n]*? dot\(", txt)
+
+
+def test_packed_bf16_wire_close_to_f32():
+    """bf16 wire: mixes in bf16, accumulates fp32 — close to (but not
+    bitwise) the f32 wire, and only available packed."""
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     sync_interval=3)
+    outs = {}
+    for wire in ("f32", "bf16"):
+        plan = ProtocolPlan.from_topology(TOPO, schedule="dense",
+                                          use_kernels=False, sync_interval=3,
+                                          wire_dtype=wire)
+        outs[wire] = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))(
+            dpps_init(s0, plan.resolve_dpps(cfg)), eps_seq,
+            jax.random.PRNGKey(1))
+    sf, sb = outs["f32"][0], outs["bf16"][0]
+    # bf16 wire loses mantissa on the messages: close but not identical
+    _assert_trees_close(sf.push.s, sb.push.s, atol=5e-2)
+    assert not all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(sf.push.s),
+                        jax.tree_util.tree_leaves(sb.push.s)))
+    # state comes back fp32 (accumulate/correct in full precision)
+    assert all(x.dtype == jnp.float32
+               for x in jax.tree_util.tree_leaves(sb.push.s))
+
+
+def test_bf16_wire_requires_packed():
+    with pytest.raises(ValueError):
+        ProtocolPlan.from_topology(TOPO, packed=False, wire_dtype="bf16")
+    cfg = DPPSConfig(wire_dtype="bf16")
+    s0 = _s0()
+    with pytest.raises(ValueError):
+        dpps_step(dpps_init(s0, cfg), s0, jax.random.PRNGKey(0), cfg,
+                  w=jnp.eye(N))
+
+
+# ---------------------------------------------------------------------------
 # ProtocolPlan + decode driver
 # ---------------------------------------------------------------------------
 
@@ -294,6 +475,8 @@ def test_plan_auto_choices():
     assert plan.offsets == (0, 1)
     assert plan.use_kernels is False             # CPU backend in tests
     assert plan.sync_interval == 2               # max(2, 2 * period), period 1
+    assert plan.packed is True                   # packed runtime is default
+    assert plan.wire_dtype == "f32"
 
     exp = ProtocolPlan.from_topology(ExpGraph(n_nodes=10),
                                      sync_interval="auto")

@@ -6,29 +6,24 @@ params). Data: synthetic teacher-MLP classification (the container is
 offline — see DESIGN.md hardware-adaptation table) with Dirichlet non-IID
 node splits. Network: N = 10 nodes, d-Out and EXP graphs, seed 2024 — all
 matching the paper's SV.A settings.
+
+All runs build through the session front door (:mod:`repro.api`):
+:func:`build_setup` returns a ready :class:`repro.api.Session` plus the
+task and its host batch stream, and :func:`run_experiment` drives
+``session.train`` with exact-sensitivity tracking attached as a
+:class:`RealSensitivityHook` when requested.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition import Partition
-from repro.core.partpsp import (
-    consensus_params,
-    make_baseline_config,
-    partpsp_init,
-    partpsp_step,
-)
-from repro.core.sensitivity import real_sensitivity
-from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
-from repro.data import SyntheticClassification, dirichlet_partition
-from repro.engine import ProtocolPlan, run_partpsp, run_segments
+from repro.api import PrivacySpec, RealSensitivityHook, Session
+from repro.core.partpsp import consensus_params
+from repro.core.topology import DOutGraph, ExpGraph
 
 N_NODES = 10
 SEED = 2024
@@ -88,6 +83,7 @@ class RunResult:
     wall_s: float
     steps: int
     loss: float
+    eps_total: float = float("inf")  # composed epsilon spent by the run
 
     def csv(self) -> str:
         us = self.wall_s / max(self.steps, 1) * 1e6
@@ -115,26 +111,28 @@ def build_setup(
     c_prime: float | None = None,
     lam: float | None = None,
 ):
-    """Topology + config + initial state + host batch stream (both drivers)."""
+    """One session + task + host batch stream for the paper's MLP setup.
+
+    Returns ``(session, task, batch_at)``; the session owns topology,
+    calibration, configs, plan and initial state (``session.train_state``).
+    """
+    from repro.data import SyntheticClassification, dirichlet_partition
+
     n_nodes = N_NODES if n_nodes is None else n_nodes
     topo = make_topology_n(topology, n_nodes)
-    cal_c, cal_l = calibrate_constants(topo)
-    c_prime = cal_c if c_prime is None else c_prime
-    lam = cal_l if lam is None else lam
     if algorithm in ("sgp", "sgpdp", "pedfl"):
         partition_name = "full"
-    cfg = make_baseline_config(
-        algorithm, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip, b=b,
-        gamma_n=gamma_n, c_prime=c_prime, lam=lam, schedule=schedule,
-        sync_interval=sync_interval, sensitivity_mode=sensitivity_mode)
 
     key = jax.random.PRNGKey(seed)
-    params0 = init_mlp(key)
-    stacked = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape) + 0.0, params0)
-    part = Partition.from_rules(stacked, PARTITIONS[partition_name],
-                                default="local")
-    state = partpsp_init(stacked, part, cfg)
+    session = Session.build(
+        topo,
+        privacy=PrivacySpec(b=b, gamma_n=gamma_n, c_prime=c_prime, lam=lam,
+                            sensitivity_mode=sensitivity_mode),
+        model=mlp_loss, partition=PARTITIONS[partition_name],
+        params=init_mlp(key), algorithm=algorithm, gamma_l=gamma_l,
+        gamma_s=gamma_s, clip=clip, schedule=schedule,
+        sync_interval=sync_interval, use_kernels=False, chunk=chunk,
+        key=key)
 
     task = SyntheticClassification(d_in=D_IN, n_classes=N_CLASSES, seed=seed)
     skew = dirichlet_partition(n_nodes, N_CLASSES, alpha=0.5, seed=seed)
@@ -143,10 +141,7 @@ def build_setup(
         k = jax.random.fold_in(jax.random.PRNGKey(seed + 1), t)
         return task.node_batches(k, n_nodes, batch, skew)
 
-    plan = ProtocolPlan.from_topology(
-        topo, schedule=schedule, use_kernels=False,
-        sync_interval=sync_interval, chunk=chunk)
-    return topo, cfg, part, state, plan, task, batch_at, key
+    return session, task, batch_at
 
 
 def run_experiment(
@@ -174,56 +169,24 @@ def run_experiment(
     lam: float | None = None,       # the paper tunes these per setup (SV.B)
 ) -> RunResult:
     n_nodes = N_NODES if n_nodes is None else n_nodes
-    topo, cfg, part, state, plan, task, batch_at, key = build_setup(
+    session, task, batch_at = build_setup(
         algorithm=algorithm, partition_name=partition_name, topology=topology,
         b=b, gamma_n=gamma_n, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
         batch=batch, sync_interval=sync_interval,
         sensitivity_mode=sensitivity_mode, schedule=schedule, chunk=chunk,
         n_nodes=n_nodes, seed=seed, c_prime=c_prime, lam=lam)
 
-    reals, ests = [], []
-    violations = 0
-    m = {}
-    if driver == "engine":
-        cfg = plan.resolve_partpsp(cfg)
-        run_chunk = jax.jit(functools.partial(
-            run_partpsp, cfg=cfg, partition=part, loss_fn=mlp_loss, plan=plan,
-            track_real=track_real))
-        t0 = time.time()
-        for _, _, state, traj in run_segments(run_chunk, state, batch_at, key,
-                                              steps=steps, chunk=plan.chunk):
-            ests.extend(np.asarray(traj["sensitivity_estimate"]).tolist())
-            if track_real:
-                seg_reals = np.asarray(traj["sensitivity_real"])
-                seg_ests = np.asarray(traj["sensitivity_estimate"])
-                reals.extend(seg_reals.tolist())
-                violations += int(np.sum(seg_reals > seg_ests + 1e-6))
-            m = {"loss_mean": traj["loss_mean"][-1]}
-        wall = time.time() - t0
-    else:
-        # per-round reference loop (the seed driver; kept for engine-vs-loop
-        # comparisons — EXP is time varying: rotate the per-period W)
-        if schedule != "dense":
-            raise ValueError("the loop driver only supports the dense "
-                             "schedule; use driver='engine'")
-        ws = [topo.weight_matrix_jnp(t) for t in range(getattr(topo, "period", 1))]
-        step = jax.jit(functools.partial(
-            partpsp_step, cfg=cfg, partition=part, loss_fn=mlp_loss,
-            return_s_half=track_real))
-        t0 = time.time()
-        for t in range(steps):
-            state, m = step(state, batch_at(t), jax.random.fold_in(key, t),
-                            w=ws[t % len(ws)])
-            ests.append(float(m["sensitivity_estimate"]))
-            if track_real:
-                real = float(real_sensitivity(m["s_half"]))
-                reals.append(real)
-                if real > float(m["sensitivity_estimate"]) + 1e-6:
-                    violations += 1
-        wall = time.time() - t0
+    real_hook = RealSensitivityHook() if track_real else None
+    report = session.train(steps, batch_at,
+                           hooks=[real_hook] if real_hook else [],
+                           driver=driver)
+
+    ests = np.asarray(report.trajectory["sensitivity_estimate"])
+    reals = (np.asarray(report.trajectory["sensitivity_real"])
+             if track_real else None)
 
     # --- evaluation (paper SV.D): consensus shared params + local params ----
-    cp = consensus_params(state, part)
+    cp = consensus_params(report.state, session.partition)
     k_test = jax.random.PRNGKey(seed + 99)
     x_test, y_test = task.sample(k_test, 2000)
     accs = []
@@ -231,12 +194,13 @@ def run_experiment(
         p_i = jax.tree_util.tree_map(lambda x: x[i], cp)
         pred = jnp.argmax(mlp_logits(p_i, x_test), axis=1)
         accs.append(float(jnp.mean((pred == y_test).astype(jnp.float32))))
-    loss = float(m.get("loss_mean", np.nan))
+    loss = float(np.asarray(report.trajectory["loss_mean"])[-1])
 
     return RunResult(
         name=name or f"{algorithm}/{partition_name}/{topology}/b={b}",
         accuracy=float(np.mean(accs)),
-        ras=float(np.mean(reals)) if reals else float(np.mean(ests)),
-        est_sens_mean=float(np.mean(ests)) if ests else 0.0,
-        violations=violations,
-        wall_s=wall, steps=steps, loss=loss)
+        ras=float(np.mean(reals)) if reals is not None else float(np.mean(ests)),
+        est_sens_mean=float(np.mean(ests)) if ests.size else 0.0,
+        violations=real_hook.violations if real_hook else 0,
+        wall_s=report.wall_clock, steps=steps, loss=loss,
+        eps_total=report.epsilon_spent)

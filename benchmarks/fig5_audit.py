@@ -72,25 +72,15 @@ def run_membership(steps: int = 60, trials: int = 200):
     losses of node 0's round-0 training batch (members) against fresh
     draws from the same task (non-members) under the consensus params.
     """
-    import functools
-
     import jax.numpy as jnp
 
     from benchmarks.common import SEED, build_setup, mlp_loss
-    from repro.core.partpsp import consensus_params
-    from repro.engine import run_partpsp, run_segments
 
-    _, cfg, part, state, plan, task, batch_at, key = build_setup(
+    session, task, batch_at = build_setup(
         algorithm="partpsp", partition_name="partpsp-1", topology="2-out",
         b=1.0, gamma_n=1e-4)
-    cfg = plan.resolve_partpsp(cfg)
-    run_chunk = jax.jit(functools.partial(
-        run_partpsp, cfg=cfg, partition=part, loss_fn=mlp_loss, plan=plan))
-    for _, _, state, _ in run_segments(run_chunk, state, batch_at, key,
-                                       steps=steps, chunk=plan.chunk):
-        pass
-    p0 = jax.tree_util.tree_map(lambda x: x[0],
-                                consensus_params(state, part))
+    report = session.train(steps, batch_at)
+    p0 = session.consensus_view(report.state, 0)
 
     xb, yb = batch_at(0)
     x_in, y_in = xb[0][:trials], yb[0][:trials]

@@ -69,9 +69,11 @@ def engine_vs_loop(steps: int = 200, n_nodes: int = 16,
     s0 = [jax.random.normal(key, (n_nodes, d_shared))]
     eps_seq = [0.01 * jax.random.normal(jax.random.fold_in(key, 1),
                                         (steps, n_nodes, d_shared))]
+    from repro.engine import ProtocolPlan
+
     cfg = DPPSConfig(b=3.0, gamma_n=1e-4, c_prime=cp, lam=lam,
                      sync_interval=2)
-    plan = common.ProtocolPlan.from_topology(
+    plan = ProtocolPlan.from_topology(
         topo, schedule="dense", use_kernels=False, sync_interval=2)
     cfg_r = plan.resolve_dpps(cfg)
     state0 = dpps_init(s0, cfg_r)
@@ -121,9 +123,11 @@ def engine_vs_loop_train(steps: int = 100, n_nodes: int = 16) -> str:
     round, so the engine's dispatch amortization shows up as a smaller
     (workload-dependent) factor — reported but not asserted.
     """
-    topo, cfg, part, state0, plan, _, batch_at, key = common.build_setup(
+    session, _, batch_at = common.build_setup(
         algorithm="partpsp", partition_name="partpsp-1", topology="exp",
         b=3.0, gamma_n=1e-4, sync_interval=2, n_nodes=n_nodes)
+    topo, cfg, part = session.topology, session.train_cfg, session.partition
+    plan, state0, key = session.plan, session.train_state(), session.base_key
     round_batches = [batch_at(t) for t in range(steps)]
     ws = [topo.weight_matrix_jnp(t)
           for t in range(getattr(topo, "period", 1))]

@@ -2,20 +2,21 @@
 network-average shared parameters s-bar (the protocol output), and run
 batched autoregressive decoding with the KV cache.
 
+One session drives both phases — ``session.train`` for the protocol,
+``session.serve`` for the scan-compiled decode on the consensus view
+(repro.api owns the cache-capacity grafting that used to live here).
+
     PYTHONPATH=src python examples/decentralized_serve.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core.partpsp import consensus_params
 from repro.data import NodeShardedLoader, SyntheticLMStream
-from repro.launch.train import build_trainer
-from repro.models import Transformer
+from repro.launch.train import build_session
 
 
 def main():
     arch = "gemma3-1b"   # reduced variant: sliding-window + global attention
-    model, cfg_model, topo, cfg, partition, state, step = build_trainer(
+    model, cfg_model, session = build_session(
         arch, reduced=True, n_nodes=4, algorithm="partpsp", b=3.0,
         gamma_n=1e-6, gamma_l=0.05, gamma_s=0.05, clip=100.0,
         topology="dout", degree=2, sync_interval=5, schedule="dense")
@@ -24,40 +25,19 @@ def main():
                                n_nodes=4, seed=0)
     loader = NodeShardedLoader(stream, per_node_batch=4, seed=0)
     print("training 30 PartPSP rounds...")
-    for t in range(30):
-        state, m = step(state, loader.batch_at(t),
-                        jax.random.fold_in(jax.random.PRNGKey(1), t))
-    print(f"final loss {float(m['loss_mean']):.3f}")
+    report = session.train(30, loader.batch_at, key=jax.random.PRNGKey(1))
+    print(f"final loss {float(report.trajectory['loss_mean'][-1]):.3f} "
+          f"(epsilon spent: {report.epsilon_spent:.1e})")
 
     # protocol output: s-bar + (node 0's) local parameters
-    cp = consensus_params(state, partition)
-    params = jax.tree_util.tree_map(lambda x: x[0], cp)
+    params = session.consensus_view(report.state, 0)
 
     B, PROMPT, GEN = 2, 12, 12
     key = jax.random.PRNGKey(7)
     toks = jax.random.randint(key, (B, PROMPT), 0, cfg_model.vocab_size)
-    logits, cache = model.prefill(params, {"tokens": toks})
-    full = model.init_cache(B, PROMPT + GEN)
-
-    def graft(dst, src):
-        if dst.shape != src.shape:
-            return dst.at[tuple(slice(0, d) for d in src.shape)].set(
-                src.astype(dst.dtype))
-        return src.astype(dst.dtype)
-
-    cache = jax.tree_util.tree_map(graft, full, cache)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tok]
-    decode = jax.jit(model.decode_step)
-    for i in range(GEN - 1):
-        logits, cache = decode(params, cache, tok,
-                               jnp.asarray(PROMPT + i, jnp.int32))
-        key, sub = jax.random.split(key)
-        tok = jax.random.categorical(sub, logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    gen = jnp.stack(out, axis=1)
+    serve = session.serve(params, {"tokens": toks}, gen=GEN, key=key)
     print("prompt :", toks[0].tolist())
-    print("greedy+sampled continuation:", gen[0].tolist())
+    print("greedy+sampled continuation:", serve.tokens[0].tolist())
 
 
 if __name__ == "__main__":

@@ -7,47 +7,43 @@ launch/train.py). A few hundred steps of the ~100M-class reduced config:
 
     PYTHONPATH=src python examples/partpsp_train.py --steps 200
 
-This is a thin veneer over launch/train.py's build_engine_trainer — the
-public API. Training runs through the scan-compiled engine (repro.engine):
-each --chunk-round segment is a single XLA dispatch.
+This is a thin veneer over the session front door (repro.api): the
+arch-specific assembly comes from launch/train.py's build_session, the run
+is ``session.train`` with a MetricsHook, and invalid flag combinations are
+rejected at the CLI (no deep ProtocolPlan tracebacks). Training runs
+through the scan-compiled engine: each --chunk-round segment is a single
+XLA dispatch.
 """
 import argparse
 import json
 
 import jax
-import numpy as np
 
+from repro.api import MetricsHook, add_protocol_arguments, validate_protocol_args
 from repro.core.partpsp import privacy_summary
 from repro.data import NodeShardedLoader, SyntheticLMStream
-from repro.engine import run_segments
-from repro.launch.train import build_engine_trainer
+from repro.launch.train import build_session
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--b", type=float, default=3.0)
     ap.add_argument("--gamma-n", type=float, default=1e-6)
     ap.add_argument("--full-scale", action="store_true")
-    ap.add_argument("--chunk", type=int, default=25,
-                    help="rounds per compiled engine segment")
-    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="packed (N, d_s) wire-buffer runtime "
-                         "(--no-packed keeps the pytree path)")
-    ap.add_argument("--wire-dtype", choices=("f32", "bf16"), default="f32",
-                    help="gossip wire format (bf16 halves wire bytes)")
+    add_protocol_arguments(ap, chunk=25)
     args = ap.parse_args()
+    validate_protocol_args(ap, args)
 
-    (model, cfg_model, topo, cfg, partition, state, run_chunk,
-     plan) = build_engine_trainer(
+    model, cfg_model, session = build_session(
         args.arch, reduced=not args.full_scale, n_nodes=args.nodes,
         algorithm="partpsp", b=args.b, gamma_n=args.gamma_n,
         gamma_l=0.05, gamma_s=0.05, clip=100.0, topology="dout", degree=2,
         sync_interval=5, schedule="circulant", chunk=args.chunk,
-        packed=args.packed, wire_dtype=args.wire_dtype)
+        packed=args.packed, wire_dtype=args.wire_dtype, seed=0)
+    partition = session.partition
 
     mode = f"packed/{args.wire_dtype}" if args.packed else "pytree"
     print(f"PartPSP on {args.arch} ({'full' if args.full_scale else 'reduced'}) "
@@ -59,18 +55,16 @@ def main():
                                n_nodes=args.nodes, seed=0)
     loader = NodeShardedLoader(stream, per_node_batch=4, seed=0)
 
-    base_key = jax.random.PRNGKey(1)
-    for seg0, n, state, traj in run_segments(
-            run_chunk, state, loader.batch_at, base_key,
-            steps=args.steps, chunk=plan.chunk):
-        loss = np.asarray(traj["loss_mean"])
-        sens = np.asarray(traj["sensitivity_used"])
-        for i in range(n):
-            t = seg0 + i
-            if t % 20 == 0 or t == args.steps - 1:
-                print(f"step {t:4d}  loss {loss[i]:.4f}  S {sens[i]:.2f}")
+    metrics = MetricsHook(
+        fields={"loss": "loss_mean", "S": "sensitivity_used"},
+        log_every=20, total=args.steps,
+        formatter=lambda r: (f"step {r['step']:4d}  loss {r['loss']:.4f}  "
+                             f"S {r['S']:.2f}"))
+    session.train(args.steps, loader.batch_at, hooks=[metrics],
+                  key=jax.random.PRNGKey(1))
 
-    print("privacy:", json.dumps(privacy_summary(cfg, args.steps)))
+    print("privacy:", json.dumps(privacy_summary(session.train_cfg,
+                                                 args.steps)))
 
 
 if __name__ == "__main__":

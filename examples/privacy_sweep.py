@@ -4,9 +4,10 @@ vs full-communication SGPDP across privacy budgets.
 
 Two distinct epsilon figures are reported per row:
 
-* ``eps_total`` — the ledger's composed theoretical epsilon actually spent
-  by the 200-round training run at its own gamma_n (large: DP across many
-  rounds is expensive).
+* ``eps_total`` — the composed theoretical epsilon actually spent by the
+  training run at its own gamma_n, read straight off the session run's
+  :class:`repro.api.RunReport` (large: DP across many rounds is
+  expensive).
 * ``eps/rd emp`` — the attack battery's Clopper–Pearson lower bound for
   one protocol round audited at the *normalized* per-round claim
   ``epsilon = b`` (gamma_n = 1; the distinguishing statistic depends only
@@ -14,8 +15,13 @@ Two distinct epsilon figures are reported per row:
   healthy implementation keeps eps/rd emp <= b in every row — the audit
   column flags the row otherwise.
 
-    PYTHONPATH=src:. python examples/privacy_sweep.py
+Every training run builds through the session front door
+(benchmarks.common.run_experiment -> repro.api.Session); there is no
+per-round Python loop and no hand-maintained ledger left in this example.
+
+    PYTHONPATH=src:. python examples/privacy_sweep.py [--smoke]
 """
+import argparse
 import sys
 
 sys.path.insert(0, ".")
@@ -25,48 +31,49 @@ from benchmarks.common import run_experiment  # noqa: E402
 from repro.audit import (  # noqa: E402
     AuditConfig,
     LOCAL_EAVESDROPPER,
-    PrivacyLedger,
     distinguishing_attack,
 )
-from repro.core.dpps import is_sync_round  # noqa: E402
 
-STEPS = 200
+SYNC_INTERVAL = 5
 GAMMA_N = 1e-4
-SYNC_INTERVAL = 5  # passed to both the runs and their ledgers
 
 
-def audited_epsilon(b: float) -> tuple[float, float, bool]:
+def audited_epsilon(b: float, trials: int) -> tuple[float, float, bool]:
     """(theoretical per-round eps, empirical lower bound, flagged) at b."""
     r = distinguishing_attack(
         LOCAL_EAVESDROPPER,
-        audit=AuditConfig(b=b, gamma_n=1.0, trials=1000, seed=int(b * 10)))
+        audit=AuditConfig(b=b, gamma_n=1.0, trials=trials, seed=int(b * 10)))
     return r.theoretical_epsilon, r.empirical.epsilon_lower, r.flagged
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale for CI (fewer steps/trials/budgets)")
+    args = ap.parse_args()
+    steps = 40 if args.smoke else 200
+    trials = 400 if args.smoke else 1000
+    budgets = (1.0,) if args.smoke else (1.0, 3.0, 5.0)
+
     print(f"{'algorithm':12s} {'b':>5s} {'accuracy':>9s} {'RAS':>9s} "
           f"{'eps_total':>11s} {'eps/rd claim':>12s} {'eps/rd emp>=':>12s} "
           f"{'audit':>7s}")
-    for b in (1.0, 3.0, 5.0):
+    for b in budgets:
         # The battery audits one protocol round at the normalized claim
         # epsilon = b (gamma_n = 1); see module docstring.
-        eps_th, eps_emp, flagged = audited_epsilon(b)
+        eps_th, eps_emp, flagged = audited_epsilon(b, trials)
         for alg, part in (("partpsp", "partpsp-1"), ("sgpdp", "full")):
             r = run_experiment(algorithm=alg, partition_name=part,
                                topology="4-out", b=b, gamma_n=GAMMA_N,
-                               sensitivity_mode="real", steps=STEPS,
+                               sensitivity_mode="real", steps=steps,
                                sync_interval=SYNC_INTERVAL,
+                               schedule="circulant",
                                name=f"{alg}/b={b}")
-            ledger = PrivacyLedger(b=b, gamma_n=GAMMA_N, algorithm=alg)
-            for t in range(STEPS):
-                ledger.record_round(
-                    t, synced=is_sync_round(t, SYNC_INTERVAL))
-            total = ledger.theoretical_epsilon()
             print(f"{alg:12s} {b:5.1f} {r.accuracy:9.4f} {r.ras:9.2f} "
-                  f"{total:11.1f} {eps_th:12.3f} {eps_emp:12.3f} "
+                  f"{r.eps_total:11.1f} {eps_th:12.3f} {eps_emp:12.3f} "
                   f"{'FLAG' if flagged else 'ok':>7s}")
     r = run_experiment(algorithm="sgp", topology="4-out", b=1.0, gamma_n=0.0,
-                       steps=STEPS, name="sgp/nodp")
+                       steps=steps, schedule="circulant", name="sgp/nodp")
     print(f"{'sgp (NoDP)':12s} {'-':>5s} {r.accuracy:9.4f} {'-':>9s} "
           f"{'inf':>11s} {'-':>12s} {'-':>12s} {'-':>7s}")
     print("\nAt tight budgets (b=1) PartPSP-1's smaller d_s buys ~2x the")
@@ -75,8 +82,8 @@ def main():
     print("the paper's Table II trade-off, end to end. 'eps/rd emp' is the")
     print("attack battery's one-round lower bound and must stay below the")
     print("'eps/rd claim' column (= b), else the audit column flags the")
-    print("row; 'eps_total' is the training run's composed spend from the")
-    print("ledger. See benchmarks/fig5_audit.py for the full mechanism x")
+    print("row; 'eps_total' is the training run's composed spend from its")
+    print("RunReport. See benchmarks/fig5_audit.py for the full mechanism x")
     print("threat-model grid.")
 
 

@@ -4,43 +4,63 @@ Ten nodes each hold a private vector; they reach consensus on the average
 through the DPPS protocol without any node ever revealing its exact vector
 (each round is b/gamma_n-differentially private, paper Theorem 1).
 
+Everything protocol-shaped happens through the session front door
+(:mod:`repro.api`): ``Session.build`` calibrates the sensitivity constants
+to the graph, derives the execution plan (circulant gossip for d-Out
+graphs, packed wire buffer, scan-compiled segments — one XLA dispatch for
+the whole run, not one per round), and ``session.run`` returns a typed
+report. Exact-sensitivity validation rides along as a hook.
+
     PYTHONPATH=src python examples/quickstart.py
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import DPPSConfig, DOutGraph, dpps_init, dpps_step, real_sensitivity
-from repro.core.dpps import dpps_consensus
-from repro.core.topology import calibrate_constants
+from repro.api import PrivacySpec, RealSensitivityHook, Session
+from repro.core import DOutGraph
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--rounds", type=int, default=60)
+args = ap.parse_args()
 
 N = 10
 topo = DOutGraph(n_nodes=N, d=2)
 
-# Calibrate the sensitivity-estimation constants to this graph (the
-# principled version of the paper's per-setup tuning of C', lambda).
-c_prime, lam = calibrate_constants(topo)
-# gamma_n inside the sensitivity-feedback stability region
-# (gamma_n < (1/lam - 1) * b / (2 C' d_s); see EXPERIMENTS.md SClaims)
-cfg = DPPSConfig(b=5.0, gamma_n=1e-3, c_prime=c_prime, lam=lam)
-print(f"graph: 2-out over {N} nodes | C'={c_prime:.2f} lambda={lam:.2f} "
-      f"| epsilon per round = b/gamma_n = {cfg.epsilon_per_round:.0f}")
+# The session owns calibration ((C', lambda) fitted to this graph — the
+# principled version of the paper's per-setup tuning), plan derivation
+# (auto-picks the circulant engine schedule: d-Out mixing lowers to
+# weighted rolls), config stamping and the base-key discipline.
+# gamma_n sits inside the sensitivity-feedback stability region
+# (gamma_n < (1/lam - 1) * b / (2 C' d_s); see EXPERIMENTS.md SClaims).
+session = Session.build(topo, privacy=PrivacySpec(b=5.0, gamma_n=1e-3))
+cfg, plan = session.cfg, session.plan
+print(f"graph: 2-out over {N} nodes | C'={cfg.c_prime:.2f} "
+      f"lambda={cfg.lam:.2f} | epsilon per round = b/gamma_n = "
+      f"{cfg.epsilon_per_round:.0f} | schedule={plan.schedule} "
+      f"(scan segments of {plan.chunk})")
 
 # Each node's private value (e.g. a local model or measurement).
 key = jax.random.PRNGKey(0)
 private = [jax.random.normal(key, (N, 8))]
 true_mean = jnp.mean(private[0], axis=0)
 
-state = dpps_init(private, cfg)
-zero_eps = [jnp.zeros_like(x) for x in private]
-for t in range(60):
-    state, diag = dpps_step(state, zero_eps, jax.random.fold_in(key, t), cfg,
-                            w=topo.weight_matrix_jnp(t), return_s_half=True)
-    if t % 15 == 0:
-        real = float(real_sensitivity(diag["s_half"]))
-        print(f"round {t:3d}: estimated sensitivity "
-              f"{float(diag['sensitivity_estimate']):8.3f} >= real {real:8.3f}")
+# One compiled run; the RealSensitivityHook captures the exact network
+# sensitivity inside the scan so we can verify the Remark 1 guarantee
+# (estimate >= reality) on every round.
+real = RealSensitivityHook()
+report = session.run(args.rounds, values=private, hooks=[real])
+for t in range(0, args.rounds, max(args.rounds // 4, 1)):
+    print(f"round {t:3d}: estimated sensitivity "
+          f"{float(report.trajectory['sensitivity_estimate'][t]):8.3f} "
+          f">= real {float(report.trajectory['sensitivity_real'][t]):8.3f}")
+assert real.violations == 0, "Remark 1 violated: estimate fell below real"
 
-consensus = dpps_consensus(state)[0]
+consensus = session.consensus(report.state)[0]
 err = float(jnp.max(jnp.abs(consensus - true_mean[None])))
 print(f"\nconsensus error vs true mean: {err:.4f} "
       f"(noise floor ~ gamma_n * S / b; privacy was preserved every round)")
+print(f"report: {report.rounds} rounds, epsilon spent = "
+      f"{report.epsilon_spent:.0f}, ~{report.wire_bytes:,} wire bytes, "
+      f"{report.wall_clock:.2f}s")

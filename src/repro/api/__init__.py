@@ -1,0 +1,57 @@
+"""repro.api — the typed front door of the DPPS/PartPSP reproduction.
+
+One import gives consumers the whole protocol stack, pre-wired:
+
+* :class:`Session` / :class:`ProtocolSession` (session.py) — built once
+  from topology + :class:`PrivacySpec` (+ optional plan/model/partition),
+  owning constant calibration, plan derivation, config stamping, packed
+  layout, base-key discipline and checkpoint/resume; exposes ``run``,
+  ``train``, ``serve``.
+* :class:`RoundHook` pipeline (hooks.py) — composable observers with a
+  scan-side ``capture`` and a host-side ``consume`` at segment
+  boundaries: :class:`TranscriptHook`, :class:`LedgerHook`,
+  :class:`BudgetHook`, :class:`RealSensitivityHook`, :class:`MetricsHook`.
+  Zero-cost when absent (HLO-pinned), bit-transparent when attached.
+* :class:`RunReport` / :class:`ServeReport` (results.py) — typed results
+  carrying epsilon spent, wire bytes and wall-clock.
+* CLI helpers (cli.py) — shared deployment flags with front-of-house
+  validation.
+
+New workloads are new sessions + hooks, not new drivers: every driver in
+the repo (launch/train.py, launch/serve.py, benchmarks/, examples/)
+builds its runs through this package.
+"""
+from repro.api.cli import add_protocol_arguments, validate_protocol_args
+from repro.api.hooks import (
+    BudgetExhausted,
+    BudgetHook,
+    LedgerHook,
+    MetricsHook,
+    RealSensitivityHook,
+    RoundHook,
+    RunContext,
+    TranscriptHook,
+    hook_trace_spec,
+)
+from repro.api.results import RunReport, ServeReport, estimate_wire_bytes
+from repro.api.session import PrivacySpec, ProtocolSession, Session
+
+__all__ = [
+    "BudgetExhausted",
+    "BudgetHook",
+    "LedgerHook",
+    "MetricsHook",
+    "PrivacySpec",
+    "ProtocolSession",
+    "RealSensitivityHook",
+    "RoundHook",
+    "RunContext",
+    "RunReport",
+    "ServeReport",
+    "Session",
+    "TranscriptHook",
+    "add_protocol_arguments",
+    "estimate_wire_bytes",
+    "hook_trace_spec",
+    "validate_protocol_args",
+]

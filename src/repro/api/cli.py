@@ -1,0 +1,54 @@
+"""Shared protocol CLI flags + front-of-house validation.
+
+Every training CLI (launch/train.py, examples/partpsp_train.py) exposes
+the same deployment flags; this module owns them so invalid combinations
+fail at argument-parsing time with an actionable message instead of
+surfacing as a deep ``ProtocolPlan.__post_init__`` traceback from inside
+the build.
+"""
+from __future__ import annotations
+
+import argparse
+
+__all__ = ["add_protocol_arguments", "validate_protocol_args"]
+
+
+def add_protocol_arguments(ap: argparse.ArgumentParser, *,
+                           chunk: int = 50) -> None:
+    """Attach the shared engine/runtime flags to ``ap``."""
+    ap.add_argument("--chunk", type=int, default=chunk,
+                    help="rounds per compiled engine segment")
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the engine over the packed (N, d_s) wire "
+                         "buffer (--no-packed keeps the pytree path)")
+    ap.add_argument("--wire-dtype", choices=("f32", "bf16"), default="f32",
+                    help="gossip wire format; bf16 halves wire bytes "
+                         "(mix in bf16, accumulate fp32; needs --packed)")
+
+
+def validate_protocol_args(ap: argparse.ArgumentParser,
+                           args: argparse.Namespace) -> None:
+    """Reject invalid flag combinations with an actionable parser error.
+
+    Rules (mirroring ProtocolPlan's invariants, surfaced early):
+      * bf16 wire needs the packed runtime — the wire format exists as a
+        single cast of the packed buffer;
+      * bf16 wire needs the engine driver — the per-round loop runs the
+        pytree reference path;
+      * chunk must be a positive segment length.
+    """
+    if getattr(args, "chunk", 1) < 1:
+        ap.error("--chunk must be >= 1")
+    wire = getattr(args, "wire_dtype", "f32")
+    if wire == "f32":
+        return
+    if not getattr(args, "packed", True):
+        ap.error(
+            f"--wire-dtype {wire} requires the packed runtime: the wire "
+            "format is a single cast of the packed (N, d_s) buffer. Drop "
+            "--no-packed, or use --wire-dtype f32 with the pytree path.")
+    if getattr(args, "driver", "engine") != "engine":
+        ap.error(
+            f"--wire-dtype {wire} requires --driver engine: the per-round "
+            "loop driver runs the pytree reference path, which is f32-only.")

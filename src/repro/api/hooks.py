@@ -1,0 +1,339 @@
+"""RoundHook — the composable observer pipeline of the session API.
+
+A hook couples one *scan-side* capture with one *host-side* consumer:
+
+* ``capture(diag) -> dict | None`` runs inside the engine's compiled scan
+  body on the round diagnostics (traced values). Whatever it returns is
+  stacked into extra ``(T, ...)`` trajectory leaves alongside the engine's
+  own metrics.
+* ``consume(rows, *, t0)`` runs on the host at every segment boundary with
+  the segment's stacked trajectory (``t0`` = the segment's first absolute
+  round). This is where JSONL streaming, budget enforcement and logging
+  live — outside the compiled program.
+
+Two static trace-time declarations let the drivers emit exactly the code a
+hook needs and nothing more:
+
+* ``tap``          — a :class:`repro.audit.transcript.TranscriptTap` to
+  thread into ``dpps_step`` (at most one tap-bearing hook per run);
+* ``needs_s_half`` — request the perturbed pre-noise state ``s^(t+1/2)``
+  in the diagnostics (the exact-sensitivity input, paper Fig. 2).
+
+Zero-cost contract: with no hooks attached the drivers trace a program
+bit-identical to the audit-free engine (the HLO is pinned against the
+frozen PR-3 golden modules in tests/test_api.py). With hooks attached the
+protocol state trajectory is unchanged — hooks only add scan outputs — and
+the built-in hooks reproduce the deprecated ``tap=`` / ``track_real=``
+kwarg paths bit-for-bit: :class:`TranscriptHook` and
+:class:`RealSensitivityHook` run the exact same traced expressions those
+kwargs used to emit, and :class:`LedgerHook` records through the same
+:meth:`repro.audit.ledger.PrivacyLedger.record_trajectory`.
+
+The lifecycle around a run: ``prepare(ctx)`` once before the first
+segment (the :class:`RunContext` carries the resolved config, so hooks
+default their b / gamma_n / sync-interval / wire-dtype from the session
+instead of duplicating them as kwargs), then capture/consume per segment,
+then ``finish()`` in a ``finally`` (close files even on abort).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.dpps import DPPSConfig, is_sync_round
+from repro.core.privacy import PrivacyAccountant
+from repro.core.sensitivity import real_sensitivity
+
+__all__ = [
+    "RoundHook",
+    "RunContext",
+    "capture_rows",
+    "TranscriptHook",
+    "LedgerHook",
+    "BudgetHook",
+    "RealSensitivityHook",
+    "MetricsHook",
+    "BudgetExhausted",
+    "hook_trace_spec",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunContext:
+    """What a hook may read about the run it is attached to (``prepare``)."""
+
+    cfg: DPPSConfig            # the resolved protocol config of this run
+    plan: Any                  # ProtocolPlan (None for plan-less loop runs)
+    n_nodes: int
+    rounds: int                # rounds requested (not necessarily executed)
+    algorithm: str = "dpps"
+    protected: bool = True     # noise on (cfg.noise and gamma_n > 0)
+
+
+class RoundHook:
+    """Base hook: every method is optional; defaults are no-ops.
+
+    Subclasses override ``capture`` (traced, pure — return a dict of new
+    trajectory leaves or None) and/or ``consume`` (host side-effects).
+    """
+
+    tap: Any = None            # TranscriptTap to thread into dpps_step
+    needs_s_half: bool = False  # request s^(t+1/2) in the diagnostics
+
+    def prepare(self, ctx: RunContext) -> None:  # noqa: B027 — optional
+        pass
+
+    def capture(self, diag: dict[str, Any]) -> dict[str, Any] | None:
+        return None
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:  # noqa: B027
+        pass
+
+    def finish(self) -> None:  # noqa: B027 — optional
+        pass
+
+
+def capture_rows(diag: dict[str, Any], hooks) -> dict[str, Any]:
+    """Round diagnostics -> emitted trajectory rows, hook captures merged.
+
+    ``s_half`` (the pre-noise perturbed state, present when a
+    ``needs_s_half`` hook requested it) is visible to the hooks' capture
+    but never emitted itself — it is the full (N, d) shared state, T
+    copies of which would dwarf the metrics. The single definition both
+    drivers share: the engine scan body (repro.engine.rounds) and the
+    session's per-round loop run the exact same merge, which is what
+    keeps loop-vs-engine trajectories bit-comparable with hooks attached.
+    """
+    view = dict(diag)
+    out = {k: v for k, v in view.items() if k != "s_half"}
+    for hook in hooks:
+        extra = hook.capture(view)
+        if extra:
+            out.update(extra)
+    return out
+
+
+def hook_trace_spec(hooks) -> tuple[Any, bool]:
+    """(tap, needs_s_half) the compiled round must provide for ``hooks``.
+
+    The single place both drivers (the engine scan and the session's
+    per-round loop) derive their trace-time switches from the pipeline;
+    enforces the at-most-one-tap rule.
+    """
+    taps = [h.tap for h in hooks if getattr(h, "tap", None) is not None]
+    if len(taps) > 1:
+        raise ValueError(
+            f"{len(taps)} hooks carry a transcript tap; at most one "
+            "tap-bearing hook per run (taps share the tap_* namespace)")
+    need_s_half = any(getattr(h, "needs_s_half", False) for h in hooks)
+    return (taps[0] if taps else None), need_s_half
+
+
+# ---------------------------------------------------------------------------
+# Built-in hooks (the refactored PR-2 cross-cutting concerns)
+# ---------------------------------------------------------------------------
+
+
+class TranscriptHook(RoundHook):
+    """Record the wire-visible transcript (the PR-2 ``tap=`` kwarg).
+
+    The capture itself happens inside ``dpps_step`` (the tap's ``tap_*``
+    entries are already part of the diagnostics), so ``capture`` adds
+    nothing — which is exactly what keeps this hook bit-identical to the
+    kwarg path. ``transcript()`` reassembles the consumed segments into a
+    round-indexed :class:`repro.audit.transcript.Transcript`.
+    """
+
+    def __init__(self, tap: Any = None):
+        from repro.audit.transcript import TranscriptTap
+
+        self.tap = TranscriptTap() if tap is None else tap
+        self._segments: list[dict[str, np.ndarray]] = []
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        self._segments.append(
+            {k: np.asarray(v) for k, v in rows.items() if k.startswith("tap_")})
+
+    def transcript(self):
+        from repro.audit.transcript import Transcript
+
+        if not self._segments:
+            raise ValueError("no segments consumed yet")
+        keys = self._segments[0].keys()
+        merged = {k: np.concatenate([s[k] for s in self._segments]) for k in keys}
+        return Transcript.from_trajectory(merged)
+
+
+class RealSensitivityHook(RoundHook):
+    """Track the exact network sensitivity per round (the PR-2
+    ``track_real=`` kwarg; paper Fig. 2 / Table III validation).
+
+    ``chunk=`` bounds the O(N^2 d) pairwise buffer exactly as the engine's
+    old ``track_real`` capture did (bit-identical lax.map row blocks; a
+    no-op at N <= 16). ``reals`` / ``violations`` accumulate the consumed
+    values host-side (a violation = real exceeding the estimate, which
+    Remark 1 says must not happen).
+    """
+
+    needs_s_half = True
+
+    def __init__(self, chunk: int = 16):
+        self.chunk = chunk
+        self.reals: list[float] = []
+        self.violations = 0
+
+    def capture(self, diag: dict[str, Any]) -> dict[str, Any]:
+        return {"sensitivity_real":
+                real_sensitivity(diag["s_half"], chunk=self.chunk)}
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        real = np.asarray(rows["sensitivity_real"])
+        est = np.asarray(rows["sensitivity_estimate"])
+        self.reals.extend(real.tolist())
+        self.violations += int(np.sum(real > est + 1e-6))
+
+
+class LedgerHook(RoundHook):
+    """Stream the per-round privacy ledger (the PR-2 ``PrivacyLedger``
+    wiring in launch/train.py, as a hook).
+
+    Builds the ledger from the run context at ``prepare`` (b, gamma_n,
+    algorithm, wire dtype and sync cadence all come from the session's
+    resolved config — no duplicated kwargs); records every consumed
+    segment through :meth:`PrivacyLedger.record_trajectory`, so entries
+    are bit-identical to the kwarg-era path; closes the JSONL on finish.
+    Pass a pre-built ``ledger=`` to keep ownership outside the hook.
+    """
+
+    def __init__(self, path: str | None = None, budget: float | None = None,
+                 mechanism: str = "laplace", ledger: Any = None):
+        self.path = path
+        self.budget = budget
+        self.mechanism = mechanism
+        self.ledger = ledger
+        self._protected = True
+        self._sync_interval = 0
+
+    def prepare(self, ctx: RunContext) -> None:
+        if self.ledger is None:
+            from repro.audit.ledger import PrivacyLedger
+
+            self.ledger = PrivacyLedger(
+                b=ctx.cfg.b, gamma_n=ctx.cfg.gamma_n, budget=self.budget,
+                mechanism=self.mechanism, path=self.path,
+                algorithm=ctx.algorithm, wire_dtype=ctx.cfg.wire_dtype)
+        self._protected = ctx.protected
+        self._sync_interval = ctx.cfg.sync_interval
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        self.ledger.record_trajectory(
+            rows, t0=t0, protected=self._protected,
+            sync_interval=self._sync_interval)
+
+    def finish(self) -> None:
+        if self.ledger is not None:
+            self.ledger.close()
+
+    def summary(self) -> dict[str, Any]:
+        return self.ledger.summary()
+
+
+class BudgetExhausted(RuntimeError):
+    """Raised by a strict :class:`BudgetHook` once the epsilon ceiling is
+    crossed; the session catches it, stops the run, and reports
+    ``aborted=True`` (over-budget parameters are never released)."""
+
+    def __init__(self, message: str, round_: int, epsilon_total: float):
+        super().__init__(message)
+        self.round = round_
+        self.epsilon_total = epsilon_total
+
+
+class BudgetHook(RoundHook):
+    """Enforce a total-epsilon ceiling (the PR-2 ``--privacy-budget`` /
+    ``--strict-budget`` logic of launch/train.py, as a hook).
+
+    Steps a :class:`PrivacyAccountant` per consumed round (sync rounds are
+    unprotected and spend nothing). On first exceeding the budget it warns
+    once through ``warn``; with ``strict=True`` it raises
+    :class:`BudgetExhausted` at the segment boundary — the engine driver's
+    enforcement granularity.
+    """
+
+    def __init__(self, budget: float, *, strict: bool = False,
+                 warn: Callable[[str], None] = print, note: str = ""):
+        self.budget = budget
+        self.strict = strict
+        self.warn = warn
+        self.note = note
+        self.exceeded_at: int | None = None
+        self.accountant: PrivacyAccountant | None = None
+        self._protected = True
+        self._sync_interval = 0
+
+    def prepare(self, ctx: RunContext) -> None:
+        self.accountant = PrivacyAccountant(
+            b=ctx.cfg.b, gamma_n=ctx.cfg.gamma_n, budget=self.budget)
+        self._protected = ctx.protected
+        self._sync_interval = ctx.cfg.sync_interval
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        n = int(np.asarray(rows["sensitivity_estimate"]).shape[0])
+        for i in range(n):
+            t = t0 + i
+            protected = (self._protected
+                         and not is_sync_round(t, self._sync_interval))
+            self.accountant = self.accountant.step(protected=protected)
+            if self.accountant.exhausted and self.exceeded_at is None:
+                self.exceeded_at = t
+                self.warn(
+                    f"WARNING: privacy budget {self.budget} exceeded at "
+                    f"round {t} (epsilon_total="
+                    f"{self.accountant.epsilon_total:.3f}){self.note}")
+        if self.strict and self.exceeded_at is not None:
+            raise BudgetExhausted(
+                f"privacy budget {self.budget} exhausted at round "
+                f"{self.exceeded_at}", self.exceeded_at,
+                self.accountant.epsilon_total)
+
+
+class MetricsHook(RoundHook):
+    """Host-side metric logging (the ad-hoc ``log_row`` blocks of the old
+    drivers). ``fields`` maps output names to trajectory keys; every round
+    lands in ``history`` and is printed every ``log_every`` rounds (plus
+    the final round when ``total`` is known) through ``formatter``.
+    """
+
+    def __init__(self, fields: dict[str, str] | None = None,
+                 log_every: int = 10, total: int | None = None,
+                 formatter: Callable[[dict[str, Any]], str] | None = None,
+                 print_fn: Callable[[str], None] = print):
+        self.fields = fields or {"loss": "loss_mean",
+                                 "sensitivity": "sensitivity_used"}
+        self.log_every = max(int(log_every), 1)
+        self.total = total
+        self.formatter = formatter or self._default_format
+        self.print_fn = print_fn
+        self.history: list[dict[str, Any]] = []
+
+    @staticmethod
+    def _default_format(row: dict[str, Any]) -> str:
+        vals = " ".join(f"{k}={v:.4f}" for k, v in row.items() if k != "step")
+        return f"step {row['step']:5d} {vals}"
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        cols = {name: np.asarray(rows[key])
+                for name, key in self.fields.items() if key in rows}
+        if not cols:
+            return
+        n = next(iter(cols.values())).shape[0]
+        for i in range(n):
+            row = {"step": t0 + i,
+                   **{name: float(col[i]) for name, col in cols.items()}}
+            self.history.append(row)
+            t = row["step"]
+            if t % self.log_every == 0 or (self.total is not None
+                                           and t == self.total - 1):
+                self.print_fn(self.formatter(row))

@@ -1,0 +1,99 @@
+"""Typed run results for the `repro.api` front door.
+
+Every session driver returns a :class:`RunReport` (protocol/training runs)
+or a :class:`ServeReport` (decode runs) instead of the bare
+``(state, trajectory)`` tuples the engine produces — so consumers read
+"what did this run cost" (epsilon spent, wire bytes, wall-clock) off one
+object instead of re-deriving it from configs in every driver.
+
+The wire-byte figure is an *estimate* of the protocol's network traffic:
+each round every node transmits its noised message (``d_s`` elements in
+the plan's wire dtype), its push-sum weight, and its sensitivity scalar to
+each out-neighbour (paper Alg. 1 lines 4/6; Eq. 9). It deliberately counts
+payload only — no framing/transport overhead — so schedule and wire-dtype
+comparisons stay apples-to-apples (EXPERIMENTS.md SPerf #1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+__all__ = ["RunReport", "ServeReport", "estimate_wire_bytes"]
+
+
+def estimate_wire_bytes(plan, n_nodes: int, d_s: int, rounds: int) -> int:
+    """Estimated protocol payload bytes for ``rounds`` rounds (see module
+    docstring). ``plan`` may be None (loop runs without a plan): dense
+    all-to-all f32 is assumed. Self-loops (circulant offset 0, the dense
+    diagonal) never cross the wire and are excluded."""
+    per_elem = 2 if plan is not None and plan.wire_dtype == "bf16" else 4
+    if plan is not None and plan.schedule == "circulant" and plan.offsets:
+        out_degree = sum(1 for o in plan.offsets if o % n_nodes != 0)
+    else:
+        out_degree = n_nodes - 1
+    # message payload + push-sum weight a_i (f32) + sensitivity scalar S_i
+    # (f32, broadcast for the Alg. 1 line-4 max)
+    per_round = n_nodes * out_degree * (d_s * per_elem + 4 + 4)
+    return int(rounds) * per_round
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What a :meth:`ProtocolSession.run` / :meth:`ProtocolSession.train`
+    call did.
+
+    Fields:
+      state          final protocol/training state (resume seed for the
+                     next segment or checkpoint payload).
+      trajectory     per-round metric trajectory, leaves (rounds, ...)
+                     concatenated across scan segments (host numpy).
+      rounds         rounds actually executed (< requested on a strict
+                     budget abort).
+      epsilon_spent  composed epsilon of the executed protected rounds
+                     (pure-DP linear composition; sync rounds excluded).
+      wire_bytes     estimated protocol payload traffic (module docstring).
+      wall_clock     seconds spent driving the run (host side included).
+      aborted        True when a hook aborted the run (strict privacy
+                     budget); ``abort_reason`` carries the message.
+    """
+
+    state: Any
+    trajectory: dict[str, Any]
+    rounds: int
+    epsilon_spent: float
+    wire_bytes: int
+    wall_clock: float
+    aborted: bool = False
+    abort_reason: str | None = None
+
+    def summary(self) -> dict[str, Any]:
+        eps = float(self.epsilon_spent)
+        return {
+            "rounds": self.rounds,
+            "epsilon_spent": eps if np.isfinite(eps) else None,
+            "wire_bytes": self.wire_bytes,
+            "wall_clock_s": round(self.wall_clock, 3),
+            "aborted": self.aborted,
+        }
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """One batched prefill + scan-compiled decode pass.
+
+    ``tokens`` is the full generated sequence per batch row, shape
+    ``(batch, gen)`` — the argmax first token followed by the sampled
+    continuation (the decode hot loop is ``repro.engine.run_decode``: one
+    dispatch for the whole generation).
+    """
+
+    tokens: Any
+    prefill_s: float
+    decode_s: float
+    steps: int
+
+    @property
+    def ms_per_token(self) -> float:
+        return self.decode_s / max(self.steps, 1) * 1e3

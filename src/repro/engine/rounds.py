@@ -43,7 +43,8 @@ the seam ``repro.engine.shard`` uses to run the identical scan under
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+import warnings
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -52,12 +53,51 @@ from repro.core.dpps import DPPSConfig, DPPSState, dpps_step
 from repro.core.packing import PackedLayout
 from repro.core.partpsp import PartPSPConfig, PartPSPState, partpsp_step
 from repro.core.pushsum import PushSumState
-from repro.core.sensitivity import real_sensitivity
 from repro.core.tree_utils import PyTree
 from repro.engine.plan import ProtocolPlan
 
 __all__ = ["run_dpps", "run_partpsp", "run_decode", "run_segments",
            "stack_rounds", "wire_layout"]
+
+# Deprecation keys already warned about this process (the adapters warn
+# exactly once per kwarg, not once per call — tests/test_api.py pins this).
+_WARNED: set[str] = set()
+
+
+def _warn_once(key: str, message: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def _resolve_hooks(hooks: Sequence[Any], tap, track_real: bool, caller: str):
+    """Hook pipeline + deprecated kwarg adapters -> (hooks, tap, s_half?).
+
+    ``tap=`` and ``track_real=`` predate the hook pipeline (PR 2); they now
+    adapt into the equivalent first-class hooks (repro.api.hooks) so the
+    traced program — and therefore every pinned trajectory — is unchanged,
+    and warn once per process. New code passes ``hooks=`` directly.
+    """
+    hooks = tuple(hooks)
+    if tap is not None:
+        from repro.api.hooks import TranscriptHook
+
+        _warn_once(f"{caller}:tap",
+                   f"{caller}(tap=...) is deprecated; pass "
+                   "hooks=[repro.api.TranscriptHook(tap)] instead")
+        hooks += (TranscriptHook(tap),)
+    if track_real:
+        from repro.api.hooks import RealSensitivityHook
+
+        _warn_once(f"{caller}:track_real",
+                   f"{caller}(track_real=True) is deprecated; pass "
+                   "hooks=[repro.api.RealSensitivityHook()] instead")
+        hooks += (RealSensitivityHook(),)
+    from repro.api.hooks import hook_trace_spec
+
+    tap, need_s_half = hook_trace_spec(hooks)
+    return hooks, tap, need_s_half
 
 
 def stack_rounds(make_round: Callable[[int], PyTree], t0: int, n: int) -> PyTree:
@@ -95,15 +135,12 @@ def _round_kwargs(plan: ProtocolPlan, t, gossip_builder, node_ops):
     return kwargs
 
 
-def _capture(diag: dict[str, Any], track_real: bool) -> dict[str, Any]:
-    diag = dict(diag)
-    s_half = diag.pop("s_half", None)
-    if track_real:
-        # chunk= bounds the O(N^2 d) pairwise buffer so audits at N=64 fit
-        # on the CPU container; bit-identical to the dense path (and a
-        # no-op at N <= 16).
-        diag["sensitivity_real"] = real_sensitivity(s_half, chunk=16)
-    return diag
+def _capture(diag: dict[str, Any], hooks: Sequence[Any]) -> dict[str, Any]:
+    """Round diagnostics -> scan outputs (repro.api.hooks.capture_rows —
+    imported lazily: repro.api imports this module at package init)."""
+    from repro.api.hooks import capture_rows
+
+    return capture_rows(diag, hooks)
 
 
 def wire_layout(plan: ProtocolPlan, shared: PyTree) -> PackedLayout | None:
@@ -151,6 +188,7 @@ def run_dpps(
     cfg: DPPSConfig,
     plan: ProtocolPlan,
     rounds: int | None = None,
+    hooks: Sequence[Any] = (),
     track_real: bool = False,
     tap=None,
     mechanism=None,
@@ -163,17 +201,25 @@ def run_dpps(
     ``eps_seq``: per-round perturbations, leaves shaped (T, N, ...) — or
     ``None`` for pure consensus (zero perturbation, ``rounds`` required).
     Returns the final state and the per-round diagnostic trajectory (leaves
-    (T,) / (T, N)). ``track_real`` additionally records the exact
-    sensitivity per round (O(N^2 d) — validation only, paper Fig. 2).
+    (T,) / (T, N)).
 
-    ``tap`` (:class:`repro.audit.transcript.TranscriptTap`) captures the
-    wire-visible quantities of every round as extra ``tap_*`` trajectory
-    leaves — reassemble them with ``Transcript.from_trajectory``.
-    ``mechanism`` swaps the Laplace draw for a pluggable
-    :class:`repro.audit.mechanisms.NoiseMechanism`. Both default to ``None``
-    and leave the compiled program bit-identical to the PR-1 engine
-    (pinned in tests/test_audit.py).
+    ``hooks`` (:class:`repro.api.hooks.RoundHook` pipeline) is how
+    observers attach: each hook's trace-time needs (transcript tap,
+    ``s_half``) are threaded into the round and its ``capture`` output is
+    stacked into extra trajectory leaves. With ``hooks=()`` the compiled
+    program is bit-identical to the hook-free engine (HLO pinned in
+    tests/test_api.py); host-side ``consume`` is the caller's job — the
+    session front door (:mod:`repro.api.session`) drives it per segment.
+
+    ``tap=`` / ``track_real=`` are deprecated adapters over the equivalent
+    hooks (TranscriptHook / RealSensitivityHook) — identical traced
+    program, DeprecationWarning once per process. ``mechanism`` swaps the
+    Laplace draw for a pluggable
+    :class:`repro.audit.mechanisms.NoiseMechanism`; it changes the traced
+    program (not an observer), so it stays a first-class kwarg.
     """
+    hooks, tap, need_s_half = _resolve_hooks(hooks, tap, track_real,
+                                             "run_dpps")
     cfg = plan.resolve_dpps(cfg)
     layout = wire_layout(plan, state.push.s)
     if layout is not None:
@@ -206,10 +252,10 @@ def run_dpps(
             k = _key_fold(k)
         kwargs = _round_kwargs(plan, st.t, _gossip_builder, _node_ops)
         st2, diag = dpps_step(st, eps_at(x), k, cfg,
-                              return_s_half=track_real,
+                              return_s_half=need_s_half,
                               mechanism=mechanism, tap=tap, layout=layout,
                               **kwargs)
-        return st2, _capture(diag, track_real)
+        return st2, _capture(diag, hooks)
 
     final, traj = jax.lax.scan(body, state, xs)
     if layout is not None:
@@ -226,6 +272,7 @@ def run_partpsp(
     partition,
     loss_fn,
     plan: ProtocolPlan,
+    hooks: Sequence[Any] = (),
     track_real: bool = False,
     tap=None,
     mechanism=None,
@@ -238,9 +285,12 @@ def run_partpsp(
     ``batches``: stacked round batches, leaves (T, N, per_node, ...) — use
     :func:`stack_rounds` to build them from a host loader. Metrics are
     captured every round; the returned trajectory has (T,)-leading leaves.
-    ``tap`` / ``mechanism`` are the audit-lab seams (see :func:`run_dpps`);
-    zero-cost when ``None``.
+    ``hooks`` is the RoundHook pipeline and ``tap=`` / ``track_real=`` its
+    deprecated adapters (see :func:`run_dpps`); ``mechanism`` swaps the
+    noise draw. All are zero-cost at their defaults.
     """
+    hooks, tap, need_s_half = _resolve_hooks(hooks, tap, track_real,
+                                             "run_partpsp")
     cfg = plan.resolve_partpsp(cfg)
     layout = wire_layout(plan, state.dpps.push.s)
     if layout is not None:
@@ -252,10 +302,10 @@ def run_partpsp(
             k = _key_fold(k)
         kwargs = _round_kwargs(plan, st.dpps.t, _gossip_builder, _node_ops)
         st2, m = partpsp_step(st, batch_t, k, cfg=cfg, partition=partition,
-                              loss_fn=loss_fn, return_s_half=track_real,
+                              loss_fn=loss_fn, return_s_half=need_s_half,
                               mechanism=mechanism, tap=tap, layout=layout,
                               **kwargs)
-        return st2, _capture(m, track_real)
+        return st2, _capture(m, hooks)
 
     final, traj = jax.lax.scan(body, state, batches)
     if layout is not None:

@@ -5,9 +5,11 @@ consumes a consensus checkpoint (or fresh init for demos) and runs
 prefill + autoregressive decode with the KV/SSM caches, batch-sharded over
 the mesh (on this CPU container: reduced configs, 1 device).
 
-The decode hot loop runs through the scan engine
-(``repro.engine.run_decode``): the whole generation compiles into one
-program instead of dispatching per token.
+The serving plumbing — jitted prefill, rebuilding the cache at
+prompt+gen capacity with the prompt prefix grafted in, and the
+scan-compiled ``repro.engine.run_decode`` generation (one dispatch for the
+whole generation) — lives in ``Session.serve`` (:mod:`repro.api`); this
+driver only assembles the model, inputs and checkpoint.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --batch 4 --prompt-len 32 --gen 16
@@ -15,14 +17,13 @@ program instead of dispatching per token.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import Session
 from repro.checkpoint import load_checkpoint
 from repro.configs import ARCH_NAMES, get_config
-from repro.engine import run_decode
 from repro.models import Transformer
 
 
@@ -47,8 +48,11 @@ def main() -> None:
         params, meta = load_checkpoint(args.checkpoint, params)
         print(f"restored checkpoint (step {meta['step']})")
 
+    # serve-only session: no topology, no protocol — just the model front
+    # door (the same Session.serve a training session exposes post-run)
+    session = Session.build(model=model, key=key)
+
     b, s = args.batch, args.prompt_len
-    capacity = s + args.gen
     if cfg.input_mode == "embeddings":
         batch = {"embeds": jax.random.normal(key, (b, s, cfg.d_model)) * 0.1,
                  "labels": jnp.zeros((b, s), jnp.int32)}
@@ -59,55 +63,18 @@ def main() -> None:
         n_img = cfg.groups[0].n_image_tokens
         enc = jax.random.normal(key, (b, n_img, cfg.d_model)) * 0.1
         batch["image_embeds"] = enc
-
-    # prefill builds the cache up to position s-1...
-    t0 = time.time()
-    prefill = jax.jit(model.prefill)
-    logits, cache = prefill(params, batch)
-    # ...but cache arrays sized for prompt only; rebuild at full capacity.
-    full_cache = model.init_cache(b, capacity)
-
-    def graft(dst, src):
-        if dst.ndim >= 3 and src.ndim == dst.ndim and dst.shape != src.shape:
-            # KV arrays: copy the prompt prefix along the seq dim
-            idx = tuple(slice(0, d) for d in src.shape)
-            return dst.at[idx].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype)
-
-    cache = jax.tree_util.tree_map(graft, full_cache, cache)
-    print(f"prefill: {time.time()-t0:.2f}s logits={logits.shape}")
-
-    # scan-compiled decode (repro.engine): one dispatch for the whole
-    # generation instead of one per token
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    steps = args.gen - 1
     step_inputs = None
-    if cfg.input_mode == "embeddings" and steps > 0:
+    if cfg.input_mode == "embeddings" and args.gen > 1:
         step_inputs = jax.random.normal(
-            jax.random.fold_in(key, 7), (steps, b, cfg.d_model)) * 0.1
+            jax.random.fold_in(key, 7), (args.gen - 1, b, cfg.d_model)) * 0.1
 
-    def run_fn(params, cache, tok0, k, enc, step_inputs):
-        # params/enc are traced arguments (not closure constants) so the
-        # compiled scan doesn't bake the weights in as XLA constants
-        def decode_fn(c, step_in, pos):
-            return model.decode_step(params, c, step_in, pos, enc)
-
-        return run_decode(decode_fn, cache, tok0, k, start_pos=s,
-                          steps=steps, temperature=args.temperature,
-                          step_inputs=step_inputs)
-
-    run = jax.jit(run_fn)
-    t0 = time.time()
-    if steps > 0:
-        toks, cache = run(params, cache, tok, key, enc, step_inputs)
-        gen = jnp.concatenate([tok[:, None], toks.T], axis=1)
-    else:
-        gen = tok[:, None]
-    jax.block_until_ready(gen)
-    dt = time.time() - t0
-    print(f"decode: {steps} steps in {dt:.2f}s "
-          f"({dt/max(steps, 1)*1e3:.1f} ms/token/batch, scan engine)")
-    print("generated token ids (first sequence):", gen[0].tolist())
+    report = session.serve(params, batch, gen=args.gen,
+                           temperature=args.temperature, key=key, enc=enc,
+                           step_inputs=step_inputs)
+    print(f"prefill: {report.prefill_s:.2f}s")
+    print(f"decode: {report.steps} steps in {report.decode_s:.2f}s "
+          f"({report.ms_per_token:.1f} ms/token/batch, scan engine)")
+    print("generated token ids (first sequence):", report.tokens[0].tolist())
 
 
 if __name__ == "__main__":

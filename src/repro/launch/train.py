@@ -11,11 +11,14 @@ Key flags mirror the paper's experimental grid: --algorithm
 {partpsp,sgp,sgpdp,pedfl}, --b (privacy budget), --gamma-n, --topology
 {dout,exp}, --degree, --sync-interval, --schedule {dense,circulant}.
 
-Privacy accounting (repro.audit.ledger) runs on both drivers: every round
-is recorded in a streaming ledger (per-round epsilon, sensitivity estimate,
-sync/unprotected rounds), serialized to JSONL with --ledger-out. A total
-epsilon ceiling can be set with --privacy-budget; training warns when it is
-exceeded, and aborts mid-run (non-zero exit) under --strict-budget.
+The driver is a thin shell over the session front door
+(:mod:`repro.api`): :func:`build_session` assembles the arch-specific
+model + partition rules and hands everything protocol-shaped to
+``Session.build``; the run itself is ``session.train`` with the
+cross-cutting concerns attached as hooks — the streaming privacy ledger
+(--ledger-out), epsilon-budget enforcement (--privacy-budget /
+--strict-budget) and metric logging are ``LedgerHook`` / ``BudgetHook`` /
+``MetricsHook`` instances, not driver code.
 
 Execution drivers (--driver):
 
@@ -29,28 +32,23 @@ Execution drivers (--driver):
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
 import json
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.audit.ledger import PrivacyLedger
-from repro.checkpoint import save_checkpoint
-from repro.configs import ARCH_NAMES, get_config
-from repro.core.dpps import is_sync_round
-from repro.core.partition import Partition
-from repro.core.partpsp import (
-    consensus_params,
-    make_baseline_config,
-    partpsp_init,
-    partpsp_step,
+from repro.api import (
+    BudgetHook,
+    LedgerHook,
+    MetricsHook,
+    PrivacySpec,
+    Session,
+    add_protocol_arguments,
+    validate_protocol_args,
 )
-from repro.core.topology import DOutGraph, ExpGraph, calibrate_constants
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.topology import DOutGraph, ExpGraph
 from repro.data import NodeShardedLoader, SyntheticLMStream
-from repro.engine import ProtocolPlan, run_partpsp, run_segments
 from repro.models import Transformer
 
 
@@ -60,29 +58,24 @@ def make_topology(kind: str, n_nodes: int, degree: int):
     return DOutGraph(n_nodes=n_nodes, d=degree)
 
 
-def _build_setup(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str,
-                 b: float, gamma_n: float, gamma_l: float, gamma_s: float,
-                 clip: float, topology: str, degree: int, sync_interval: int,
-                 schedule: str, use_kernels: bool = False, seed: int = 0):
-    """Model + topology + config + node-stacked initial state (both drivers)."""
+def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
+                  algorithm: str, b: float, gamma_n: float, gamma_l: float,
+                  gamma_s: float, clip: float, topology: str, degree: int,
+                  sync_interval: int, schedule: str, use_kernels: bool = False,
+                  seed: int = 0, chunk: int = 50, packed: bool = True,
+                  wire_dtype: str = "f32"):
+    """Arch-specific assembly -> one protocol session (the front door).
+
+    Owns only what is genuinely arch-shaped — model construction and the
+    shared/local partition rules per algorithm (full sharing for
+    SGP/SGPDP, split-point clamping for the 2-layer smoke stacks); every
+    protocol decision lives in ``Session.build``.
+    """
     arch = get_config(arch_name)
     model_cfg = arch.smoke if reduced else arch.model
     model = Transformer(model_cfg)
     topo = make_topology(topology, n_nodes, degree)
-    c_prime, lam = calibrate_constants(topo)
 
-    cfg = make_baseline_config(
-        algorithm, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip, b=b,
-        gamma_n=gamma_n, c_prime=c_prime, lam=lam, schedule=schedule,
-        sync_interval=sync_interval)
-    if use_kernels:
-        cfg = dataclasses.replace(
-            cfg, dpps=dataclasses.replace(cfg.dpps, use_kernels=True))
-
-    key = jax.random.PRNGKey(seed)
-    params = model.init(key)
-    stacked = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape) + 0.0, params)
     rules = arch.shared_rules if algorithm != "sgpdp" else ((".*", "shared"),)
     if algorithm == "sgp":
         rules = ((".*", "shared"),)
@@ -91,70 +84,43 @@ def _build_setup(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str,
         rules = tuple(
             (pat, ("split_layers", 1) if isinstance(act, tuple) else act)
             for pat, act in rules)
-    partition = Partition.from_rules(stacked, rules, default="local")
-    state = partpsp_init(stacked, partition, cfg)
-    return model, model_cfg, topo, cfg, partition, state
+
+    session = Session.build(
+        topo, privacy=PrivacySpec(b=b, gamma_n=gamma_n), model=model,
+        partition=rules, algorithm=algorithm, gamma_l=gamma_l,
+        gamma_s=gamma_s, clip=clip, schedule=schedule,
+        sync_interval=sync_interval, use_kernels=use_kernels, chunk=chunk,
+        packed=packed, wire_dtype=wire_dtype, seed=seed)
+    return model, model_cfg, session
 
 
-def build_trainer(arch_name: str, *, reduced: bool, n_nodes: int, algorithm: str,
-                  b: float, gamma_n: float, gamma_l: float, gamma_s: float,
-                  clip: float, topology: str, degree: int, sync_interval: int,
-                  schedule: str, use_kernels: bool = False, seed: int = 0):
-    """Per-round reference driver: a jitted single-step function."""
-    model, model_cfg, topo, cfg, partition, state = _build_setup(
-        arch_name, reduced=reduced, n_nodes=n_nodes, algorithm=algorithm,
-        b=b, gamma_n=gamma_n, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
-        topology=topology, degree=degree, sync_interval=sync_interval,
-        schedule=schedule, use_kernels=use_kernels, seed=seed)
+def build_trainer(arch_name: str, **kwargs):
+    """Per-round reference driver: a jitted single-step function.
 
-    if cfg.dpps.schedule == "circulant":
-        offsets, wts = topo.mixing_weights(0)
-        mix = dict(offsets=offsets, mix_weights=jnp.asarray(wts, jnp.float32))
-    else:
-        mix = dict(w=topo.weight_matrix_jnp(0))
-
-    step = jax.jit(functools.partial(
-        partpsp_step, cfg=cfg, partition=partition, loss_fn=model.loss_fn, **mix))
-    return model, model_cfg, topo, cfg, partition, state, step
+    Compatibility veneer over the session API (the seed repo's public
+    shape); returns ``(model, model_cfg, topo, cfg, partition, state,
+    step)`` with round-0 mixing operands bound into ``step``.
+    """
+    model, model_cfg, session = build_session(arch_name, **kwargs)
+    return (model, model_cfg, session.topology, session.train_cfg,
+            session.partition, session.train_state(), session.step_fn())
 
 
-def build_engine_trainer(arch_name: str, *, reduced: bool, n_nodes: int,
-                         algorithm: str, b: float, gamma_n: float,
-                         gamma_l: float, gamma_s: float, clip: float,
-                         topology: str, degree: int, sync_interval: int,
-                         schedule: str, use_kernels: bool = False,
-                         seed: int = 0, chunk: int = 50,
-                         packed: bool = True, wire_dtype: str = "f32"):
-    """Scan-engine driver: a jitted segment runner (one dispatch per chunk).
+def build_engine_trainer(arch_name: str, *, chunk: int = 50,
+                         packed: bool = True, wire_dtype: str = "f32",
+                         **kwargs):
+    """Scan-engine driver veneer over the session API.
 
     Returns ``(model, model_cfg, topo, cfg, partition, state, run_chunk,
     plan)`` where ``run_chunk(state, batches, base_key)`` advances one
-    segment. ``batches`` leaves are (chunk, n_nodes, ...) — build them with
-    :func:`repro.engine.stack_rounds`. The engine folds the absolute round
-    counter into ``base_key``, so trajectories are identical to the loop
-    driver's and segments resume seamlessly from checkpoints.
-
-    ``packed`` (default) runs each segment over the contiguous packed wire
-    buffer; the incoming state is donated to the jitted runner so XLA
-    aliases the carry in place instead of holding two copies of the shared
-    tree. ``wire_dtype="bf16"`` gossips bf16 messages with fp32
-    accumulation (packed only).
+    donated, scan-compiled segment — see ``Session.segment_runner``.
     """
-    model, model_cfg, topo, cfg, partition, state = _build_setup(
-        arch_name, reduced=reduced, n_nodes=n_nodes, algorithm=algorithm,
-        b=b, gamma_n=gamma_n, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
-        topology=topology, degree=degree, sync_interval=sync_interval,
-        schedule=schedule, use_kernels=use_kernels, seed=seed)
-
-    plan = ProtocolPlan.from_topology(
-        topo, schedule=schedule, use_kernels=use_kernels,
-        sync_interval=sync_interval, chunk=chunk, packed=packed,
-        wire_dtype=wire_dtype)
-    cfg = plan.resolve_partpsp(cfg)
-    run_chunk = jax.jit(functools.partial(
-        run_partpsp, cfg=cfg, partition=partition, loss_fn=model.loss_fn,
-        plan=plan), donate_argnums=(0,))
-    return model, model_cfg, topo, cfg, partition, state, run_chunk, plan
+    model, model_cfg, session = build_session(
+        arch_name, chunk=chunk, packed=packed, wire_dtype=wire_dtype,
+        **kwargs)
+    return (model, model_cfg, session.topology, session.train_cfg,
+            session.partition, session.train_state(),
+            session.segment_runner(), session.plan)
 
 
 def main() -> None:
@@ -180,15 +146,7 @@ def main() -> None:
     ap.add_argument("--use-kernels", action="store_true")
     ap.add_argument("--driver", choices=("engine", "loop"), default="engine",
                     help="scan-compiled engine segments vs per-round loop")
-    ap.add_argument("--chunk", type=int, default=50,
-                    help="rounds per compiled engine segment")
-    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="run the engine over the packed (N, d_s) wire "
-                         "buffer (--no-packed keeps the pytree path)")
-    ap.add_argument("--wire-dtype", choices=("f32", "bf16"), default="f32",
-                    help="gossip wire format; bf16 halves wire bytes "
-                         "(mix in bf16, accumulate fp32; needs --packed)")
+    add_protocol_arguments(ap)
     ap.add_argument("--seed", type=int, default=2024)   # paper's seed
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None)
@@ -200,26 +158,17 @@ def main() -> None:
     ap.add_argument("--strict-budget", action="store_true",
                     help="abort training once --privacy-budget is exceeded")
     args = ap.parse_args()
-    if args.chunk < 1:
-        ap.error("--chunk must be >= 1")
-    if args.wire_dtype != "f32" and (args.driver != "engine" or not args.packed):
-        ap.error("--wire-dtype bf16 requires --driver engine with --packed")
+    validate_protocol_args(ap, args)
 
-    build_kwargs = dict(
-        reduced=args.reduced, n_nodes=args.nodes, algorithm=args.algorithm,
-        b=args.b, gamma_n=args.gamma_n, gamma_l=args.gamma_l,
-        gamma_s=args.gamma_s, clip=args.clip, topology=args.topology,
-        degree=args.degree, sync_interval=args.sync_interval,
-        schedule=args.schedule, use_kernels=args.use_kernels, seed=args.seed)
-    if args.driver == "engine":
-        (model, model_cfg, topo, cfg, partition, state, run_chunk,
-         plan) = build_engine_trainer(args.arch, chunk=args.chunk,
-                                      packed=args.packed,
-                                      wire_dtype=args.wire_dtype,
-                                      **build_kwargs)
-    else:
-        model, model_cfg, topo, cfg, partition, state, step = build_trainer(
-            args.arch, **build_kwargs)
+    model, model_cfg, session = build_session(
+        args.arch, reduced=args.reduced, n_nodes=args.nodes,
+        algorithm=args.algorithm, b=args.b, gamma_n=args.gamma_n,
+        gamma_l=args.gamma_l, gamma_s=args.gamma_s, clip=args.clip,
+        topology=args.topology, degree=args.degree,
+        sync_interval=args.sync_interval, schedule=args.schedule,
+        use_kernels=args.use_kernels, seed=args.seed, chunk=args.chunk,
+        packed=args.packed, wire_dtype=args.wire_dtype)
+    partition = session.partition
 
     mode = (f"packed/{args.wire_dtype}" if args.driver == "engine"
             and args.packed else "pytree")
@@ -244,86 +193,41 @@ def main() -> None:
                      "labels": toks}
         return batch
 
-    base_key = jax.random.PRNGKey(args.seed)
-    history = []
     t0 = time.time()
+    metrics = MetricsHook(
+        fields={"loss": "loss_mean", "sensitivity": "sensitivity_used",
+                "grad_l1_max": "grad_l1_max"},
+        log_every=args.log_every, total=args.steps,
+        formatter=lambda r: (f"step {r['step']:5d} loss={r['loss']:.4f} "
+                             f"S={r['sensitivity']:.3f} "
+                             f"({(time.time()-t0)/(r['step']+1):.2f}s/step)"))
+    ledger = LedgerHook(path=args.ledger_out, budget=args.privacy_budget)
+    hooks = [ledger, metrics]
+    if args.privacy_budget is not None:
+        note = (" (engine driver enforces at segment granularity)"
+                if args.driver == "engine" else "")
+        hooks.append(BudgetHook(args.privacy_budget,
+                                strict=args.strict_budget, note=note))
 
-    protected = cfg.dpps.noise and cfg.dpps.gamma_n > 0
-    sync_interval = cfg.dpps.sync_interval
-    ledger = PrivacyLedger(
-        b=cfg.dpps.b, gamma_n=cfg.dpps.gamma_n, budget=args.privacy_budget,
-        mechanism="laplace", path=args.ledger_out, algorithm=args.algorithm,
-        wire_dtype=cfg.dpps.wire_dtype)
-    budget_hit = False
+    report = session.train(args.steps, batch_at, hooks=hooks,
+                           key=jax.random.PRNGKey(args.seed),
+                           driver=args.driver)
 
-    def log_row(row):
-        history.append(row)
-        t = row["step"]
-        if t % args.log_every == 0 or t == args.steps - 1:
-            print(f"step {t:5d} loss={row['loss']:.4f} "
-                  f"S={row['sensitivity']:.3f} "
-                  f"({(time.time()-t0)/(t+1):.2f}s/step)")
-
-    def check_budget() -> bool:
-        nonlocal budget_hit
-        if ledger.accountant.exhausted and not budget_hit:
-            budget_hit = True
-            first = next(e for e in ledger.entries if e["exhausted"])
-            note = (" (engine driver enforces at segment granularity)"
-                    if args.driver == "engine" else "")
-            print(f"WARNING: privacy budget {args.privacy_budget} exceeded "
-                  f"at round {first['round']} (epsilon_total="
-                  f"{first['epsilon_total']:.3f}){note}")
-        return budget_hit and args.strict_budget
-
-    if args.driver == "engine":
-        for seg0, n, state, traj in run_segments(
-                run_chunk, state, batch_at, base_key,
-                steps=args.steps, chunk=plan.chunk):
-            ledger.record_trajectory(traj, t0=seg0, protected=protected,
-                                     sync_interval=sync_interval)
-            for i in range(n):
-                log_row({"step": seg0 + i,
-                         "loss": float(traj["loss_mean"][i]),
-                         "sensitivity": float(traj["sensitivity_used"][i]),
-                         "grad_l1_max": float(traj["grad_l1_max"][i])})
-            if check_budget():
-                break
-    else:
-        for t in range(args.steps):
-            key = jax.random.fold_in(base_key, t)
-            state, metrics = step(state, batch_at(t), key)
-            ledger.record_round(
-                t,
-                sensitivity_estimate=float(metrics["sensitivity_estimate"]),
-                sens_local=metrics["sensitivity_local"],
-                protected=protected,
-                synced=is_sync_round(t, sync_interval))
-            log_row({"step": t,
-                     "loss": float(metrics["loss_mean"]),
-                     "sensitivity": float(metrics["sensitivity_used"]),
-                     "grad_l1_max": float(metrics["grad_l1_max"])})
-            if check_budget():
-                break
-
-    ledger.close()
     print("privacy:", json.dumps(ledger.summary()))
     if args.ledger_out:
         print("privacy ledger written to", args.ledger_out)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            json.dump(history, f, indent=1)
-    strict_abort = budget_hit and args.strict_budget
-    if args.checkpoint and not strict_abort:
+            json.dump(metrics.history, f, indent=1)
+    if args.checkpoint and not report.aborted:
         # consensus shared params are identical across nodes; persist node
         # 0's view (s-bar + its personalized local params) for serving
-        final = jax.tree_util.tree_map(
-            lambda x: x[0], consensus_params(state, partition))
-        save_checkpoint(args.checkpoint, final, step=args.steps,
-                        metadata={"arch": args.arch,
-                                  "algorithm": args.algorithm})
+        session.save_consensus(args.checkpoint, report.state,
+                               step=report.rounds,
+                               metadata={"arch": args.arch,
+                                         "algorithm": args.algorithm})
         print("checkpoint written to", args.checkpoint)
-    if strict_abort:
+    if report.aborted:
         if args.checkpoint:
             # the whole point of strict mode is that over-budget parameters
             # are never released — including via the serving checkpoint

@@ -1,0 +1,435 @@
+"""The session front door (repro.api): hookless runs pin HLO-identical to
+the frozen PR-3 golden engine, the built-in hooks reproduce the deprecated
+kwarg paths bit-for-bit (both schedules, packed and pytree), the
+deprecated kwargs warn exactly once, and the CLI validation rejects
+invalid flag combos with actionable messages."""
+import argparse
+import functools
+import importlib.util
+import os
+import re
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    BudgetHook,
+    LedgerHook,
+    MetricsHook,
+    PrivacySpec,
+    RealSensitivityHook,
+    Session,
+    TranscriptHook,
+    add_protocol_arguments,
+    hook_trace_spec,
+    validate_protocol_args,
+)
+from repro.audit import PrivacyLedger, TranscriptTap
+from repro.core.dpps import DPPSConfig, dpps_init
+from repro.core.partition import Partition
+from repro.core.topology import DOutGraph, calibrate_constants
+from repro.engine import ProtocolPlan, run_dpps, run_partpsp
+from repro.engine import rounds as engine_rounds
+
+N, T = 8, 6
+TOPO = DOutGraph(n_nodes=N, d=2)
+CP, LAM = calibrate_constants(TOPO)
+
+
+def _s0(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(key, (N, 11)),
+            jax.random.normal(jax.random.fold_in(key, 1), (N, 2, 3))]
+
+
+def _eps_seq(s0, seed=10, scale=0.1):
+    key = jax.random.PRNGKey(seed)
+    return [scale * jax.random.normal(jax.random.fold_in(key, i),
+                                      (T,) + x.shape)
+            for i, x in enumerate(s0)]
+
+
+def _session(**kw):
+    kw.setdefault("privacy", PrivacySpec(b=5.0, gamma_n=0.02,
+                                         c_prime=CP, lam=LAM))
+    kw.setdefault("sync_interval", 3)
+    return Session.build(TOPO, **kw)
+
+
+def _mlp_session(schedule="dense", packed=True, **kw):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = {"l1": jax.random.normal(k1, (12, 8)) / 3.0,
+              "l2": jax.random.normal(k2, (8, 4)) / 3.0}
+
+    def loss_fn(p, batch, k):
+        x, y = batch
+        logits = jnp.tanh(x @ p["l1"]) @ p["l2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    bk = jax.random.PRNGKey(5)
+    batches = (jax.random.normal(bk, (T, N, 6, 12)),
+               jax.random.randint(jax.random.fold_in(bk, 1), (T, N, 6), 0, 4))
+    batch_at = lambda t: jax.tree_util.tree_map(lambda x: x[t], batches)
+    kw.setdefault("privacy", PrivacySpec(b=5.0, gamma_n=1e-4,
+                                         c_prime=CP, lam=LAM))
+    session = Session.build(
+        TOPO, model=loss_fn, partition=(("l1", "shared"),), params=params,
+        schedule=schedule, sync_interval=3, packed=packed, **kw)
+    return session, batches, batch_at
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# The zero-cost pin: hookless session == frozen PR-3 golden engine (HLO)
+# ---------------------------------------------------------------------------
+
+def _golden_rounds():
+    path = os.path.join(os.path.dirname(__file__), "golden",
+                        "engine_rounds_pr3.py")
+    spec = importlib.util.spec_from_file_location("engine_rounds_pr3", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _strip_hlo_noise(txt: str) -> str:
+    txt = re.sub(r"metadata=\{[^}]*\}", "", txt)
+    return re.sub(r'"[^"]*source_file[^"]*"', "", txt)
+
+
+def test_hookless_session_run_hlo_identical_to_golden():
+    """A hookless Session.run compiles to the same HLO as the frozen
+    audit-free PR-3 engine — the front door adds zero traced code."""
+    golden = _golden_rounds()
+    session = _session()
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    key = jax.random.PRNGKey(0)
+    state = session.consensus_state(s0)
+    now = session.consensus_runner(()).lower(
+        state, eps_seq, key).compile().as_text()
+
+    g_cfg = golden.DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                              sync_interval=3)
+    g_state = golden.dpps_init(s0, session.plan.resolve_dpps(g_cfg))
+    g_fn = jax.jit(functools.partial(golden.run_dpps, cfg=g_cfg,
+                                     plan=session.plan), donate_argnums=(0,))
+    gold = g_fn.lower(g_state, eps_seq, key).compile().as_text()
+    assert _strip_hlo_noise(now) == _strip_hlo_noise(gold)
+
+    hooked = session.consensus_runner((TranscriptHook(),)).lower(
+        session.consensus_state(s0), eps_seq, key).compile().as_text()
+    assert _strip_hlo_noise(hooked) != _strip_hlo_noise(now)
+
+
+def test_hookless_session_train_hlo_identical_to_golden():
+    golden = _golden_rounds()
+    session, batches, _ = _mlp_session()
+    key = jax.random.PRNGKey(9)
+    now = session.segment_runner(()).lower(
+        session.train_state(), batches, key).compile().as_text()
+    g_fn = jax.jit(functools.partial(
+        golden.run_partpsp, cfg=session.train_cfg,
+        partition=session.partition, loss_fn=session.loss_fn,
+        plan=session.plan), donate_argnums=(0,))
+    gold = g_fn.lower(session.train_state(), batches, key).compile().as_text()
+    assert _strip_hlo_noise(now) == _strip_hlo_noise(gold)
+
+
+# ---------------------------------------------------------------------------
+# Hooks reproduce the PR-2 kwarg paths bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["dense", "circulant"])
+@pytest.mark.parametrize("packed", [True, False], ids=["packed", "pytree"])
+def test_transcript_hook_bit_matches_tap_kwarg(schedule, packed):
+    plan = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                      use_kernels=False, sync_interval=3,
+                                      packed=packed)
+    session = _session(plan=plan)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    key = jax.random.PRNGKey(42)
+
+    hook = TranscriptHook()
+    report = session.run(T, values=s0, eps_at=lambda t: [e[t] for e in eps_seq],
+                         hooks=[hook], key=key)
+
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM,
+                     sync_interval=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref_state, ref_traj = jax.jit(functools.partial(
+            run_dpps, cfg=cfg, plan=plan, tap=TranscriptTap()))(
+            dpps_init(s0, plan.resolve_dpps(cfg)), eps_seq, key)
+    _assert_trees_equal(report.state.push, ref_state.push)
+    assert set(report.trajectory) == set(ref_traj)
+    for k in ref_traj:
+        np.testing.assert_array_equal(np.asarray(ref_traj[k]),
+                                      report.trajectory[k])
+    tr = hook.transcript()
+    np.testing.assert_array_equal(np.asarray(ref_traj["tap_messages"]),
+                                  tr.messages)
+    assert tr.messages.shape == (T, N, 11 + 6)
+
+
+@pytest.mark.parametrize("schedule", ["dense", "circulant"])
+@pytest.mark.parametrize("packed", [True, False], ids=["packed", "pytree"])
+def test_real_sensitivity_hook_bit_matches_track_real_kwarg(schedule, packed):
+    session, batches, batch_at = _mlp_session(schedule=schedule,
+                                              packed=packed)
+    key = jax.random.PRNGKey(9)
+    hook = RealSensitivityHook()
+    report = session.train(T, batch_at, hooks=[hook], key=key)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref_state, ref_traj = jax.jit(functools.partial(
+            run_partpsp, cfg=session.train_cfg, partition=session.partition,
+            loss_fn=session.loss_fn, plan=session.plan, track_real=True))(
+            session.train_state(), batches, key)
+    _assert_trees_equal(report.state.dpps.push, ref_state.dpps.push)
+    for k in ref_traj:
+        np.testing.assert_array_equal(np.asarray(ref_traj[k]),
+                                      report.trajectory[k])
+    assert len(hook.reals) == T
+
+
+def test_ledger_hook_bit_matches_pr2_record_trajectory():
+    """LedgerHook entries == a hand-driven PrivacyLedger fed the same
+    engine trajectory (the PR-2 wiring in launch/train.py)."""
+    session, batches, batch_at = _mlp_session()
+    key = jax.random.PRNGKey(9)
+    hook = LedgerHook(budget=5.0)
+    report = session.train(T, batch_at, hooks=[hook], key=key)
+
+    _, traj = session.segment_runner(())(session.train_state(), batches, key)
+    cfg = session.train_cfg.dpps
+    manual = PrivacyLedger(b=cfg.b, gamma_n=cfg.gamma_n, budget=5.0,
+                           algorithm=session.algorithm,
+                           wire_dtype=cfg.wire_dtype)
+    manual.record_trajectory(traj, t0=0, protected=True,
+                             sync_interval=cfg.sync_interval)
+    assert hook.ledger.entries == manual.entries
+    assert report.epsilon_spent == pytest.approx(
+        manual.accountant.epsilon_total)
+
+
+def test_session_train_engine_matches_loop_driver():
+    """Both session drivers fold the same base key: bit-comparable runs."""
+    session, _, batch_at = _mlp_session()
+    key = jax.random.PRNGKey(3)
+    hook_e, hook_l = RealSensitivityHook(), RealSensitivityHook()
+    eng = session.train(T, batch_at, hooks=[hook_e], key=key)
+    loop = session.train(T, batch_at, hooks=[hook_l], key=key,
+                         driver="loop")
+    for k in ("loss_mean", "sensitivity_used", "sensitivity_real"):
+        np.testing.assert_allclose(eng.trajectory[k], loop.trajectory[k],
+                                   atol=1e-6, rtol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(eng.state.dpps.push.s),
+                    jax.tree_util.tree_leaves(loop.state.dpps.push.s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert hook_e.violations == hook_l.violations
+
+
+# ---------------------------------------------------------------------------
+# Deprecated kwarg adapters
+# ---------------------------------------------------------------------------
+
+def test_deprecated_kwargs_warn_exactly_once():
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM)
+    s0 = _s0()
+    eps_seq = _eps_seq(s0)
+    run = lambda **kw: run_dpps(dpps_init(s0, plan.resolve_dpps(cfg)),
+                                eps_seq, jax.random.PRNGKey(0),
+                                cfg=cfg, plan=plan, **kw)
+    engine_rounds._WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        run(tap=TranscriptTap())
+        run(tap=TranscriptTap())          # second call: no second warning
+        run(track_real=True)
+        run(track_real=True)
+    dep = [str(x.message) for x in w
+           if issubclass(x.category, DeprecationWarning)]
+    assert len([m for m in dep if "tap=" in m]) == 1
+    assert len([m for m in dep if "track_real=" in m]) == 1
+    # hooks are the replacement and never warn
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        run(hooks=(TranscriptHook(), RealSensitivityHook()))
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+def test_at_most_one_tap_bearing_hook():
+    with pytest.raises(ValueError, match="at most one"):
+        hook_trace_spec((TranscriptHook(), TranscriptHook()))
+
+
+# ---------------------------------------------------------------------------
+# CLI validation (the late/opaque ProtocolPlan traceback, fixed up front)
+# ---------------------------------------------------------------------------
+
+def _parser(with_driver=True):
+    ap = argparse.ArgumentParser()
+    if with_driver:
+        ap.add_argument("--driver", choices=("engine", "loop"),
+                        default="engine")
+    add_protocol_arguments(ap)
+    return ap
+
+
+def test_cli_rejects_bf16_without_packed(capsys):
+    ap = _parser()
+    args = ap.parse_args(["--wire-dtype", "bf16", "--no-packed"])
+    with pytest.raises(SystemExit):
+        validate_protocol_args(ap, args)
+    err = capsys.readouterr().err
+    assert "packed" in err and "--wire-dtype f32" in err
+
+
+def test_cli_rejects_bf16_on_loop_driver(capsys):
+    ap = _parser()
+    args = ap.parse_args(["--driver", "loop", "--wire-dtype", "bf16"])
+    with pytest.raises(SystemExit):
+        validate_protocol_args(ap, args)
+    assert "--driver engine" in capsys.readouterr().err
+
+
+def test_cli_accepts_valid_combos():
+    ap = _parser()
+    validate_protocol_args(ap, ap.parse_args([]))
+    validate_protocol_args(ap, ap.parse_args(["--wire-dtype", "bf16"]))
+    validate_protocol_args(ap, ap.parse_args(["--no-packed"]))
+    with pytest.raises(SystemExit):
+        validate_protocol_args(ap, ap.parse_args(["--chunk", "0"]))
+
+
+# ---------------------------------------------------------------------------
+# Session mechanics: budget abort, resume, misuse errors, reports
+# ---------------------------------------------------------------------------
+
+def test_strict_budget_aborts_at_segment_granularity():
+    session, _, batch_at = _mlp_session(chunk=2)
+    hook = BudgetHook(1.5 * session.cfg.epsilon_per_round, strict=True,
+                      warn=lambda s: None)
+    report = session.train(T, batch_at, hooks=[hook])
+    assert report.aborted and "budget" in report.abort_reason
+    assert report.rounds == 2          # first 2-round segment consumed
+    assert hook.exceeded_at == 1
+
+
+def test_session_checkpoint_resume_bit_identical(tmp_path):
+    session, _, batch_at = _mlp_session()
+    key = jax.random.PRNGKey(11)
+    one = session.train(T, batch_at, key=key)
+
+    half = T // 2
+    first = session.train(half, batch_at, key=key)
+    session.save(str(tmp_path / "ck"), first.state, step=half)
+    restored, meta = session.restore(str(tmp_path / "ck"))
+    assert meta["step"] == half
+    two = session.train(T - half, batch_at, state=restored, key=key,
+                        start=half)
+    _assert_trees_equal(one.state.dpps.push, two.state.dpps.push)
+    _assert_trees_equal(one.state.local, two.state.local)
+
+
+def test_run_report_accounting():
+    session = _session()
+    s0 = _s0()
+    report = session.run(T, values=s0)
+    # sync_interval=3 over 6 rounds -> rounds 2 and 5 sync (unprotected)
+    assert report.epsilon_spent == pytest.approx(
+        4 * session.cfg.epsilon_per_round)
+    assert report.rounds == T and report.wire_bytes > 0
+    assert not report.aborted
+    assert report.summary()["rounds"] == T
+    # values= stays alive after the donated run
+    assert np.isfinite(np.asarray(s0[0])).all()
+
+
+def test_metrics_hook_history():
+    session, _, batch_at = _mlp_session()
+    lines = []
+    hook = MetricsHook(fields={"loss": "loss_mean"}, log_every=2,
+                       total=T, print_fn=lines.append)
+    session.train(T, batch_at, hooks=[hook])
+    assert [r["step"] for r in hook.history] == list(range(T))
+    assert len(lines) == 4             # steps 0, 2, 4 + final step 5
+
+
+def test_serve_only_session_rejects_protocol_calls():
+    session = Session.build(model=lambda p, b, k: 0.0)
+    with pytest.raises(ValueError, match="no protocol"):
+        session.run(3, values=_s0())
+    with pytest.raises(ValueError, match="no protocol"):
+        session.train(3, lambda t: None)
+
+
+def test_consensus_only_session_rejects_train():
+    session = _session()
+    with pytest.raises(ValueError, match="model"):
+        session.train_state()
+
+
+def test_wire_bytes_exclude_self_loops():
+    from repro.api import estimate_wire_bytes
+
+    # 2-out circulant offsets are (0, 1): only offset 1 crosses the wire
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False)
+    assert plan.offsets == (0, 1)
+    assert estimate_wire_bytes(plan, N, 10, 3) == 3 * N * 1 * (10 * 4 + 8)
+    dense = ProtocolPlan.from_topology(TOPO, schedule="dense",
+                                       use_kernels=False)
+    assert estimate_wire_bytes(dense, N, 10, 3) == 3 * N * (N - 1) * (10 * 4 + 8)
+
+
+def test_session_runners_are_memoized():
+    """Reusing a session must not re-trace/re-compile the scan segment."""
+    session = _session()
+    assert session.consensus_runner(()) is session.consensus_runner(())
+    hooks = (TranscriptHook(),)
+    assert session.consensus_runner(hooks) is session.consensus_runner(hooks)
+    assert session.consensus_runner(()) is not session.consensus_runner(hooks)
+
+
+def test_fixed_sensitivity_reaches_training_config():
+    """PrivacySpec.fixed_sensitivity must survive into the trainable
+    branch (regression: it used to be dropped, calibrating noise to 0)."""
+    session, _, _ = _mlp_session(
+        privacy=PrivacySpec(b=5.0, gamma_n=1e-4, c_prime=CP, lam=LAM,
+                            sensitivity_mode="fixed", fixed_sensitivity=7.5))
+    assert session.train_cfg.dpps.sensitivity_mode == "fixed"
+    assert session.train_cfg.dpps.fixed_sensitivity == 7.5
+    # pedfl keeps its own 2C convention
+    session2, _, _ = _mlp_session(algorithm="pedfl")
+    assert session2.train_cfg.dpps.fixed_sensitivity == 200.0
+
+
+def test_resumed_run_reports_only_executed_rounds():
+    session, _, batch_at = _mlp_session()
+    key = jax.random.PRNGKey(11)
+    first = session.train(3, batch_at, key=key)
+    second = session.train(3, batch_at, state=first.state, key=key, start=3)
+    assert first.rounds == 3 and second.rounds == 3
+    # sync_interval=3: round 2 syncs in [0,3), round 5 in [3,6)
+    assert first.epsilon_spent == pytest.approx(
+        2 * session.cfg.epsilon_per_round)
+    assert second.epsilon_spent == pytest.approx(
+        2 * session.cfg.epsilon_per_round)
+    assert first.epsilon_spent + second.epsilon_spent == pytest.approx(
+        session.epsilon_spent(6))
+    assert first.wire_bytes == second.wire_bytes

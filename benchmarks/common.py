@@ -22,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import PrivacySpec, RealSensitivityHook, Session
+from repro.api import make_topology as _registry_topology
 from repro.core.partpsp import consensus_params
-from repro.core.topology import DOutGraph, ExpGraph
 
 N_NODES = 10
 SEED = 2024
@@ -32,10 +32,9 @@ HIDDEN = 10  # paper MLP: 784x10, 10x784, 784x10
 
 
 def make_topology_n(name: str, n_nodes: int):
-    if name == "exp":
-        return ExpGraph(n_nodes=n_nodes)
-    d = int(name.split("-")[0])  # "2-out", "4-out", ...
-    return DOutGraph(n_nodes=n_nodes, d=d)
+    """Shared registry lookup (repro.api.cli); accepts the benchmarks'
+    legacy "K-out" spelling alongside the registry names."""
+    return _registry_topology(name, n_nodes, seed=SEED)
 
 
 def make_topology(name: str):
@@ -110,6 +109,7 @@ def build_setup(
     seed: int = SEED,
     c_prime: float | None = None,
     lam: float | None = None,
+    faults=None,                    # repro.net.faults.FaultModel
 ):
     """One session + task + host batch stream for the paper's MLP setup.
 
@@ -132,7 +132,7 @@ def build_setup(
         params=init_mlp(key), algorithm=algorithm, gamma_l=gamma_l,
         gamma_s=gamma_s, clip=clip, schedule=schedule,
         sync_interval=sync_interval, use_kernels=False, chunk=chunk,
-        key=key)
+        faults=faults, key=key)
 
     task = SyntheticClassification(d_in=D_IN, n_classes=N_CLASSES, seed=seed)
     skew = dirichlet_partition(n_nodes, N_CLASSES, alpha=0.5, seed=seed)
@@ -167,6 +167,7 @@ def run_experiment(
     name: str | None = None,
     c_prime: float | None = None,   # None -> empirical calibration;
     lam: float | None = None,       # the paper tunes these per setup (SV.B)
+    faults=None,                    # repro.net.faults.FaultModel
 ) -> RunResult:
     n_nodes = N_NODES if n_nodes is None else n_nodes
     session, task, batch_at = build_setup(
@@ -174,7 +175,7 @@ def run_experiment(
         b=b, gamma_n=gamma_n, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
         batch=batch, sync_interval=sync_interval,
         sensitivity_mode=sensitivity_mode, schedule=schedule, chunk=chunk,
-        n_nodes=n_nodes, seed=seed, c_prime=c_prime, lam=lam)
+        n_nodes=n_nodes, seed=seed, c_prime=c_prime, lam=lam, faults=faults)
 
     real_hook = RealSensitivityHook() if track_real else None
     report = session.train(steps, batch_at,

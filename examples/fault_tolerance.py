@@ -1,0 +1,71 @@
+"""Fault tolerance: private consensus on a lossy random network.
+
+Sixteen nodes on a seeded Erdős–Rényi graph reach DP consensus while the
+network misbehaves — 20% of links drop every round (independent Bernoulli
+masks drawn inside the compiled scan) and one node churns out for a
+stretch of rounds. Push-sum is what makes this safe: the realized weight
+matrix is column-renormalized so every sender's outgoing mass still sums
+to 1, and the a-weight correction (Eq. 10) absorbs the lost symmetry —
+mass conservation holds at any drop rate.
+
+The session records the *realized* network alongside: per-round realized
+out-degrees land in the trajectory (and the privacy ledger), and the
+NetworkStatsHook checks Assumption-1 window connectivity on the realized
+graphs, not the nominal topology.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import PrivacySpec, Session
+from repro.net import ErdosRenyiGraph, FaultModel, NetworkStatsHook
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--rounds", type=int, default=80)
+ap.add_argument("--drop-rate", type=float, default=0.2)
+args = ap.parse_args()
+
+N = 16
+topo = ErdosRenyiGraph(n_nodes=N, p=0.3, seed=7)
+faults = FaultModel(drop_rate=args.drop_rate,
+                    churn=((3, args.rounds // 4, args.rounds // 2),))
+
+session = Session.build(topo, privacy=PrivacySpec(b=5.0, gamma_n=1e-3),
+                        faults=faults)
+print(f"graph: er(p=0.3) over {N} nodes | schedule={session.plan.schedule} "
+      f"| drop_rate={args.drop_rate} | node 3 down rounds "
+      f"[{args.rounds // 4}, {args.rounds // 2})")
+
+key = jax.random.PRNGKey(0)
+private = [jax.random.normal(key, (N, 8))]
+true_mean = jnp.mean(private[0], axis=0)
+
+hook = NetworkStatsHook()
+report = session.run(args.rounds, values=private, hooks=[hook])
+
+a = np.asarray(report.state.push.a)
+print(f"push-sum mass: mean(a) = {a.mean():.6f} (conserved), "
+      f"spread [{a.min():.3f}, {a.max():.3f}] (absorbed by Eq. 10)")
+
+net = report.network
+print(f"network: {net.summary()['realized_edges_mean']:.1f} realized "
+      f"edges/round (dropped {int(net.dropped_edges.sum())} total, "
+      f"{net.drop_fraction:.0%}), realized-window connectivity "
+      f"{net.connected_windows}/{net.windows}")
+deg = np.asarray(report.trajectory["net_out_degree"])
+print(f"realized out-degree during churn: node 3 -> "
+      f"{deg[args.rounds // 4:args.rounds // 2, 3].max()} (isolated)")
+
+consensus = session.consensus(report.state)[0]
+err = float(jnp.max(jnp.abs(consensus - true_mean[None])))
+print(f"\nconsensus error vs true mean: {err:.4f} — consensus reached "
+      f"through {args.drop_rate:.0%} link loss + churn")
+assert abs(a.mean() - 1.0) < 1e-5, "mass conservation violated"
+assert deg[args.rounds // 4:args.rounds // 2, 3].max() == 0
+print(f"report: {report.rounds} rounds, epsilon spent = "
+      f"{report.epsilon_spent:.0f}, effective wire bytes = "
+      f"{net.effective_bytes:,} (nominal {net.nominal_bytes:,})")

@@ -21,7 +21,16 @@ New workloads are new sessions + hooks, not new drivers: every driver in
 the repo (launch/train.py, launch/serve.py, benchmarks/, examples/)
 builds its runs through this package.
 """
-from repro.api.cli import add_protocol_arguments, validate_protocol_args
+from repro.api.cli import (
+    TOPOLOGY_CHOICES,
+    add_fault_arguments,
+    add_protocol_arguments,
+    add_topology_arguments,
+    faults_from_args,
+    make_topology,
+    topology_from_args,
+    validate_protocol_args,
+)
 from repro.api.hooks import (
     BudgetExhausted,
     BudgetHook,
@@ -49,9 +58,15 @@ __all__ = [
     "RunReport",
     "ServeReport",
     "Session",
+    "TOPOLOGY_CHOICES",
     "TranscriptHook",
+    "add_fault_arguments",
     "add_protocol_arguments",
+    "add_topology_arguments",
     "estimate_wire_bytes",
+    "faults_from_args",
     "hook_trace_spec",
+    "make_topology",
+    "topology_from_args",
     "validate_protocol_args",
 ]

@@ -5,12 +5,93 @@ the same deployment flags; this module owns them so invalid combinations
 fail at argument-parsing time with an actionable message instead of
 surfacing as a deep ``ProtocolPlan.__post_init__`` traceback from inside
 the build.
+
+It also owns the **topology registry**: ``launch/train.py`` and
+``benchmarks/common.py`` each used to carry their own copy of the
+name -> Topology constructor mapping (and drifted — the benchmarks parsed
+"2-out" strings, the launcher only knew dout/exp). :func:`make_topology`
+is the single registry covering the paper circulants *and* the
+``repro.net`` random families, :func:`add_topology_arguments` exposes the
+shared ``--topology`` flag with the family-specific knobs, and
+:func:`topology_from_args` validates family/knob combinations at parse
+time (a prime-N torus or an out-of-range ER probability dies as an
+``ap.error``, not a constructor traceback mid-build).
 """
 from __future__ import annotations
 
 import argparse
+from typing import Any
 
-__all__ = ["add_protocol_arguments", "validate_protocol_args"]
+__all__ = [
+    "TOPOLOGY_CHOICES",
+    "add_protocol_arguments",
+    "validate_protocol_args",
+    "add_topology_arguments",
+    "topology_from_args",
+    "make_topology",
+    "add_fault_arguments",
+    "faults_from_args",
+]
+
+# The shared --topology vocabulary: the paper circulants (dout, exp), the
+# classic deterministic graphs (ring, full), and the repro.net random /
+# structured families (er, matching, torus, smallworld).
+TOPOLOGY_CHOICES = ("dout", "exp", "ring", "full", "er", "matching",
+                    "torus", "smallworld")
+
+
+def make_topology(name: str, n_nodes: int, *, degree: int = 2,
+                  p: float = 0.3, matchings: int = 1, beta: float = 0.1,
+                  rows: int = 0, seed: int = 0, period: int = 0) -> Any:
+    """The one name -> Topology registry (see module docstring).
+
+    ``period > 0`` wraps a seeded random family in
+    :class:`repro.net.graphs.RandomSequenceTopology` so the graph is
+    resampled every round with that cycle length. Family constructors
+    raise ``ValueError`` with actionable messages for invalid knobs;
+    :func:`topology_from_args` converts those into parser errors.
+    """
+    # Deferred imports: repro.api initializes before repro.net on the
+    # session import path; the registry must not force the package edge.
+    from repro.core.topology import (DOutGraph, ExpGraph,
+                                     FullyConnectedGraph, RingGraph)
+
+    name = name.lower()
+    if name.endswith("-out"):  # legacy benchmark spelling: "2-out", "4-out"
+        degree, name = int(name.split("-")[0]), "dout"
+    if name == "dout":
+        topo = DOutGraph(n_nodes=n_nodes, d=degree)
+    elif name == "exp":
+        topo = ExpGraph(n_nodes=n_nodes)
+    elif name == "ring":
+        topo = RingGraph(n_nodes=n_nodes)
+    elif name == "full":
+        topo = FullyConnectedGraph(n_nodes=n_nodes)
+    elif name in ("er", "matching", "smallworld", "torus"):
+        from repro.net.graphs import (ErdosRenyiGraph, RandomMatchingGraph,
+                                      SmallWorldGraph, TorusGraph)
+
+        if name == "er":
+            topo = ErdosRenyiGraph(n_nodes=n_nodes, p=p, seed=seed)
+        elif name == "matching":
+            topo = RandomMatchingGraph(n_nodes=n_nodes, k=matchings,
+                                       seed=seed)
+        elif name == "smallworld":
+            topo = SmallWorldGraph(n_nodes=n_nodes, beta=beta, seed=seed)
+        else:
+            topo = TorusGraph(n_nodes=n_nodes, rows=rows)
+    else:
+        raise ValueError(
+            f"unknown topology {name!r}; choose from {TOPOLOGY_CHOICES} "
+            "(or the legacy 'K-out' spelling for dout)")
+    if period > 0:
+        from repro.net.graphs import RandomSequenceTopology
+
+        # Raises for unseeded families (torus and the circulants) with an
+        # actionable message — resampling needs a seed to fold.
+        topo = RandomSequenceTopology(n_nodes=n_nodes, base=topo,
+                                      period=period)
+    return topo
 
 
 def add_protocol_arguments(ap: argparse.ArgumentParser, *,
@@ -52,3 +133,63 @@ def validate_protocol_args(ap: argparse.ArgumentParser,
         ap.error(
             f"--wire-dtype {wire} requires --driver engine: the per-round "
             "loop driver runs the pytree reference path, which is f32-only.")
+
+
+def add_topology_arguments(ap: argparse.ArgumentParser, *,
+                           default: str = "dout") -> None:
+    """Attach the shared --topology flag plus its family-specific knobs."""
+    ap.add_argument("--topology", choices=TOPOLOGY_CHOICES, default=default,
+                    help="communication graph family (repro.api.cli "
+                         "registry; er/matching/smallworld/torus are the "
+                         "repro.net families)")
+    ap.add_argument("--degree", type=int, default=2,
+                    help="dout: out-degree incl. the self loop")
+    ap.add_argument("--er-p", type=float, default=0.3,
+                    help="er: edge probability")
+    ap.add_argument("--matchings", type=int, default=1,
+                    help="matching: number of random cycles unioned")
+    ap.add_argument("--sw-beta", type=float, default=0.1,
+                    help="smallworld: Watts-Strogatz rewiring probability")
+    ap.add_argument("--torus-rows", type=int, default=0,
+                    help="torus: grid rows (0 = most-square factorization)")
+    ap.add_argument("--graph-seed", type=int, default=0,
+                    help="seed of the random graph families")
+    ap.add_argument("--resample-period", type=int, default=0,
+                    help="resample the random graph every round, cycling "
+                         "with this period (0 = static draw)")
+
+
+def topology_from_args(ap: argparse.ArgumentParser, args: argparse.Namespace,
+                       n_nodes: int) -> Any:
+    """Registry lookup with parse-time validation (ap.error on bad knobs)."""
+    try:
+        return make_topology(
+            args.topology, n_nodes, degree=args.degree, p=args.er_p,
+            matchings=args.matchings, beta=args.sw_beta,
+            rows=args.torus_rows, seed=args.graph_seed,
+            period=args.resample_period)
+    except ValueError as e:
+        ap.error(f"--topology {args.topology}: {e}")
+
+
+def add_fault_arguments(ap: argparse.ArgumentParser) -> None:
+    """Attach the network fault-injection flags (repro.net.faults)."""
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="per-edge Bernoulli link-drop probability per round")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    help="per-node probability a round's messages miss the "
+                         "deadline (outgoing edges dropped, renormalized)")
+
+
+def faults_from_args(ap: argparse.ArgumentParser,
+                     args: argparse.Namespace) -> Any:
+    """FaultModel from the flags, or None when every knob is off."""
+    if not (args.drop_rate or args.straggler_rate):
+        return None
+    from repro.net.faults import FaultModel
+
+    try:
+        return FaultModel(drop_rate=args.drop_rate,
+                          straggler_rate=args.straggler_rate)
+    except ValueError as e:
+        ap.error(str(e))

@@ -70,6 +70,7 @@ class RunContext:
     rounds: int                # rounds requested (not necessarily executed)
     algorithm: str = "dpps"
     protected: bool = True     # noise on (cfg.noise and gamma_n > 0)
+    d_s: int = 0               # shared wire dimension (per-node scalars)
 
 
 class RoundHook:

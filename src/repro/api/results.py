@@ -57,6 +57,14 @@ class RunReport:
       wall_clock     seconds spent driving the run (host side included).
       aborted        True when a hook aborted the run (strict privacy
                      budget); ``abort_reason`` carries the message.
+      network        realized-network record
+                     (:class:`repro.net.stats.NetworkStats`) when a
+                     ``NetworkStatsHook`` was attached — the per-round
+                     realized edges / dropped edges / B-window
+                     connectivity under fault injection. ``wire_bytes``
+                     above stays the *nominal* plan estimate;
+                     ``network.effective_bytes`` is what actually crossed
+                     the wire.
     """
 
     state: Any
@@ -67,16 +75,20 @@ class RunReport:
     wall_clock: float
     aborted: bool = False
     abort_reason: str | None = None
+    network: Any = None
 
     def summary(self) -> dict[str, Any]:
         eps = float(self.epsilon_spent)
-        return {
+        out = {
             "rounds": self.rounds,
             "epsilon_spent": eps if np.isfinite(eps) else None,
             "wire_bytes": self.wire_bytes,
             "wall_clock_s": round(self.wall_clock, 3),
             "aborted": self.aborted,
         }
+        if self.network is not None:
+            out["network"] = self.network.summary()
+        return out
 
 
 @dataclasses.dataclass

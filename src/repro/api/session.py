@@ -184,6 +184,7 @@ class ProtocolSession:
         packed: bool = True,
         wire_dtype: str = "f32",
         mesh: Any = None,
+        faults: Any = None,
         seed: int = 0,
         key: jax.Array | None = None,
     ) -> "ProtocolSession":
@@ -207,6 +208,14 @@ class ProtocolSession:
         ``key`` (default ``PRNGKey(seed)``) is both the parameter-init key
         and the run drivers' base key; override per run with
         ``run(..., key=)``.
+
+        ``faults`` (a :class:`repro.net.faults.FaultModel`) attaches
+        network fault injection: an active model switches the derived plan
+        onto the ``dynamic`` schedule (per-round W masked and
+        column-renormalized inside the compiled scan) and the run
+        trajectory/ledger record the *realized* out-degrees. Attach a
+        :class:`repro.net.stats.NetworkStatsHook` to a run to get the
+        realized-network record on ``RunReport.network``.
         """
         spec = PrivacySpec() if privacy is None else privacy
         base_key = jax.random.PRNGKey(seed) if key is None else key
@@ -229,14 +238,24 @@ class ProtocolSession:
                 plan = ProtocolPlan.from_topology(
                     topology, mesh=mesh, schedule=schedule,
                     use_kernels=use_kernels, sync_interval=sync_interval,
-                    chunk=chunk, packed=packed, wire_dtype=wire_dtype)
+                    chunk=chunk, packed=packed, wire_dtype=wire_dtype,
+                    faults=faults)
+            elif faults is not None:
+                raise ValueError(
+                    "pass faults= either to Session.build (plan derived) or "
+                    "to ProtocolPlan.from_topology — not alongside an "
+                    "explicit plan=, which already fixed the schedule")
             cfg_sync = sync_interval if isinstance(sync_interval, int) else 0
 
+            # The protocol config only knows dense/circulant; "dynamic" is
+            # the engine-level fault-masking schedule (dense at step level).
+            cfg_schedule = ("dense" if plan.schedule == "dynamic"
+                            else plan.schedule)
             if loss_fn is not None:
                 train_cfg = make_baseline_config(
                     algorithm, gamma_l=gamma_l, gamma_s=gamma_s, clip=clip,
                     b=spec.b, gamma_n=spec.gamma_n, c_prime=c_prime, lam=lam,
-                    schedule=plan.schedule, sync_interval=cfg_sync,
+                    schedule=cfg_schedule, sync_interval=cfg_sync,
                     sensitivity_mode=spec.sensitivity_mode)
                 if not spec.noise and algorithm not in ("sgp",):
                     train_cfg = dataclasses.replace(
@@ -381,10 +400,10 @@ class ProtocolSession:
                         if not is_sync_round(t, sync))
         return protected * self.cfg.epsilon_per_round
 
-    def _context(self, rounds: int, algorithm: str) -> RunContext:
+    def _context(self, rounds: int, algorithm: str, d_s: int = 0) -> RunContext:
         return RunContext(cfg=self.cfg, plan=self.plan, n_nodes=self.n_nodes,
                           rounds=rounds, algorithm=algorithm,
-                          protected=self._protected)
+                          protected=self._protected, d_s=d_s)
 
     def _drive(self, segments: Iterator, hooks: Sequence[RoundHook],
                d_s: int, start: int = 0) -> RunReport:
@@ -419,13 +438,21 @@ class ProtocolSession:
             trajectory = {k: np.concatenate([np.asarray(t[k]) for t in trajs])
                           for k in keys}
         executed = done - start
+        # Any hook exposing network_stats() (repro.net.stats.
+        # NetworkStatsHook — duck-typed so repro.api never imports
+        # repro.net) contributes the realized-network record.
+        network = None
+        for h in hooks:
+            stats_fn = getattr(h, "network_stats", None)
+            if stats_fn is not None:
+                network = stats_fn()
         return RunReport(
             state=state, trajectory=trajectory, rounds=executed,
             epsilon_spent=self.epsilon_spent(executed, start=start),
             wire_bytes=estimate_wire_bytes(self.plan, self.n_nodes, d_s,
                                            executed),
             wall_clock=time.time() - t_start, aborted=aborted,
-            abort_reason=reason)
+            abort_reason=reason, network=network)
 
     def run(
         self,
@@ -454,11 +481,11 @@ class ProtocolSession:
         state = _own_buffers(state)
         key = self.base_key if key is None else key
         hooks = tuple(hooks)
-        for h in hooks:
-            h.prepare(self._context(rounds, "dpps"))
-        run_chunk = self.consensus_runner(hooks)
         d_s = sum(int(np.prod(x.shape[1:])) if x.ndim > 1 else 1
                   for x in jax.tree_util.tree_leaves(state.push.s))
+        for h in hooks:
+            h.prepare(self._context(rounds, "dpps", d_s))
+        run_chunk = self.consensus_runner(hooks)
         chunk = self.plan.chunk
 
         def segments():
@@ -503,7 +530,8 @@ class ProtocolSession:
         key = self.base_key if key is None else key
         hooks = tuple(hooks)
         for h in hooks:
-            h.prepare(self._context(rounds, self.algorithm))
+            h.prepare(self._context(rounds, self.algorithm,
+                                    self.partition.d_shared()))
         if driver == "engine":
             run_chunk = self.segment_runner(hooks)
             segments = run_segments(run_chunk, state, batch_at, key,
@@ -531,18 +559,36 @@ class ProtocolSession:
                 partpsp_step, cfg=self.train_cfg, partition=self.partition,
                 loss_fn=self.loss_fn, return_s_half=need_s_half, tap=tap,
                 mechanism=self.mechanism, offsets=plan.offsets))
-            mix_for = lambda t: {"mix_weights":
-                                 plan.mix_weights[t % plan.period]}
+            mix_for = lambda t: ({"mix_weights":
+                                  plan.mix_weights[t % plan.period]}, None)
         else:
             step = jax.jit(functools.partial(
                 partpsp_step, cfg=self.train_cfg, partition=self.partition,
                 loss_fn=self.loss_fn, return_s_half=need_s_half, tap=tap,
                 mechanism=self.mechanism))
-            mix_for = lambda t: {"w": plan.ws[t % plan.period]}
+            if getattr(plan, "dynamic", False):
+                # Same fault-key fold the engine's scan body uses
+                # (FaultModel.fault_key of fold_in(base, t)), so the loop
+                # realizes the identical masked W per round and stays
+                # bit-comparable to the engine under faults.
+                want_adj = any(getattr(h, "needs_adjacency", False)
+                               for h in hooks)
+
+                def mix_for(t):
+                    w, net = plan.faults.realize(
+                        plan.ws[t % plan.period],
+                        plan.faults.fault_key(jax.random.fold_in(key, t)), t,
+                        with_adjacency=want_adj)
+                    return {"w": w}, net
+            else:
+                mix_for = lambda t: ({"w": plan.ws[t % plan.period]}, None)
 
         for t in range(start, start + rounds):
+            mix, net = mix_for(t)
             state, m = step(state, batch_at(t), jax.random.fold_in(key, t),
-                            **mix_for(t))
+                            **mix)
+            if net is not None:
+                m = dict(m, **net)
             rows = capture_rows(m, hooks)
             yield t, 1, state, jax.tree_util.tree_map(lambda x: x[None], rows)
 

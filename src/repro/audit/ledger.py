@@ -83,11 +83,18 @@ class PrivacyLedger:
         sens_local: Any = None,
         protected: bool = True,
         synced: bool = False,
+        out_degree: Any = None,
+        dropped_edges: int | None = None,
     ) -> dict[str, Any]:
         """Record round ``t``; returns the (JSON-ready) ledger entry.
 
         Synchronization rounds exchange exact parameters and are recorded
-        as unprotected regardless of ``protected``.
+        as unprotected regardless of ``protected``. ``out_degree`` (the
+        per-node *realized* non-self out-degrees under fault injection —
+        repro.net) and ``dropped_edges`` record what actually crossed the
+        wire; empirical-epsilon audits (benchmarks/fig5_audit.py) stay
+        valid under faults because the trail states the realized graph
+        each round's transcript was produced on, not the nominal one.
         """
         protected = protected and not synced
         self.accountant = self.accountant.step(protected=protected)
@@ -115,6 +122,12 @@ class PrivacyLedger:
             arr = np.asarray(sens_local, dtype=np.float64)
             entry["sens_local_max"] = float(arr.max())
             entry["sens_local_min"] = float(arr.min())
+        if out_degree is not None:
+            deg = np.asarray(out_degree, dtype=np.float64)
+            entry["out_degree_min"] = int(deg.min())
+            entry["out_degree_mean"] = float(deg.mean())
+        if dropped_edges is not None:
+            entry["dropped_edges"] = int(dropped_edges)
         self.entries.append(entry)
         if self._fh is not None:
             self._fh.write(json.dumps(entry) + "\n")
@@ -129,12 +142,21 @@ class PrivacyLedger:
         protected: bool = True,
         sync_interval: int = 0,
     ) -> None:
-        """Engine path: record a scan segment's captured (T, ...) trajectory."""
+        """Engine path: record a scan segment's captured (T, ...) trajectory.
+
+        Under fault injection (repro.net) the trajectory carries
+        ``net_out_degree`` / ``net_dropped_edges`` rows; they land on each
+        entry so the trail records the realized graph, not the nominal one.
+        """
         ests = np.asarray(traj["sensitivity_estimate"])
         reals = traj.get("sensitivity_real")
         reals = None if reals is None else np.asarray(reals)
         locals_ = traj.get("sensitivity_local")
         locals_ = None if locals_ is None else np.asarray(locals_)
+        degs = traj.get("net_out_degree")
+        degs = None if degs is None else np.asarray(degs)
+        drops = traj.get("net_dropped_edges")
+        drops = None if drops is None else np.asarray(drops)
         for i in range(ests.shape[0]):
             t = t0 + i
             synced = is_sync_round(t, sync_interval)
@@ -145,6 +167,8 @@ class PrivacyLedger:
                 sens_local=None if locals_ is None else locals_[i],
                 protected=protected,
                 synced=synced,
+                out_degree=None if degs is None else degs[i],
+                dropped_edges=None if drops is None else drops[i],
             )
 
     # -- reading -------------------------------------------------------------

@@ -46,19 +46,38 @@ class Topology:
     n_nodes: int
 
     def offsets(self, t: int) -> Sequence[int] | None:
-        raise NotImplementedError
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement offsets(); circulant "
+            "subclasses must return the per-round offset set, non-circulant "
+            "ones must return None and override weight_matrix()")
 
     def out_degree(self, t: int) -> int:
+        """Number of out-neighbours (self loop included) at round ``t``."""
         offs = self.offsets(t)
         if offs is None:
-            raise NotImplementedError
+            # Non-circulant: count the support of sender columns instead of
+            # failing — the realized weight matrix is the source of truth.
+            w = self.weight_matrix(t)
+            degs = (w > 0.0).sum(axis=0)
+            if degs.min() != degs.max():
+                raise NotImplementedError(
+                    f"{type(self).__name__} is non-circulant with irregular "
+                    f"out-degrees (min {int(degs.min())}, max "
+                    f"{int(degs.max())} at t={t}); there is no single "
+                    "out_degree — read per-node degrees off "
+                    "weight_matrix(t) > 0 column sums instead")
+            return int(degs[0])
         return len(offs)
 
     def weight_matrix(self, t: int) -> np.ndarray:
         """Doubly stochastic W^(t) (row convention, see module docstring)."""
         offs = self.offsets(t)
         if offs is None:
-            raise NotImplementedError
+            raise NotImplementedError(
+                f"{type(self).__name__}.offsets() returned None (not a "
+                "circulant topology) but the subclass does not override "
+                "weight_matrix(); non-circulant topologies must construct "
+                "their own doubly stochastic W^(t)")
         n = self.n_nodes
         w = 1.0 / len(offs)
         mat = np.zeros((n, n), dtype=np.float64)
@@ -77,7 +96,13 @@ class Topology:
         ``s_new[i] = sum_k w_k * s[(i - k) mod n]`` — i receives from i-k
         because sender j = i-k used offset k to reach i.
         """
-        offs = tuple(self.offsets(t))
+        offs = self.offsets(t)
+        if offs is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} is not circulant: mixing_weights() "
+                "has no offset decomposition — run it on the dense schedule "
+                "(ProtocolPlan schedule='dense'), which uses weight_matrix()")
+        offs = tuple(offs)
         w = np.full((len(offs),), 1.0 / len(offs), dtype=np.float64)
         return offs, w
 
@@ -85,6 +110,11 @@ class Topology:
         """Directed edge set {(sender, receiver)} at round t (incl. self loops)."""
         offs = self.offsets(t)
         n = self.n_nodes
+        if offs is None:
+            # Non-circulant: read the edge set off the weight support.
+            # W[i, j] > 0 iff j sends to i (row convention).
+            recv, send = np.nonzero(self.weight_matrix(t) > 0.0)
+            return {(int(j), int(i)) for i, j in zip(recv, send)}
         return {(i, (i + k) % n) for i in range(n) for k in offs}
 
 
@@ -164,10 +194,25 @@ class TimeVaryingTopology(Topology):
             if topo.n_nodes != self.n_nodes:
                 raise ValueError("all scheduled topologies must share n_nodes")
 
+    @property
+    def period(self) -> int:
+        """Full cycle length: W^(t + period) == W^(t).
+
+        The member at slot ``t % len(schedule)`` is evaluated at the
+        *global* round ``t``, so its own time-variation (EXP's round
+        rotation, a RandomSequenceTopology's resample period) rides along
+        — the composed period is lcm(cycle length, member periods), not
+        just the cycle length.
+        """
+        period = len(self.schedule)
+        for topo in self.schedule:
+            period = math.lcm(period, int(getattr(topo, "period", 1)))
+        return period
+
     def _at(self, t: int) -> Topology:
         return self.schedule[t % len(self.schedule)]
 
-    def offsets(self, t: int) -> Sequence[int]:
+    def offsets(self, t: int) -> Sequence[int] | None:
         return self._at(t).offsets(t)
 
     def weight_matrix(self, t: int) -> np.ndarray:

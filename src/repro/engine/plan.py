@@ -17,6 +17,15 @@ Schedule selection (:meth:`from_topology`):
   SPerf #1).
 * ``dense`` (the paper-faithful ``W @ s`` baseline, all-gather on a mesh)
   for non-circulant topologies or when forced with ``schedule="dense"``.
+* ``dynamic`` — dense with in-scan fault injection: selected automatically
+  when an *active* :class:`repro.net.faults.FaultModel` is attached
+  (``faults=``). The nominal per-round W is stacked exactly like dense;
+  the engine masks and column-renormalizes it inside the scan body each
+  round (``FaultModel.realize``), so the realized matrix — and the
+  realized out-degrees the audit trail records — varies per round even
+  for static topologies. An inactive fault model emits no masking code at
+  all: the plan stays ``dense``/``circulant`` and the compiled program is
+  bit-identical to the fault-free engine.
 
 Time-varying topologies (EXP) are handled by *superset offsets*: the static
 offset set is the union over the topology's period and the per-round weight
@@ -50,11 +59,15 @@ class ProtocolPlan:
     """Static protocol-execution choices plus their per-round array payloads.
 
     Fields:
-      schedule       "dense" | "circulant" — which gossip lowering to emit.
+      schedule       "dense" | "circulant" | "dynamic" — which gossip
+                     lowering to emit ("dynamic" = dense + in-scan fault
+                     masking; see module docstring).
       period         topology period P (1 for static graphs).
       offsets        static superset offsets (circulant only).
       mix_weights    (P, K) per-round weights over ``offsets`` (circulant).
-      ws             (P, N, N) per-round weight matrices (dense only).
+      ws             (P, N, N) per-round weight matrices (dense/dynamic).
+      faults         the active repro.net.faults.FaultModel realized inside
+                     the scan (dynamic only; None otherwise).
       use_kernels    route noise/clip through the Pallas kernels.
       sync_interval  full-sync cadence to stamp on DPPSConfig (None = keep
                      whatever the config already says).
@@ -82,6 +95,7 @@ class ProtocolPlan:
     chunk: int = 50
     packed: bool = True
     wire_dtype: str = "f32"
+    faults: Any = None  # repro.net.faults.FaultModel (duck-typed: no import)
 
     def __post_init__(self):
         if self.wire_dtype not in ("f32", "bf16"):
@@ -90,6 +104,14 @@ class ProtocolPlan:
             raise ValueError("wire_dtype='bf16' requires packed=True "
                              "(the packed layout is what makes the wire "
                              "format a single cast)")
+        if self.schedule == "dynamic" and self.faults is None:
+            raise ValueError("schedule='dynamic' is selected by attaching "
+                             "an active FaultModel (faults=), not by hand")
+
+    @property
+    def dynamic(self) -> bool:
+        """Whether the scan body masks W with the fault model each round."""
+        return self.schedule == "dynamic"
 
     @classmethod
     def from_topology(
@@ -103,6 +125,7 @@ class ProtocolPlan:
         chunk: int = 50,
         packed: bool = True,
         wire_dtype: str = "f32",
+        faults: Any = None,
     ) -> "ProtocolPlan":
         """Derive the plan for ``topo`` (and optionally a device mesh).
 
@@ -112,10 +135,22 @@ class ProtocolPlan:
         mesh is given its gossip-axis extent must divide the node count so
         the sharded engine (``repro.engine.shard``) can block-shard nodes.
         ``packed`` / ``wire_dtype`` select the packed flat-buffer runtime
-        and its wire format (see the class docstring).
+        and its wire format (see the class docstring). ``faults`` (a
+        :class:`repro.net.faults.FaultModel`) switches an *active* model
+        onto the ``dynamic`` schedule — per-round masking of the stacked
+        dense W inside the scan; an inactive model is dropped so the
+        compiled program stays identical to the fault-free plan.
         """
         if schedule not in (None, "dense", "circulant"):
-            raise ValueError(f"unknown schedule {schedule!r}")
+            raise ValueError(f"unknown schedule {schedule!r} (dynamic is "
+                             "selected by passing faults=, not schedule=)")
+        if faults is not None and not getattr(faults, "active", False):
+            faults = None  # inactive model: emit the fault-free program
+        if faults is not None and schedule == "circulant":
+            raise ValueError(
+                "fault injection needs the dense weight form (masked edges "
+                "break circulant structure); drop schedule='circulant' — "
+                "the plan stacks the topology's per-round W instead")
         period = int(getattr(topo, "period", 1))
         per_round: list[tuple[tuple[int, ...], np.ndarray]] | None = []
         for t in range(period):
@@ -125,7 +160,10 @@ class ProtocolPlan:
                 break
             per_round.append(topo.mixing_weights(t))
 
-        if schedule is None:
+        if faults is not None:
+            schedule = "dynamic"
+            per_round = None  # always stack the dense per-round matrices
+        elif schedule is None:
             schedule = "circulant" if per_round is not None else "dense"
         if schedule == "circulant" and per_round is None:
             raise ValueError(
@@ -164,12 +202,17 @@ class ProtocolPlan:
         return cls(schedule=schedule, period=period, offsets=offsets,
                    mix_weights=mix_weights, ws=ws, use_kernels=use_kernels,
                    sync_interval=sync_interval, chunk=chunk, packed=packed,
-                   wire_dtype=wire_dtype)
+                   wire_dtype=wire_dtype, faults=faults)
 
     # -- per-round mixing operands -------------------------------------------
 
     def mix_at(self, t) -> dict[str, Any]:
-        """dpps_step mixing kwargs for (possibly traced) round index ``t``."""
+        """dpps_step mixing kwargs for (possibly traced) round index ``t``.
+
+        Dynamic plans return the *nominal* W — the engine's scan body (and
+        the session's loop driver) apply ``faults.realize`` to it with the
+        round's fault key before handing it to the step.
+        """
         if self.schedule == "circulant":
             if self.period == 1:
                 wts = self.mix_weights[0]
@@ -185,9 +228,12 @@ class ProtocolPlan:
     # -- config stamping -----------------------------------------------------
 
     def resolve_dpps(self, cfg: DPPSConfig) -> DPPSConfig:
-        updates: dict[str, Any] = dict(schedule=self.schedule,
-                                       use_kernels=self.use_kernels,
-                                       wire_dtype=self.wire_dtype)
+        # The step itself runs dense gossip on the realized W; "dynamic"
+        # is an engine-level schedule, not a protocol-level one.
+        updates: dict[str, Any] = dict(
+            schedule="dense" if self.schedule == "dynamic" else self.schedule,
+            use_kernels=self.use_kernels,
+            wire_dtype=self.wire_dtype)
         if self.sync_interval is not None:
             updates["sync_interval"] = int(self.sync_interval)
         return dataclasses.replace(cfg, **updates)

@@ -40,6 +40,14 @@ checkpointed state continues the exact same noise stream.
 The private ``_gossip_builder`` / ``_node_ops`` / ``_key_fold`` hooks are
 the seam ``repro.engine.shard`` uses to run the identical scan under
 ``shard_map`` with mesh-collective gossip.
+
+Fault injection (``ProtocolPlan.dynamic``, selected by an active
+``repro.net.faults.FaultModel``): the scan body realizes each round's
+masked, column-renormalized W from the nominal one before the step and
+merges the realized-network diagnostics (out-degrees, dropped edges,
+adjacency) into the trajectory. Inactive/absent fault models emit no
+masking code — the traced program is the plain engine's (the golden HLO
+pins in tests/test_api.py stay binding).
 """
 from __future__ import annotations
 
@@ -135,6 +143,43 @@ def _round_kwargs(plan: ProtocolPlan, t, gossip_builder, node_ops):
     return kwargs
 
 
+def _check_dynamic(plan: ProtocolPlan, gossip_builder) -> bool:
+    """Whether this run masks W in-scan (and that the mode is supported)."""
+    if not getattr(plan, "dynamic", False):
+        return False
+    if gossip_builder is not None:
+        raise NotImplementedError(
+            "fault injection (ProtocolPlan.dynamic) is not implemented for "
+            "the sharded engine's collective gossip; run the fault study on "
+            "the single-device engine, or detach the FaultModel on the mesh")
+    return True
+
+
+def _realize_faults(plan: ProtocolPlan, kwargs: dict[str, Any],
+                    round_key: jax.Array, t,
+                    with_adjacency: bool) -> dict[str, Any]:
+    """Dynamic plans: replace the nominal W with the round's realized one.
+
+    The fault mask is drawn from ``FaultModel.fault_key(round_key)`` — a
+    salted fold of the same per-round key the noise draw consumes, so the
+    mask stream is independent of the noise stream, identical between the
+    scan engine and the loop driver, and host-re-derivable from the base
+    key. Returns the round's network diagnostics (realized out-degrees,
+    dropped edges; the (N, N) realized adjacency only when a hook declared
+    ``needs_adjacency``) for the trajectory/ledger.
+    """
+    w_real, net = plan.faults.realize(
+        kwargs["w"], plan.faults.fault_key(round_key), t,
+        with_adjacency=with_adjacency)
+    kwargs["w"] = w_real
+    return net
+
+
+def _needs_adjacency(hooks: Sequence[Any]) -> bool:
+    """Whether any attached hook wants the per-round realized adjacency."""
+    return any(getattr(h, "needs_adjacency", False) for h in hooks)
+
+
 def _capture(diag: dict[str, Any], hooks: Sequence[Any]) -> dict[str, Any]:
     """Round diagnostics -> scan outputs (repro.api.hooks.capture_rows —
     imported lazily: repro.api imports this module at package init)."""
@@ -220,6 +265,8 @@ def run_dpps(
     """
     hooks, tap, need_s_half = _resolve_hooks(hooks, tap, track_real,
                                              "run_dpps")
+    dynamic = _check_dynamic(plan, _gossip_builder)
+    want_adj = dynamic and _needs_adjacency(hooks)
     cfg = plan.resolve_dpps(cfg)
     layout = wire_layout(plan, state.push.s)
     if layout is not None:
@@ -251,10 +298,14 @@ def run_dpps(
         if _key_fold is not None:
             k = _key_fold(k)
         kwargs = _round_kwargs(plan, st.t, _gossip_builder, _node_ops)
+        net = (_realize_faults(plan, kwargs, k, st.t, want_adj)
+               if dynamic else None)
         st2, diag = dpps_step(st, eps_at(x), k, cfg,
                               return_s_half=need_s_half,
                               mechanism=mechanism, tap=tap, layout=layout,
                               **kwargs)
+        if net is not None:
+            diag.update(net)
         return st2, _capture(diag, hooks)
 
     final, traj = jax.lax.scan(body, state, xs)
@@ -291,6 +342,8 @@ def run_partpsp(
     """
     hooks, tap, need_s_half = _resolve_hooks(hooks, tap, track_real,
                                              "run_partpsp")
+    dynamic = _check_dynamic(plan, _gossip_builder)
+    want_adj = dynamic and _needs_adjacency(hooks)
     cfg = plan.resolve_partpsp(cfg)
     layout = wire_layout(plan, state.dpps.push.s)
     if layout is not None:
@@ -301,10 +354,14 @@ def run_partpsp(
         if _key_fold is not None:
             k = _key_fold(k)
         kwargs = _round_kwargs(plan, st.dpps.t, _gossip_builder, _node_ops)
+        net = (_realize_faults(plan, kwargs, k, st.dpps.t, want_adj)
+               if dynamic else None)
         st2, m = partpsp_step(st, batch_t, k, cfg=cfg, partition=partition,
                               loss_fn=loss_fn, return_s_half=need_s_half,
                               mechanism=mechanism, tap=tap, layout=layout,
                               **kwargs)
+        if net is not None:
+            m.update(net)
         return st2, _capture(m, hooks)
 
     final, traj = jax.lax.scan(body, state, batches)

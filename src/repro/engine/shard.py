@@ -198,13 +198,21 @@ def _seq_spec(axis_name: str):
     return lambda x: P(None, axis_name, *((None,) * (x.ndim - 2)))
 
 
-def _check_cfg(cfg: DPPSConfig, n_nodes: int, n_shards: int) -> None:
+def _check_cfg(cfg: DPPSConfig, n_nodes: int, n_shards: int,
+               plan: ProtocolPlan | None = None) -> None:
     if cfg.sensitivity_mode == "real":
         raise ValueError("sensitivity_mode='real' is experiments-only and "
                          "unsupported under sharding")
     if n_nodes % n_shards != 0:
         raise ValueError(f"node count {n_nodes} must divide evenly over "
                          f"{n_shards} gossip shards")
+    if plan is not None and getattr(plan, "dynamic", False):
+        raise NotImplementedError(
+            "fault injection (ProtocolPlan.dynamic / faults=) is not "
+            "implemented for the sharded engine: the realized W masking "
+            "needs the full (N, N) matrix per round, which the collective "
+            "gossip path never materializes. Run fault studies on the "
+            "single-device engine.")
 
 
 def shard_run_dpps(
@@ -219,7 +227,7 @@ def shard_run_dpps(
 ) -> tuple[DPPSState, dict[str, jnp.ndarray]]:
     """:func:`repro.engine.rounds.run_dpps`, node axis sharded over ``mesh``."""
     axis_name, n_shards = _gossip_axis(mesh)
-    _check_cfg(plan.resolve_dpps(cfg), state.push.a.shape[0], n_shards)
+    _check_cfg(plan.resolve_dpps(cfg), state.push.a.shape[0], n_shards, plan)
     if eps_seq is None:
         if rounds is None:
             raise ValueError("rounds= is required when eps_seq is None")
@@ -265,7 +273,8 @@ def shard_run_partpsp(
     shards over the gossip axis, rounds stay the scan axis.
     """
     axis_name, n_shards = _gossip_axis(mesh)
-    _check_cfg(plan.resolve_dpps(cfg.dpps), state.dpps.push.a.shape[0], n_shards)
+    _check_cfg(plan.resolve_dpps(cfg.dpps), state.dpps.push.a.shape[0],
+               n_shards, plan)
 
     inner = functools.partial(
         _rounds.run_partpsp, cfg=cfg, partition=partition, loss_fn=loss_fn,

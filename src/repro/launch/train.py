@@ -9,7 +9,12 @@ it); on a real fleet the same code paths run on the production mesh.
 
 Key flags mirror the paper's experimental grid: --algorithm
 {partpsp,sgp,sgpdp,pedfl}, --b (privacy budget), --gamma-n, --topology
-{dout,exp}, --degree, --sync-interval, --schedule {dense,circulant}.
+{dout,exp,ring,full,er,matching,torus,smallworld} (the repro.api.cli
+registry; random families take --graph-seed / --er-p / --matchings /
+--resample-period), --degree, --sync-interval, --schedule
+{dense,circulant}. Network fault injection (repro.net): --drop-rate /
+--straggler-rate attach a FaultModel — the engine masks the realized W
+inside the scan and the ledger records realized out-degrees.
 
 The driver is a thin shell over the session front door
 (:mod:`repro.api`): :func:`build_session` assembles the arch-specific
@@ -43,38 +48,44 @@ from repro.api import (
     MetricsHook,
     PrivacySpec,
     Session,
+    add_fault_arguments,
     add_protocol_arguments,
+    add_topology_arguments,
+    faults_from_args,
+    make_topology as _registry_topology,
+    topology_from_args,
     validate_protocol_args,
 )
 from repro.configs import ARCH_NAMES, get_config
-from repro.core.topology import DOutGraph, ExpGraph
 from repro.data import NodeShardedLoader, SyntheticLMStream
 from repro.models import Transformer
 
 
 def make_topology(kind: str, n_nodes: int, degree: int):
-    if kind == "exp":
-        return ExpGraph(n_nodes=n_nodes)
-    return DOutGraph(n_nodes=n_nodes, d=degree)
+    """Back-compat veneer over the shared registry (repro.api.cli)."""
+    return _registry_topology(kind, n_nodes, degree=degree)
 
 
 def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
                   algorithm: str, b: float, gamma_n: float, gamma_l: float,
-                  gamma_s: float, clip: float, topology: str, degree: int,
-                  sync_interval: int, schedule: str, use_kernels: bool = False,
-                  seed: int = 0, chunk: int = 50, packed: bool = True,
-                  wire_dtype: str = "f32"):
+                  gamma_s: float, clip: float, topology, degree: int = 2,
+                  sync_interval: int = 5, schedule: str = "dense",
+                  use_kernels: bool = False, seed: int = 0, chunk: int = 50,
+                  packed: bool = True, wire_dtype: str = "f32", faults=None):
     """Arch-specific assembly -> one protocol session (the front door).
 
     Owns only what is genuinely arch-shaped — model construction and the
     shared/local partition rules per algorithm (full sharing for
     SGP/SGPDP, split-point clamping for the 2-layer smoke stacks); every
-    protocol decision lives in ``Session.build``.
+    protocol decision lives in ``Session.build``. ``topology`` is a
+    registry name (repro.api.cli) or an already-built Topology;
+    ``faults`` attaches a repro.net FaultModel.
     """
     arch = get_config(arch_name)
     model_cfg = arch.smoke if reduced else arch.model
     model = Transformer(model_cfg)
-    topo = make_topology(topology, n_nodes, degree)
+    topo = (topology if not isinstance(topology, str)
+            else make_topology(topology, n_nodes, degree))
 
     rules = arch.shared_rules if algorithm != "sgpdp" else ((".*", "shared"),)
     if algorithm == "sgp":
@@ -90,7 +101,7 @@ def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
         partition=rules, algorithm=algorithm, gamma_l=gamma_l,
         gamma_s=gamma_s, clip=clip, schedule=schedule,
         sync_interval=sync_interval, use_kernels=use_kernels, chunk=chunk,
-        packed=packed, wire_dtype=wire_dtype, seed=seed)
+        packed=packed, wire_dtype=wire_dtype, faults=faults, seed=seed)
     return model, model_cfg, session
 
 
@@ -139,8 +150,8 @@ def main() -> None:
     ap.add_argument("--gamma-l", type=float, default=0.05)
     ap.add_argument("--gamma-s", type=float, default=0.05)
     ap.add_argument("--clip", type=float, default=100.0)
-    ap.add_argument("--topology", choices=("dout", "exp"), default="dout")
-    ap.add_argument("--degree", type=int, default=2)
+    add_topology_arguments(ap)
+    add_fault_arguments(ap)
     ap.add_argument("--sync-interval", type=int, default=5)
     ap.add_argument("--schedule", choices=("dense", "circulant"), default="dense")
     ap.add_argument("--use-kernels", action="store_true")
@@ -159,15 +170,25 @@ def main() -> None:
                     help="abort training once --privacy-budget is exceeded")
     args = ap.parse_args()
     validate_protocol_args(ap, args)
+    topo = topology_from_args(ap, args, args.nodes)
+    faults = faults_from_args(ap, args)
+    if args.schedule == "circulant" and topo.offsets(0) is None:
+        ap.error(f"--topology {args.topology} is not circulant "
+                 f"({type(topo).__name__} has no offset structure); use "
+                 "--schedule dense")
+    if faults is not None and args.schedule == "circulant":
+        ap.error("--drop-rate/--straggler-rate need --schedule dense: "
+                 "masked edges break circulant structure (the engine "
+                 "switches to the dynamic schedule internally)")
 
     model, model_cfg, session = build_session(
         args.arch, reduced=args.reduced, n_nodes=args.nodes,
         algorithm=args.algorithm, b=args.b, gamma_n=args.gamma_n,
         gamma_l=args.gamma_l, gamma_s=args.gamma_s, clip=args.clip,
-        topology=args.topology, degree=args.degree,
-        sync_interval=args.sync_interval, schedule=args.schedule,
-        use_kernels=args.use_kernels, seed=args.seed, chunk=args.chunk,
-        packed=args.packed, wire_dtype=args.wire_dtype)
+        topology=topo, sync_interval=args.sync_interval,
+        schedule=args.schedule, use_kernels=args.use_kernels,
+        seed=args.seed, chunk=args.chunk, packed=args.packed,
+        wire_dtype=args.wire_dtype, faults=faults)
     partition = session.partition
 
     mode = (f"packed/{args.wire_dtype}" if args.driver == "engine"

@@ -1,0 +1,51 @@
+"""repro.net — network realism lab: random graphs, faults, realized stats.
+
+The protocol stack (``repro.core`` -> ``repro.engine`` -> ``repro.api``)
+assumes *some* per-round doubly stochastic W^(t); this package supplies the
+realistic ones and breaks them the way production networks do:
+
+* graphs.py — seeded random / structured topology families (Erdős–Rényi,
+  random matchings, small-world, 2-D torus) plus
+  :class:`RandomSequenceTopology` for per-round resampling. Counter-based
+  draws: ``weight_matrix(t)`` is a pure function of (seed, t).
+* faults.py — :class:`FaultModel`: Bernoulli link drops, node churn,
+  stragglers, realized *inside* the engine's compiled scan with
+  column-stochastic renormalization so push-sum mass conservation (and the
+  DP accounting) survives.
+* stats.py  — :class:`NetworkStats` / :class:`NetworkStatsHook`: realized
+  edges, B-window connectivity of the realized graphs, effective wire
+  bytes — attached to ``RunReport.network``.
+
+Wire-up: ``Session.build(topology=..., faults=FaultModel(...))`` threads a
+fault model end to end (the plan switches to the ``dynamic`` schedule);
+``benchmarks/fig_resilience.py`` sweeps drop rates and tracks
+``BENCH_net.json``. This package never imports ``repro.api`` at module
+scope — the session front door imports nothing from here either, so the
+dependency edge stays one-way at runtime (duck-typed hooks/plans).
+"""
+from repro.net.faults import FAULT_SALT, FaultModel
+from repro.net.graphs import (
+    ErdosRenyiGraph,
+    RandomMatchingGraph,
+    RandomSequenceTopology,
+    SmallWorldGraph,
+    TorusGraph,
+    fold_seed,
+    metropolis_weights,
+)
+from repro.net.stats import NetworkStats, NetworkStatsHook, strongly_connected
+
+__all__ = [
+    "FAULT_SALT",
+    "FaultModel",
+    "ErdosRenyiGraph",
+    "RandomMatchingGraph",
+    "RandomSequenceTopology",
+    "SmallWorldGraph",
+    "TorusGraph",
+    "NetworkStats",
+    "NetworkStatsHook",
+    "fold_seed",
+    "metropolis_weights",
+    "strongly_connected",
+]

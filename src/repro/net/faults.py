@@ -1,0 +1,190 @@
+"""FaultModel — in-scan network fault injection for the protocol engine.
+
+Real deployments drop packets, lose nodes, and wait on stragglers; the
+protocol survives all three *because* it is push-sum: Eq. 9 only needs each
+round's realized weight matrix to be **column**-stochastic (every sender's
+outgoing mass sums to 1) — the ``a``-weights absorb the lost double
+stochasticity and the Eq. 10 correction ``y = s / a`` stays unbiased. This
+module models the faults and produces exactly that realized matrix:
+
+1. start from the round's *nominal* doubly stochastic W^(t);
+2. knock out edges — per-edge Bernoulli link drops (``drop_rate``), whole
+   nodes on a churn schedule (``churn``: the node neither sends nor
+   receives while down), per-sender straggler rounds (``straggler_rate``:
+   the node's messages miss the round everywhere);
+3. self loops are never dropped (a node always keeps its own value);
+4. renormalize each surviving column to sum exactly to 1 — mass
+   conservation, and with it the push-sum w-weight correction, holds at
+   any drop rate (pinned in tests/test_net.py).
+
+Randomness is drawn from a JAX key *inside* the compiled scan:
+``fault_key`` folds a fixed salt into the round key the engine already
+derives (``fold_in(base_key, t)``), so fault masks are (a) independent of
+the Eq.-8 noise stream that consumes the round key directly, (b) identical
+between the scan engine and the per-round loop driver, and (c)
+re-derivable by host-side audit tooling from the base key alone.
+
+DP accounting stays honest under faults because the masks are drawn
+independently of the data — the noised message a dropped edge *would* have
+carried is the same Lap(S/b)-protected value its surviving siblings carry
+— but the audit trail must record what actually crossed the wire:
+:meth:`realize` returns per-round diagnostics (realized out-degrees,
+dropped-edge count, realized adjacency) that the engine merges into the
+trajectory for the ledger (``repro.audit.ledger``) and
+:class:`repro.net.stats.NetworkStatsHook`.
+
+A ``FaultModel()`` with every knob at its default is *inactive*: the plan
+and engine emit no masking code at all, so a faults-disabled run is
+bit-identical to the fault-free engine (an acceptance pin, not an
+accident).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FaultModel", "FAULT_SALT"]
+
+# Folded into the round key to derive the fault stream. The round key
+# itself seeds the Eq.-8 noise draw, so the fault mask must come from a
+# distinct fold — never from the raw round key.
+FAULT_SALT = 0x4E455446  # "NETF"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Static description of the network's failure behaviour.
+
+    Fields:
+      drop_rate       per-(non-self)-edge Bernoulli drop probability per
+                      round — independent across edges and rounds.
+      churn           node downtime schedule: tuple of ``(node, t_down,
+                      t_up)`` half-open round intervals. A down node is
+                      isolated — it neither sends nor receives, keeps its
+                      own state, and rejoins at ``t_up``.
+      straggler_rate  per-node Bernoulli probability that a node's
+                      outgoing messages miss the round entirely (the
+                      receivers renormalize; the straggler still hears
+                      others).
+      seed            reserved fold for running several independent fault
+                      streams off one base key.
+
+    Frozen and hashable — it rides on :class:`repro.engine.ProtocolPlan`
+    as a trace-time constant.
+    """
+
+    drop_rate: float = 0.0
+    churn: tuple[tuple[int, int, int], ...] = ()
+    straggler_rate: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0.0 <= self.drop_rate < 1.0):
+            raise ValueError(f"drop_rate={self.drop_rate} must be in [0, 1)")
+        if not (0.0 <= self.straggler_rate < 1.0):
+            raise ValueError(
+                f"straggler_rate={self.straggler_rate} must be in [0, 1)")
+        for entry in self.churn:
+            if len(entry) != 3:
+                raise ValueError(
+                    f"churn entries are (node, t_down, t_up); got {entry!r}")
+            node, t_down, t_up = entry
+            if node < 0:
+                raise ValueError(f"churn node {node} must be >= 0")
+            if not t_down < t_up:
+                raise ValueError(
+                    f"churn interval [{t_down}, {t_up}) is empty for node "
+                    f"{node}")
+
+    @property
+    def active(self) -> bool:
+        """Whether any masking code needs to be emitted at all."""
+        return (self.drop_rate > 0.0 or bool(self.churn)
+                or self.straggler_rate > 0.0)
+
+    # -- key discipline ------------------------------------------------------
+
+    def fault_key(self, round_key: jax.Array) -> jax.Array:
+        """The fault stream's key for a round, derived from the engine's
+        per-round key (``fold_in(base_key, t)``) by folding the salt (and
+        the model's ``seed``) — independent of the noise draw that
+        consumes ``round_key`` directly."""
+        return jax.random.fold_in(
+            jax.random.fold_in(round_key, FAULT_SALT), self.seed)
+
+    # -- in-scan realization -------------------------------------------------
+
+    def up_mask(self, t, n_nodes: int) -> jnp.ndarray:
+        """(N,) bool: node currently up under the churn schedule (traced t)."""
+        up = jnp.ones((n_nodes,), dtype=bool)
+        if not self.churn:
+            return up
+        # n_nodes is only known here (the model is topology-agnostic until
+        # realized); an out-of-range id would otherwise be a silent no-op.
+        bad = sorted({c[0] for c in self.churn if c[0] >= n_nodes})
+        if bad:
+            raise ValueError(
+                f"churn nodes {bad} out of range for N={n_nodes} "
+                f"(valid ids 0..{n_nodes - 1})")
+        nodes = jnp.asarray([c[0] for c in self.churn], jnp.int32)
+        downs = jnp.asarray([c[1] for c in self.churn], jnp.int32)
+        ups = jnp.asarray([c[2] for c in self.churn], jnp.int32)
+        t = jnp.asarray(t, jnp.int32)
+        down_now = (t >= downs) & (t < ups)  # (K,)
+        hit = (jnp.arange(n_nodes, dtype=jnp.int32)[:, None]
+               == nodes[None, :]) & down_now[None, :]
+        return ~jnp.any(hit, axis=-1)
+
+    def realize(
+        self, w: jnp.ndarray, key: jax.Array, t, *,
+        with_adjacency: bool = False,
+    ) -> tuple[jnp.ndarray, dict[str, Any]]:
+        """Nominal W -> (realized column-stochastic W, round diagnostics).
+
+        Jit-safe with traced ``t`` / ``key`` / ``w``. The nominal W must
+        have a strictly positive diagonal (every family in
+        ``repro.core.topology`` / ``repro.net.graphs`` does, per
+        Assumption 1) — the kept self loop is what guarantees every
+        column's surviving mass is positive before renormalization.
+
+        Diagnostics (merged into the engine trajectory):
+          net_out_degree     (N,) int32 realized non-self out-edges/sender
+          net_dropped_edges  ()  int32 nominal-minus-realized edge count
+          net_adj            (N, N) bool realized adjacency (recv, send) —
+                             only with ``with_adjacency`` (the engine sets
+                             it when a hook declares ``needs_adjacency``,
+                             e.g. NetworkStatsHook's window-connectivity
+                             check; a (T, N, N) trajectory leaf is real
+                             memory at fleet scale, so nobody pays for it
+                             unread)
+        """
+        n = w.shape[0]
+        eye = jnp.eye(n, dtype=bool)
+        nominal = (w > 0.0) & ~eye
+        keep = jnp.ones((n, n), dtype=bool)
+        k_drop, k_strag = jax.random.split(key)
+        if self.drop_rate > 0.0:
+            keep &= jax.random.bernoulli(k_drop, 1.0 - self.drop_rate, (n, n))
+        if self.straggler_rate > 0.0:
+            sends = jax.random.bernoulli(k_strag, 1.0 - self.straggler_rate,
+                                         (n,))
+            keep &= sends[None, :]  # column j = sender j's outgoing edges
+        if self.churn:
+            up = self.up_mask(t, n)
+            keep &= up[None, :] & up[:, None]
+        realized = nominal & keep
+        mask = realized | eye  # self loops survive everything
+        w_masked = w * mask
+        col_mass = jnp.sum(w_masked, axis=0, keepdims=True)  # (1, N)
+        w_real = w_masked / col_mass
+        out_degree = jnp.sum(realized, axis=0).astype(jnp.int32)  # per sender
+        dropped = (jnp.sum(nominal.astype(jnp.int32))
+                   - jnp.sum(out_degree)).astype(jnp.int32)
+        diag = {"net_out_degree": out_degree,
+                "net_dropped_edges": dropped}
+        if with_adjacency:
+            diag["net_adj"] = mask
+        return w_real, diag

@@ -1,0 +1,314 @@
+"""Seeded random / structured topology families beyond the paper's circulants.
+
+The paper's protocol only needs each round's W^(t) to be doubly stochastic
+with self loops (Def. 1) and the union graph over a B-round window to be
+strongly connected (Assumption 1) — nothing restricts it to the two
+deterministic circulant families the experiments use. This module adds the
+graph families a production deployment actually sees:
+
+* :class:`ErdosRenyiGraph`     — symmetric Erdős–Rényi with Metropolis
+  weights (optionally unioned with a ring backbone so Assumption 1 holds at
+  any edge probability).
+* :class:`RandomMatchingGraph` — a union of ``k`` random directed
+  Hamiltonian cycles, ``W = (I + P_1 + … + P_k) / (k+1)``: a genuinely
+  *directed* regular gossip graph (sum of permutation matrices is doubly
+  stochastic by Birkhoff), strongly connected every single round because
+  each cycle alone visits every node.
+* :class:`SmallWorldGraph`     — Watts–Strogatz ring lattice with symmetric
+  rewiring of the long-range edges (the distance-1 ring is never rewired,
+  so connectivity survives any ``beta``), Metropolis weights.
+* :class:`TorusGraph`          — 2-D torus grid, degree 4, uniform
+  ``(I + A) / 5`` weights. Deterministic, non-circulant in the flat node
+  index (the column wrap breaks circulance), so it exercises the dense
+  schedule the way a real mesh fabric would.
+* :class:`RandomSequenceTopology` — wraps any seeded family and resamples
+  it every round with a declared ``period``, the i.i.d.-graph-sequence
+  regime of randomized gossip analyses.
+
+Determinism contract: every draw is *counter-based* — ``weight_matrix(t)``
+derives a fresh ``numpy`` generator from ``SeedSequence(seed, spawn_key)``
+purely from ``(seed, t)``; no Python RNG state is held between calls, so
+``ProtocolPlan`` can stack per-round matrices for the scan and the host-side
+audit trail can re-derive the exact same graphs (the same discipline the
+protocol's JAX key fold-in uses).
+
+All families return *row-convention* matrices (``W[i, j]`` = weight receiver
+``i`` applies to sender ``j``'s message — see ``repro.core.topology``) and
+keep every diagonal entry strictly positive, which is what the fault
+injector (``repro.net.faults``) relies on to renormalize masked columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+__all__ = [
+    "ErdosRenyiGraph",
+    "RandomMatchingGraph",
+    "SmallWorldGraph",
+    "TorusGraph",
+    "RandomSequenceTopology",
+    "fold_seed",
+    "metropolis_weights",
+]
+
+
+def _rng(seed: int, *counters: int) -> np.random.Generator:
+    """Counter-based generator: a pure function of (seed, counters)."""
+    return np.random.default_rng(
+        np.random.SeedSequence(entropy=int(seed), spawn_key=tuple(counters)))
+
+
+def fold_seed(seed: int, counter: int) -> int:
+    """Derive a child seed from (seed, counter) — pure, collision-resistant
+    (SeedSequence's hash), the host-side analogue of ``jax.random.fold_in``."""
+    return int(np.random.SeedSequence(
+        entropy=int(seed), spawn_key=(int(counter),)).generate_state(1)[0])
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Doubly stochastic W from a symmetric adjacency (no self loops in adj).
+
+    Metropolis–Hastings: ``W[i, j] = 1 / (1 + max(deg_i, deg_j))`` on edges,
+    diagonal takes the slack. Symmetric => doubly stochastic; the diagonal
+    is >= 1 / (1 + max_degree) > 0, so the self loop Assumption 1 needs (and
+    the fault renormalization relies on) is always present.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    if adj.shape != (n, n):
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if not (adj == adj.T).all():
+        raise ValueError("metropolis_weights needs a symmetric adjacency")
+    adj = adj & ~np.eye(n, dtype=bool)
+    deg = adj.sum(axis=1)
+    w = np.zeros((n, n), dtype=np.float64)
+    ii, jj = np.nonzero(adj)
+    w[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def _ring_adjacency(n: int) -> np.ndarray:
+    adj = np.zeros((n, n), dtype=bool)
+    idx = np.arange(n)
+    adj[idx, (idx + 1) % n] = True
+    adj[(idx + 1) % n, idx] = True
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+@dataclasses.dataclass(frozen=True)
+class ErdosRenyiGraph(Topology):
+    """Symmetric Erdős–Rényi G(N, p) with Metropolis weights.
+
+    Each undirected pair joins with probability ``p`` (drawn once from
+    ``seed``; wrap in :class:`RandomSequenceTopology` for a fresh graph per
+    round). ``backbone=True`` (default) unions a bidirectional ring so the
+    graph is connected — and Assumption 1 holds with B = 1 — at *any* p;
+    ``backbone=False`` is the textbook G(N, p), which may disconnect.
+    """
+
+    p: float = 0.3
+    seed: int = 0
+    backbone: bool = True
+
+    def __post_init__(self):
+        if self.n_nodes < 2:
+            raise ValueError("ErdosRenyiGraph needs N >= 2")
+        if not (0.0 <= self.p <= 1.0):
+            raise ValueError(f"edge probability p={self.p} must be in [0, 1]")
+
+    def offsets(self, t: int) -> Sequence[int] | None:
+        return None
+
+    def weight_matrix(self, t: int) -> np.ndarray:
+        n = self.n_nodes
+        rng = _rng(self.seed, 0)
+        upper = np.triu(rng.random((n, n)) < self.p, k=1)
+        adj = upper | upper.T
+        if self.backbone:
+            adj |= _ring_adjacency(n)
+        return metropolis_weights(adj)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomMatchingGraph(Topology):
+    """Union of ``k`` random directed Hamiltonian cycles (regular digraph).
+
+    ``W = (I + P_1 + … + P_k) / (k + 1)`` where each ``P_j`` is the
+    permutation matrix of a uniformly random n-cycle: every node sends
+    weight ``1/(k+1)`` along each cycle plus its self loop (up to ``k``
+    distinct out-neighbours — overlapping cycles stack their weight) —
+    the directed analogue of round-robin matchings. A sum of permutation
+    matrices is doubly stochastic by construction, and a single n-cycle is
+    already strongly connected, so Assumption 1 holds with B = 1 every
+    round regardless of the draw.
+    """
+
+    k: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_nodes < 2:
+            raise ValueError("RandomMatchingGraph needs N >= 2")
+        if not (1 <= self.k < self.n_nodes):
+            raise ValueError(
+                f"matching count k={self.k} must be in [1, N-1={self.n_nodes - 1}]")
+
+    def offsets(self, t: int) -> Sequence[int] | None:
+        return None
+
+    def weight_matrix(self, t: int) -> np.ndarray:
+        n = self.n_nodes
+        w = np.eye(n, dtype=np.float64)
+        for j in range(self.k):
+            order = _rng(self.seed, 1, j).permutation(n)
+            # order[i] sends to order[i + 1] — one directed n-cycle.
+            w[np.roll(order, -1), order] += 1.0
+        return w / (self.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallWorldGraph(Topology):
+    """Watts–Strogatz small world with connectivity-preserving rewiring.
+
+    Ring lattice (each node linked to its ``k`` nearest neighbours per
+    side) whose long-range edges (lattice offset >= 2) are each rewired —
+    symmetrically, to a uniform non-neighbour — with probability ``beta``.
+    The distance-1 ring is never rewired, so the graph stays connected for
+    every ``beta`` in [0, 1]; Metropolis weights keep W doubly stochastic
+    under the resulting irregular degrees.
+    """
+
+    k: int = 2
+    beta: float = 0.1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_nodes < 4:
+            raise ValueError("SmallWorldGraph needs N >= 4")
+        if not (1 <= self.k <= (self.n_nodes - 1) // 2):
+            raise ValueError(
+                f"lattice degree k={self.k} must be in [1, (N-1)//2="
+                f"{(self.n_nodes - 1) // 2}] for N={self.n_nodes}")
+        if not (0.0 <= self.beta <= 1.0):
+            raise ValueError(f"rewiring beta={self.beta} must be in [0, 1]")
+
+    def offsets(self, t: int) -> Sequence[int] | None:
+        return None
+
+    def weight_matrix(self, t: int) -> np.ndarray:
+        n = self.n_nodes
+        rng = _rng(self.seed, 2)
+        adj = _ring_adjacency(n)
+        for off in range(2, self.k + 1):
+            for i in range(n):
+                j = (i + off) % n
+                if rng.random() < self.beta:
+                    # Rewire (i, j) -> (i, m): keep it symmetric so the
+                    # Metropolis weights stay doubly stochastic.
+                    candidates = np.flatnonzero(~adj[i] & (np.arange(n) != i))
+                    if candidates.size:
+                        j = int(rng.choice(candidates))
+                adj[i, j] = adj[j, i] = True
+        return metropolis_weights(adj)
+
+
+@dataclasses.dataclass(frozen=True)
+class TorusGraph(Topology):
+    """2-D torus grid (rows x cols = N), 4-neighbour wraparound links.
+
+    ``rows=0`` derives the most-square factorization of N (and raises an
+    actionable error when N is prime — a 1-wide torus is just a ring; use
+    :class:`repro.core.topology.RingGraph` for that). Uniform degree 4
+    makes the Metropolis weights the flat ``(I + A) / 5``. Deterministic
+    and symmetric, but *not* circulant in the flattened node index (the
+    column wrap jumps rows), so it runs on the dense schedule.
+    """
+
+    rows: int = 0
+
+    def __post_init__(self):
+        rows = self.rows or self._derive_rows(self.n_nodes)
+        if rows < 2 or self.n_nodes % rows or self.n_nodes // rows < 2:
+            raise ValueError(
+                f"TorusGraph needs N = rows x cols with rows, cols >= 2; "
+                f"got N={self.n_nodes}, rows={self.rows or rows}"
+                + ("" if self.rows else
+                   f" (N={self.n_nodes} has no 2-D factorization — use "
+                   "RingGraph for a 1-D cycle)"))
+        object.__setattr__(self, "rows", rows)
+
+    @staticmethod
+    def _derive_rows(n: int) -> int:
+        for r in range(int(math.isqrt(n)), 1, -1):
+            if n % r == 0:
+                return r
+        return 1
+
+    @property
+    def cols(self) -> int:
+        return self.n_nodes // self.rows
+
+    def offsets(self, t: int) -> Sequence[int] | None:
+        return None
+
+    def weight_matrix(self, t: int) -> np.ndarray:
+        n, rows, cols = self.n_nodes, self.rows, self.cols
+        adj = np.zeros((n, n), dtype=bool)
+        for r in range(rows):
+            for c in range(cols):
+                i = r * cols + c
+                for rr, cc in (((r + 1) % rows, c), ((r - 1) % rows, c),
+                               (r, (c + 1) % cols), (r, (c - 1) % cols)):
+                    j = rr * cols + cc
+                    if j != i:
+                        adj[i, j] = adj[j, i] = True
+        return metropolis_weights(adj)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomSequenceTopology(Topology):
+    """Resample a seeded base family every round, cycling with ``period``.
+
+    ``W^(t)`` is the base family redrawn with the counter-derived seed
+    ``fold_seed(base.seed, t % period)`` — a fresh independent graph per
+    round, repeating after ``period`` rounds so :class:`ProtocolPlan` can
+    stack the finite sequence for the compiled scan. The base must carry a
+    ``seed`` field (the random families above do); the declared period is
+    also what the Assumption-1 window check and ``sync_interval='auto'``
+    key off.
+    """
+
+    base: Topology | None = None
+    period: int = 8
+
+    def __post_init__(self):
+        if self.base is None:
+            raise ValueError("RandomSequenceTopology needs a base= topology")
+        if not hasattr(self.base, "seed"):
+            raise ValueError(
+                f"base {type(self.base).__name__} has no seed field; only "
+                "seeded random families can be resampled per round")
+        if self.base.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"base n_nodes={self.base.n_nodes} != wrapper "
+                f"n_nodes={self.n_nodes}")
+        if self.period < 1:
+            raise ValueError(f"period={self.period} must be >= 1")
+
+    def _at(self, t: int) -> Topology:
+        seed = fold_seed(self.base.seed, t % self.period)
+        return dataclasses.replace(self.base, seed=seed)
+
+    def offsets(self, t: int) -> Sequence[int] | None:
+        return None
+
+    def weight_matrix(self, t: int) -> np.ndarray:
+        return self._at(t).weight_matrix(0)

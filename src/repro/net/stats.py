@@ -1,0 +1,202 @@
+"""NetworkStats — what the network actually did during a run.
+
+The protocol's cost and its privacy story both live on the *realized*
+communication graph: under fault injection (``repro.net.faults``) the
+nominal topology says little about what crossed the wire. This module
+turns the engine's per-round network diagnostics into a typed record:
+
+* :class:`NetworkStats` — per-round realized edge counts, dropped edges,
+  realized out-degree floor, Assumption-1 B-window connectivity over the
+  *realized* graphs, and effective wire bytes (realized edges x payload)
+  next to the nominal estimate.
+* :class:`NetworkStatsHook` — the session hook that collects them. It is
+  deliberately *not* a subclass of :class:`repro.api.hooks.RoundHook`
+  (``repro.net`` must stay importable without touching the ``repro.api``
+  package init); it implements the same duck-typed protocol — ``tap`` /
+  ``needs_s_half`` attributes plus ``prepare`` / ``capture`` / ``consume``
+  / ``finish`` — which is all the drivers read.
+
+Fault-free runs get stats too: when the trajectory carries no ``net_*``
+rows (no masking code was emitted), the hook reconstructs the nominal
+per-round adjacency from the plan (circulant offsets or stacked dense
+matrices) — the realized graph *is* the nominal graph then.
+
+``ProtocolSession`` attaches the finished stats to
+``RunReport.network`` for any hook exposing a ``network_stats()`` method.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+__all__ = ["NetworkStats", "NetworkStatsHook", "strongly_connected"]
+
+
+def strongly_connected(adj: np.ndarray) -> bool:
+    """Strong connectivity of a (recv, send) adjacency via boolean powers."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    reach = adj | np.eye(n, dtype=bool)
+    for _ in range(max(n.bit_length(), 1)):
+        nxt = reach | (reach @ reach)
+        if (nxt == reach).all():
+            break
+        reach = nxt
+    return bool(reach.all())
+
+
+@dataclasses.dataclass
+class NetworkStats:
+    """Realized-network record of one run (all per-round arrays length T)."""
+
+    rounds: int
+    n_nodes: int
+    b_window: int
+    realized_edges: np.ndarray       # (T,) non-self directed edges that fired
+    dropped_edges: np.ndarray        # (T,) nominal-minus-realized edge count
+    out_degree_min: np.ndarray       # (T,) smallest realized sender degree
+    connected_windows: int           # B-windows whose union graph is strong
+    windows: int                     # total B-windows checked
+    effective_bytes: int             # realized edges x per-message payload
+    nominal_bytes: int               # fault-free bytes on the SAME topology
+    #   support (realized + dropped edges) — not RunReport.wire_bytes's
+    #   all-to-all dense estimate, so effective/nominal isolates the
+    #   faults' effect rather than the graph's sparsity
+
+    @property
+    def all_windows_connected(self) -> bool:
+        return self.windows > 0 and self.connected_windows == self.windows
+
+    @property
+    def drop_fraction(self) -> float:
+        total = self.realized_edges.sum() + self.dropped_edges.sum()
+        return float(self.dropped_edges.sum() / total) if total else 0.0
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "rounds": self.rounds,
+            "n_nodes": self.n_nodes,
+            "b_window": self.b_window,
+            "realized_edges_mean": float(self.realized_edges.mean())
+            if self.rounds else 0.0,
+            "dropped_edges_total": int(self.dropped_edges.sum()),
+            "drop_fraction": round(self.drop_fraction, 4),
+            "out_degree_min": int(self.out_degree_min.min())
+            if self.rounds else 0,
+            "connected_windows": f"{self.connected_windows}/{self.windows}",
+            "all_windows_connected": self.all_windows_connected,
+            "effective_bytes": self.effective_bytes,
+            "nominal_bytes": self.nominal_bytes,
+        }
+
+
+class NetworkStatsHook:
+    """Collect :class:`NetworkStats` from a session run (duck-typed hook).
+
+    ``b_window`` is the Assumption-1 window length the connectivity check
+    slides over the realized graphs; ``None`` defaults to the plan's
+    period (the declared B of the nominal topology). The finished stats
+    are returned by :meth:`network_stats` and attached to
+    ``RunReport.network`` by the session driver.
+
+    ``needs_adjacency`` asks the dynamic engine to emit the per-round
+    realized (N, N) adjacency into the trajectory — only runs carrying
+    this hook pay for that leaf; fault runs without it record just the
+    (N,) out-degrees and the dropped-edge scalar.
+    """
+
+    tap: Any = None
+    needs_s_half: bool = False
+    needs_adjacency: bool = True
+
+    def __init__(self, b_window: int | None = None):
+        self.b_window = b_window
+        self._adj: list[np.ndarray] = []
+        self._out_deg: list[np.ndarray] = []
+        self._dropped: list[np.ndarray] = []
+        self._ctx = None
+
+    # -- hook protocol -------------------------------------------------------
+
+    def prepare(self, ctx) -> None:
+        self._ctx = ctx
+
+    def capture(self, diag: dict[str, Any]) -> dict[str, Any] | None:
+        return None  # the engine already emits net_* rows when faults are on
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        if "net_adj" in rows:
+            adj = np.asarray(rows["net_adj"], dtype=bool)
+            out_deg = np.asarray(rows["net_out_degree"])
+            dropped = np.asarray(rows["net_dropped_edges"])
+        elif "net_out_degree" in rows:
+            raise ValueError(
+                "faulted trajectory carries no net_adj rows — this hook's "
+                "needs_adjacency was overridden to False; the realized "
+                "window-connectivity check needs the per-round adjacency")
+        else:
+            n_rounds = int(np.asarray(
+                next(iter(rows.values()))).shape[0]) if rows else 0
+            adj, out_deg, dropped = self._nominal_rows(t0, n_rounds)
+        self._adj.append(adj)
+        self._out_deg.append(out_deg)
+        self._dropped.append(dropped)
+
+    def finish(self) -> None:  # stats are pulled, not pushed
+        pass
+
+    # -- assembly ------------------------------------------------------------
+
+    def _nominal_rows(self, t0: int, n_rounds: int):
+        """Fault-free rounds: realized == nominal, rebuilt from the plan."""
+        plan, n = self._ctx.plan, self._ctx.n_nodes
+        adj = np.zeros((n_rounds, n, n), dtype=bool)
+        idx = np.arange(n)
+        for i in range(n_rounds):
+            r = (t0 + i) % max(int(plan.period), 1)
+            if plan.schedule == "circulant":
+                wts = np.asarray(plan.mix_weights)[r]
+                for off, wt in zip(plan.offsets, wts):
+                    if wt > 0:
+                        adj[i, (idx + off) % n, idx] = True
+            else:
+                adj[i] = np.asarray(plan.ws)[r] > 0.0
+        eye = np.eye(n, dtype=bool)
+        nonself = adj & ~eye
+        out_deg = nonself.sum(axis=1)  # (T, N) per sender column
+        adj |= eye
+        return adj, out_deg, np.zeros((n_rounds,), dtype=np.int64)
+
+    def network_stats(self) -> NetworkStats | None:
+        if self._ctx is None or not self._adj:
+            return None
+        adj = np.concatenate(self._adj, axis=0)
+        out_deg = np.concatenate(self._out_deg, axis=0)
+        dropped = np.concatenate(self._dropped, axis=0)
+        rounds, n = adj.shape[0], adj.shape[1]
+        eye = np.eye(n, dtype=bool)
+        realized = (adj & ~eye).sum(axis=(1, 2))
+
+        b = int(self.b_window or max(int(self._ctx.plan.period), 1))
+        windows = connected = 0
+        for w0 in range(0, rounds - b + 1, b):
+            union = adj[w0:w0 + b].any(axis=0)
+            windows += 1
+            connected += int(strongly_connected(union))
+
+        per_elem = 2 if self._ctx.cfg.wire_dtype == "bf16" else 4
+        payload = self._ctx.d_s * per_elem + 8  # message + a_i + S_i scalars
+        # Nominal = what the fault-free topology would have sent: per round,
+        # realized + dropped is exactly the nominal non-self support
+        # (FaultModel.realize defines dropped as nominal minus realized).
+        nominal_edges = int(realized.sum() + dropped.sum())
+
+        return NetworkStats(
+            rounds=rounds, n_nodes=n, b_window=b,
+            realized_edges=realized, dropped_edges=dropped,
+            out_degree_min=out_deg.min(axis=1) if rounds else out_deg,
+            connected_windows=connected, windows=windows,
+            effective_bytes=int(realized.sum()) * payload,
+            nominal_bytes=nominal_edges * payload)

@@ -1,0 +1,417 @@
+"""Network realism lab (repro.net): topology family invariants, in-scan
+fault injection, and the acceptance pins of the dynamic schedule —
+
+* drop_rate=0 / inactive FaultModel => the dynamic plan compiles and runs
+  bit-identically to the static dense engine (packed AND pytree);
+* under faults the realized W stays column-stochastic (push-sum mass
+  conserved: mean(a) == 1) and a noiseless run still reaches consensus;
+* loop driver == scan engine under the same fault stream;
+* the ledger and NetworkStatsHook see the *realized* out-degrees.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PrivacySpec, Session, make_topology
+from repro.core.dpps import DPPSConfig, dpps_init
+from repro.core.topology import (
+    DOutGraph,
+    ExpGraph,
+    RingGraph,
+    TimeVaryingTopology,
+    is_doubly_stochastic,
+    is_strongly_connected_over_window,
+    spectral_gap,
+)
+from repro.engine import ProtocolPlan, run_dpps
+from repro.net import (
+    ErdosRenyiGraph,
+    FaultModel,
+    NetworkStatsHook,
+    RandomMatchingGraph,
+    RandomSequenceTopology,
+    SmallWorldGraph,
+    TorusGraph,
+)
+
+N, T = 8, 12
+
+FAMILIES = [
+    ErdosRenyiGraph(n_nodes=12, p=0.25, seed=3),
+    RandomMatchingGraph(n_nodes=12, k=2, seed=1),
+    SmallWorldGraph(n_nodes=12, k=2, beta=0.4, seed=5),
+    TorusGraph(n_nodes=12),
+    RandomSequenceTopology(
+        n_nodes=12, base=RandomMatchingGraph(n_nodes=12, k=1, seed=0),
+        period=4),
+]
+
+
+def _s0(n=N, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(key, (n, 11)),
+            jax.random.normal(jax.random.fold_in(key, 1), (n, 2, 3))]
+
+
+def _eps_seq(s0, rounds=T, seed=10, scale=0.1):
+    key = jax.random.PRNGKey(seed)
+    return [scale * jax.random.normal(jax.random.fold_in(key, i),
+                                      (rounds,) + x.shape)
+            for i, x in enumerate(s0)]
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Topology families: Def. 1 + Assumption 1 invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", FAMILIES, ids=lambda t: type(t).__name__)
+def test_family_doubly_stochastic_with_self_loops(topo):
+    period = int(getattr(topo, "period", 1))
+    for t in range(period):
+        w = topo.weight_matrix(t)
+        assert is_doubly_stochastic(w, atol=1e-9)
+        assert (np.diag(w) > 0).all()  # self loops always present
+
+
+@pytest.mark.parametrize("topo", FAMILIES, ids=lambda t: type(t).__name__)
+def test_family_strongly_connected_over_period(topo):
+    period = int(getattr(topo, "period", 1))
+    assert is_strongly_connected_over_window(topo, 0, period)
+    assert 0.0 <= spectral_gap(topo) <= 1.0
+
+
+def test_counter_based_determinism():
+    """weight_matrix(t) is a pure function of (seed, t) — no RNG state."""
+    topo = RandomSequenceTopology(
+        n_nodes=10, base=ErdosRenyiGraph(n_nodes=10, p=0.3, seed=7), period=3)
+    w1 = [topo.weight_matrix(t) for t in range(6)]
+    w2 = [topo.weight_matrix(t) for t in reversed(range(6))][::-1]
+    for a, b in zip(w1, w2):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(w1[0], w1[3])  # period 3 repeats
+    assert not np.array_equal(w1[0], w1[1])      # rounds differ
+
+
+def test_random_sequence_requires_seeded_base():
+    with pytest.raises(ValueError, match="seed"):
+        RandomSequenceTopology(n_nodes=12, base=TorusGraph(n_nodes=12),
+                               period=4)
+
+
+def test_torus_prime_n_actionable():
+    with pytest.raises(ValueError, match="factorization"):
+        TorusGraph(n_nodes=13)
+
+
+def test_non_circulant_errors_name_subclass():
+    topo = ErdosRenyiGraph(n_nodes=8, p=0.3, seed=0)
+    assert topo.offsets(0) is None
+    with pytest.raises(NotImplementedError, match="ErdosRenyiGraph"):
+        topo.mixing_weights(0)
+    with pytest.raises(NotImplementedError, match="ErdosRenyiGraph"):
+        topo.out_degree(0)  # irregular degrees -> actionable message
+    assert TorusGraph(n_nodes=12).out_degree(0) == 5  # regular: computed
+
+
+def test_time_varying_composes_random_periods():
+    """Satellite: TimeVaryingTopology's period is the lcm of its cycle
+    length and its members' own periods."""
+    rseq = RandomSequenceTopology(
+        n_nodes=8, base=RandomMatchingGraph(n_nodes=8, k=1, seed=0), period=3)
+    tv = TimeVaryingTopology(n_nodes=8,
+                             schedule=(DOutGraph(n_nodes=8, d=2), rseq))
+    assert tv.period == 6  # lcm(2 slots, member period 3)
+    for t in range(tv.period):
+        assert is_doubly_stochastic(tv.weight_matrix(t))
+    np.testing.assert_array_equal(tv.weight_matrix(1), tv.weight_matrix(7))
+    exp = TimeVaryingTopology(
+        n_nodes=9, schedule=(ExpGraph(n_nodes=9), RingGraph(n_nodes=9)))
+    assert exp.period == np.lcm(2, ExpGraph(n_nodes=9).period)  # = 4
+
+
+# ---------------------------------------------------------------------------
+# FaultModel: realized W properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate", [0.1, 0.3, 0.7])
+def test_masked_w_column_stochastic(rate):
+    fm = FaultModel(drop_rate=rate, straggler_rate=0.1)
+    for topo in FAMILIES[:3]:
+        w = jnp.asarray(topo.weight_matrix(0), jnp.float32)
+        for r in range(4):
+            key = fm.fault_key(jax.random.fold_in(jax.random.PRNGKey(0), r))
+            w_real, diag = fm.realize(w, key, r)
+            cols = np.asarray(w_real).sum(axis=0)
+            np.testing.assert_allclose(cols, 1.0, atol=1e-6)
+            assert (np.diag(np.asarray(w_real)) > 0).all()
+
+
+def test_churn_isolates_node_for_interval():
+    fm = FaultModel(churn=((2, 3, 6),))
+    w = jnp.asarray(DOutGraph(n_nodes=6, d=3).weight_matrix(0), jnp.float32)
+    for t, down in [(2, False), (3, True), (5, True), (6, False)]:
+        key = fm.fault_key(jax.random.fold_in(jax.random.PRNGKey(1), t))
+        w_real, diag = fm.realize(w, key, t)
+        w_real = np.asarray(w_real)
+        if down:
+            assert int(diag["net_out_degree"][2]) == 0
+            assert w_real[2, 2] == 1.0 and w_real[:, 2].sum() == 1.0
+            assert (w_real[2, [j for j in range(6) if j != 2]] == 0).all()
+        else:
+            assert int(diag["net_out_degree"][2]) > 0
+
+
+def test_fault_validation_actionable():
+    with pytest.raises(ValueError, match="drop_rate"):
+        FaultModel(drop_rate=1.5)
+    with pytest.raises(ValueError, match="churn interval"):
+        FaultModel(churn=((0, 5, 5),))
+    assert not FaultModel().active
+    assert FaultModel(drop_rate=0.1).active
+
+
+def test_churn_node_out_of_range_raises():
+    """An off-by-one churn id must fail loudly, not silently no-op."""
+    fm = FaultModel(churn=((6, 0, 10),))
+    w = jnp.asarray(DOutGraph(n_nodes=6, d=2).weight_matrix(0), jnp.float32)
+    with pytest.raises(ValueError, match=r"churn nodes \[6\].*N=6"):
+        fm.realize(w, fm.fault_key(jax.random.PRNGKey(0)), 0)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic schedule: drop_rate=0 bit-identity + fault-run soundness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("packed", [True, False], ids=["packed", "pytree"])
+def test_dynamic_null_faults_bit_identical_to_dense(packed):
+    """Acceptance pin: an inactive FaultModel emits the exact dense
+    program — state and every trajectory leaf bit-equal."""
+    topo = DOutGraph(n_nodes=N, d=2)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.02, c_prime=0.8, lam=0.6,
+                     sync_interval=3)
+    s0, eps_seq = _s0(), _eps_seq(_s0())
+    out = {}
+    for fm in (None, FaultModel(drop_rate=0.0)):
+        plan = ProtocolPlan.from_topology(
+            topo, schedule="dense", use_kernels=False, sync_interval=3,
+            packed=packed, faults=fm)
+        assert plan.schedule == "dense"  # inactive model dropped
+        out[fm is None] = jax.jit(
+            functools.partial(run_dpps, cfg=cfg, plan=plan))(
+            dpps_init(s0, plan.resolve_dpps(cfg)), eps_seq,
+            jax.random.PRNGKey(42))
+    (st_a, tr_a), (st_b, tr_b) = out[True], out[False]
+    _assert_trees_equal(st_a, st_b)
+    assert set(tr_a) == set(tr_b)
+    for k in tr_a:
+        np.testing.assert_array_equal(np.asarray(tr_a[k]),
+                                      np.asarray(tr_b[k]))
+
+
+def test_dynamic_requires_dense_and_active_model():
+    topo = DOutGraph(n_nodes=N, d=2)
+    with pytest.raises(ValueError, match="circulant"):
+        ProtocolPlan.from_topology(topo, schedule="circulant",
+                                   faults=FaultModel(drop_rate=0.1))
+    with pytest.raises(ValueError, match="dynamic"):
+        ProtocolPlan.from_topology(topo, schedule="dynamic")
+
+
+@pytest.mark.parametrize("packed", [True, False], ids=["packed", "pytree"])
+def test_faulty_consensus_conserves_mass_and_converges(packed):
+    """Acceptance pin: noiseless push-sum under 30% drops still reaches
+    consensus; realized column-stochasticity keeps mean(a) == 1."""
+    topo = ErdosRenyiGraph(n_nodes=16, p=0.35, seed=2024)
+    cfg = DPPSConfig(noise=False, gamma_n=0.0, c_prime=0.8, lam=0.6)
+    plan = ProtocolPlan.from_topology(topo, use_kernels=False, packed=packed,
+                                      faults=FaultModel(drop_rate=0.3))
+    assert plan.dynamic
+    values = [jax.random.normal(jax.random.PRNGKey(0), (16, 64))]
+    state0 = dpps_init(values, plan.resolve_dpps(cfg))
+    err0 = _consensus_err(values)
+    st, traj = jax.jit(functools.partial(
+        run_dpps, cfg=cfg, plan=plan, rounds=60))(
+        state0, None, jax.random.PRNGKey(5))
+    a = np.asarray(st.push.a)
+    assert abs(a.mean() - 1.0) < 1e-5          # mass conserved exactly
+    assert (a > 0).all()
+    assert _consensus_err(st.push.y) < err0 * 1e-2
+    # realized degrees were recorded and some edges actually dropped
+    assert traj["net_out_degree"].shape == (60, 16)
+    assert int(np.asarray(traj["net_dropped_edges"]).sum()) > 0
+    # the (T, N, N) adjacency leaf only exists when a hook asks for it
+    # (NetworkStatsHook.needs_adjacency) — hookless runs don't pay for it
+    assert "net_adj" not in traj
+
+
+def _consensus_err(tree):
+    from repro.core.pushsum import consensus_error
+
+    return float(consensus_error(tree))
+
+
+def test_fault_stream_independent_of_noise_stream():
+    """Same round key, different fold: masks never reuse the noise key."""
+    fm = FaultModel(drop_rate=0.5)
+    rk = jax.random.fold_in(jax.random.PRNGKey(3), 7)
+    assert not np.array_equal(np.asarray(fm.fault_key(rk)), np.asarray(rk))
+
+
+# ---------------------------------------------------------------------------
+# Session integration: loop == engine under faults, hooks, ledger
+# ---------------------------------------------------------------------------
+
+def _mlp_session(faults, **kw):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = {"l1": jax.random.normal(k1, (12, 8)) / 3.0,
+              "l2": jax.random.normal(k2, (8, 4)) / 3.0}
+
+    def loss_fn(p, batch, k):
+        x, y = batch
+        logits = jnp.tanh(x @ p["l1"]) @ p["l2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    bk = jax.random.PRNGKey(5)
+    batches = (jax.random.normal(bk, (T, N, 6, 12)),
+               jax.random.randint(jax.random.fold_in(bk, 1), (T, N, 6), 0, 4))
+    batch_at = lambda t: jax.tree_util.tree_map(lambda x: x[t], batches)
+    session = Session.build(
+        DOutGraph(n_nodes=N, d=2), model=loss_fn,
+        privacy=PrivacySpec(b=5.0, gamma_n=1e-4, c_prime=0.8, lam=0.6),
+        partition=(("l1", "shared"),), params=params, schedule="dense",
+        sync_interval=3, faults=faults, **kw)
+    return session, batch_at
+
+
+def test_train_loop_matches_engine_under_faults():
+    """The loop driver folds the identical fault keys, so both drivers
+    realize the same masked W stream (pytree path: packed=False)."""
+    faults = FaultModel(drop_rate=0.25)
+    session, batch_at = _mlp_session(faults, packed=False)
+    rep_e = session.train(T, batch_at, driver="engine")
+    rep_l = session.train(T, batch_at, driver="loop")
+    _assert_trees_equal(rep_e.state.dpps.push.s, rep_l.state.dpps.push.s)
+    for k in ("net_out_degree", "net_dropped_edges", "loss_mean"):
+        np.testing.assert_array_equal(np.asarray(rep_e.trajectory[k]),
+                                      np.asarray(rep_l.trajectory[k]))
+
+
+def test_ledger_records_realized_out_degree():
+    from repro.api import LedgerHook
+
+    faults = FaultModel(drop_rate=0.3)
+    session, batch_at = _mlp_session(faults)
+    led = LedgerHook()
+    session.train(T, batch_at, hooks=[led])
+    entries = led.ledger.entries
+    assert len(entries) == T
+    assert all("out_degree_min" in e and "dropped_edges" in e
+               for e in entries)
+    assert any(e["dropped_edges"] > 0 for e in entries)
+    assert all(e["out_degree_mean"] <= 1.0 + 1e-9 for e in entries)
+    # d-Out(d=2) nominal: 1 non-self out-edge per node
+
+    # fault-free entries carry no realized-degree fields (unchanged schema)
+    session2, batch_at2 = _mlp_session(None)
+    led2 = LedgerHook()
+    session2.train(4, batch_at2, hooks=[led2])
+    assert all("out_degree_min" not in e for e in led2.ledger.entries)
+
+
+def test_network_stats_hook_on_report():
+    faults = FaultModel(drop_rate=0.2, straggler_rate=0.05)
+    session, batch_at = _mlp_session(faults)
+    hook = NetworkStatsHook()
+    report = session.train(T, batch_at, hooks=[hook])
+    net = report.network
+    assert net is not None and net.rounds == T
+    assert net.dropped_edges.sum() > 0
+    assert net.effective_bytes < net.nominal_bytes
+    # nominal is the same-topology fault-free support, so the byte ratio
+    # equals the realized drop fraction — not the dense all-to-all estimate
+    assert (net.effective_bytes / net.nominal_bytes
+            == pytest.approx(1.0 - net.drop_fraction))
+    assert report.summary()["network"]["drop_fraction"] > 0.0
+
+
+def test_sharded_engine_rejects_faults():
+    from repro.engine import shard_run_dpps
+    from jax.sharding import Mesh
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 forced host devices")
+    mesh = Mesh(np.asarray(jax.devices()[:4]).reshape(4, 1),
+                ("data", "model"))
+    topo = DOutGraph(n_nodes=N, d=2)
+    plan = ProtocolPlan.from_topology(topo, use_kernels=False,
+                                      faults=FaultModel(drop_rate=0.1))
+    cfg = DPPSConfig(noise=False, gamma_n=0.0)
+    s0 = _s0()
+    with pytest.raises(NotImplementedError, match="sharded"):
+        shard_run_dpps(mesh, dpps_init(s0, plan.resolve_dpps(cfg)),
+                       _eps_seq(s0), jax.random.PRNGKey(0), cfg=cfg,
+                       plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# CLI registry (satellite): one name -> Topology mapping, validated early
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_choices():
+    from repro.api import TOPOLOGY_CHOICES
+
+    for name in TOPOLOGY_CHOICES:
+        topo = make_topology(name, 12, rows=3)
+        assert topo.n_nodes == 12
+        assert is_doubly_stochastic(topo.weight_matrix(0))
+
+
+def test_registry_legacy_spelling_and_period():
+    assert make_topology("4-out", 10).d == 4  # benchmarks' "K-out" names
+    topo = make_topology("matching", 10, period=5, seed=2)
+    assert isinstance(topo, RandomSequenceTopology) and topo.period == 5
+
+
+def test_registry_validation_actionable():
+    with pytest.raises(ValueError, match=r"p=1.7"):
+        make_topology("er", 10, p=1.7)
+    with pytest.raises(ValueError, match="factorization"):
+        make_topology("torus", 7)
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("moebius", 10)
+
+
+def test_cli_topology_args_roundtrip():
+    import argparse
+
+    from repro.api import (add_fault_arguments, add_topology_arguments,
+                           faults_from_args, topology_from_args)
+
+    ap = argparse.ArgumentParser()
+    add_topology_arguments(ap)
+    add_fault_arguments(ap)
+    args = ap.parse_args(["--topology", "er", "--er-p", "0.4",
+                          "--resample-period", "3", "--graph-seed", "9",
+                          "--drop-rate", "0.1"])
+    topo = topology_from_args(ap, args, 10)
+    assert isinstance(topo, RandomSequenceTopology)
+    assert isinstance(topo.base, ErdosRenyiGraph) and topo.base.p == 0.4
+    fm = faults_from_args(ap, args)
+    assert fm is not None and fm.drop_rate == 0.1
+    args0 = ap.parse_args([])
+    assert faults_from_args(ap, args0) is None
+
+    with pytest.raises(SystemExit):  # parser error, not a traceback
+        topology_from_args(ap, ap.parse_args(["--topology", "er",
+                                              "--er-p", "2.0"]), 10)

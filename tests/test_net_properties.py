@@ -1,0 +1,96 @@
+"""Hypothesis property tests for the repro.net graph families and faults.
+
+Invariants across ALL families, any seed: Def. 1 (doubly stochastic W with
+self loops), spectral gap in [0, 1], Assumption 1 over the declared period
+— plus the fault-model property that the realized masked W stays
+column-stochastic at any drop rate. Module-skipped when hypothesis is
+absent (the repo's [test] extra installs it; tier-1 containers may not)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    is_doubly_stochastic,
+    is_strongly_connected_over_window,
+    spectral_gap,
+)
+from repro.net import (
+    ErdosRenyiGraph,
+    FaultModel,
+    RandomMatchingGraph,
+    RandomSequenceTopology,
+    SmallWorldGraph,
+    TorusGraph,
+)
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _build(family: str, n: int, seed: int, param: float):
+    if family == "er":
+        return ErdosRenyiGraph(n_nodes=n, p=param, seed=seed)
+    if family == "matching":
+        return RandomMatchingGraph(n_nodes=n, k=1 + int(param * 2), seed=seed)
+    if family == "smallworld":
+        return SmallWorldGraph(n_nodes=max(n, 5), k=2, beta=param, seed=seed)
+    if family == "torus":
+        return TorusGraph(n_nodes=12 if n % 2 else n + (n % 4))
+    if family == "sequence":
+        return RandomSequenceTopology(
+            n_nodes=n, base=RandomMatchingGraph(n_nodes=n, k=1, seed=seed),
+            period=3)
+    raise AssertionError(family)
+
+
+@given(family=st.sampled_from(["er", "matching", "smallworld", "sequence"]),
+       n=st.sampled_from([6, 9, 12, 16]), seed=SEEDS,
+       param=st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=40, deadline=None)
+def test_family_invariants(family, n, seed, param):
+    topo = _build(family, n, seed, param)
+    period = int(getattr(topo, "period", 1))
+    for t in range(period):
+        w = topo.weight_matrix(t)
+        assert is_doubly_stochastic(w, atol=1e-9)
+        assert (np.diag(w) > 0).all()  # self loops always present
+    assert 0.0 <= spectral_gap(topo) <= 1.0 + 1e-12
+    assert is_strongly_connected_over_window(topo, 0, period)
+
+
+@given(n=st.sampled_from([8, 12, 16, 20]))
+@settings(max_examples=10, deadline=None)
+def test_torus_invariants(n):
+    topo = TorusGraph(n_nodes=n)
+    w = topo.weight_matrix(0)
+    assert is_doubly_stochastic(w, atol=1e-9)
+    assert (np.diag(w) > 0).all()
+    assert is_strongly_connected_over_window(topo, 0, 1)
+    assert 0.0 <= spectral_gap(topo) <= 1.0 + 1e-12
+
+
+@given(family=st.sampled_from(["er", "matching", "smallworld", "torus"]),
+       seed=SEEDS,
+       drop=st.floats(min_value=0.0, max_value=0.95),
+       straggle=st.floats(min_value=0.0, max_value=0.5),
+       fseed=SEEDS, t=st.integers(min_value=0, max_value=100))
+@settings(max_examples=40, deadline=None)
+def test_realized_w_column_stochastic_any_drop_rate(family, seed, drop,
+                                                    straggle, fseed, t):
+    """The fault property: masked + renormalized W has unit column sums
+    (push-sum mass conservation) at ANY drop rate, for every family."""
+    topo = _build(family, 12, seed, 0.4)
+    fm = FaultModel(drop_rate=drop, straggler_rate=straggle)
+    w = jnp.asarray(topo.weight_matrix(0), jnp.float32)
+    key = fm.fault_key(jax.random.fold_in(jax.random.PRNGKey(fseed), t))
+    w_real, diag = (fm.realize(w, key, t) if fm.active
+                    else (w, None))
+    cols = np.asarray(w_real).sum(axis=0)
+    np.testing.assert_allclose(cols, 1.0, atol=1e-6)
+    assert (np.asarray(w_real) >= 0).all()
+    if diag is not None:
+        deg = np.asarray(diag["net_out_degree"])
+        assert (deg >= 0).all() and int(diag["net_dropped_edges"]) >= 0

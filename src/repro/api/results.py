@@ -30,13 +30,24 @@ def estimate_wire_bytes(plan, n_nodes: int, d_s: int, rounds: int) -> int:
     diagonal) never cross the wire and are excluded."""
     per_elem = 2 if plan is not None and plan.wire_dtype == "bf16" else 4
     if plan is not None and plan.schedule == "circulant" and plan.offsets:
-        out_degree = sum(1 for o in plan.offsets if o % n_nodes != 0)
+        edges_per_round = n_nodes * sum(
+            1 for o in plan.offsets if o % n_nodes != 0)
+    elif plan is not None and getattr(plan, "sparse_idx", None) is not None:
+        # Edge-list plans pay only for the nominal non-self edges (mean
+        # over the period) — the whole point of the sparse schedule.
+        import numpy as np
+
+        idx = np.asarray(plan.sparse_idx)            # (P, N, K)
+        vals = np.asarray(plan.sparse_vals)
+        recv = np.arange(idx.shape[1])[None, :, None]
+        nonself = (vals > 0.0) & (idx != recv)
+        edges_per_round = float(nonself.sum()) / idx.shape[0]
     else:
-        out_degree = n_nodes - 1
+        edges_per_round = n_nodes * (n_nodes - 1)
     # message payload + push-sum weight a_i (f32) + sensitivity scalar S_i
     # (f32, broadcast for the Alg. 1 line-4 max)
-    per_round = n_nodes * out_degree * (d_s * per_elem + 4 + 4)
-    return int(rounds) * per_round
+    per_round = edges_per_round * (d_s * per_elem + 4 + 4)
+    return int(int(rounds) * per_round)
 
 
 @dataclasses.dataclass

@@ -247,8 +247,9 @@ class ProtocolSession:
                     "explicit plan=, which already fixed the schedule")
             cfg_sync = sync_interval if isinstance(sync_interval, int) else 0
 
-            # The protocol config only knows dense/circulant; "dynamic" is
-            # the engine-level fault-masking schedule (dense at step level).
+            # The protocol config knows dense/circulant/sparse; "dynamic"
+            # is the engine-level fault-masking schedule (dense at step
+            # level; a fault-masked sparse plan stays "sparse" throughout).
             cfg_schedule = ("dense" if plan.schedule == "dynamic"
                             else plan.schedule)
             if loss_fn is not None:
@@ -561,6 +562,30 @@ class ProtocolSession:
                 mechanism=self.mechanism, offsets=plan.offsets))
             mix_for = lambda t: ({"mix_weights":
                                   plan.mix_weights[t % plan.period]}, None)
+        elif plan.schedule == "sparse":
+            step = jax.jit(functools.partial(
+                partpsp_step, cfg=self.train_cfg, partition=self.partition,
+                loss_fn=self.loss_fn, return_s_half=need_s_half, tap=tap,
+                mechanism=self.mechanism))
+            if getattr(plan, "dynamic", False):
+                # Same fault-key fold as the engine's scan body, on the
+                # edge list instead of the dense W (see the dense dynamic
+                # branch below).
+                want_adj = any(getattr(h, "needs_adjacency", False)
+                               for h in hooks)
+
+                def mix_for(t):
+                    r = t % plan.period
+                    vals, net = plan.faults.realize_sparse(
+                        plan.sparse_idx[r], plan.sparse_vals[r],
+                        plan.faults.fault_key(jax.random.fold_in(key, t)), t,
+                        with_adjacency=want_adj)
+                    return {"sparse_idx": plan.sparse_idx[r],
+                            "sparse_vals": vals}, net
+            else:
+                mix_for = lambda t: (
+                    {"sparse_idx": plan.sparse_idx[t % plan.period],
+                     "sparse_vals": plan.sparse_vals[t % plan.period]}, None)
         else:
             step = jax.jit(functools.partial(
                 partpsp_step, cfg=self.train_cfg, partition=self.partition,

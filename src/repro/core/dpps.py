@@ -73,6 +73,7 @@ from repro.core.pushsum import (
     gossip_circulant,
     gossip_dense,
     gossip_packed,
+    gossip_sparse,
     init_push_sum,
 )
 from repro.core.sensitivity import SensitivityState, init_sensitivity
@@ -134,7 +135,7 @@ class DPPSConfig:
     lam: float = 0.55         # lambda in Eq. (11)
     noise: bool = True        # False => plain Perturbed Push-Sum (SGP)
     sync_interval: int = 0    # full sync every k rounds; 0 = never
-    schedule: str = "dense"   # "dense" (paper-faithful) | "circulant" (optimized)
+    schedule: str = "dense"   # "dense" (paper-faithful) | "circulant" | "sparse"
     use_kernels: bool = False # route noise generation through Pallas kernels
     wire_dtype: str = "f32"   # gossip wire format; "bf16" needs the packed path
     # Which sensitivity calibrates the noise:
@@ -146,7 +147,7 @@ class DPPSConfig:
     fixed_sensitivity: float = 0.0
 
     def __post_init__(self):
-        if self.schedule not in ("dense", "circulant"):
+        if self.schedule not in ("dense", "circulant", "sparse"):
             raise ValueError(f"unknown schedule {self.schedule!r}")
         if self.wire_dtype not in ("f32", "bf16"):
             raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}")
@@ -199,6 +200,8 @@ def dpps_step(
     w: jnp.ndarray | None = None,
     offsets: Sequence[int] | None = None,
     mix_weights: jnp.ndarray | None = None,
+    sparse_idx: jnp.ndarray | None = None,
+    sparse_vals: jnp.ndarray | None = None,
     return_s_half: bool = False,
     gossip_fn: Callable[[PushSumState], PushSumState] | None = None,
     node_ops: NodeOps = LOCAL_NODE_OPS,
@@ -208,7 +211,8 @@ def dpps_step(
 ) -> tuple[DPPSState, dict[str, Any]]:
     """One DPPS round. Returns (new state, diagnostics).
 
-    Exactly one of ``w`` (dense) / ``offsets`` (circulant) must match
+    Exactly one of ``w`` (dense) / ``offsets`` (circulant) /
+    ``sparse_idx`` + ``sparse_vals`` (padded-CSR edge list) must match
     ``cfg.schedule`` — unless ``gossip_fn`` is given, in which case it
     replaces the built-in mixing entirely (``repro.engine.shard`` uses this
     to run Eq. 9 as mesh collectives). ``node_ops`` swaps the node-axis
@@ -371,6 +375,14 @@ def dpps_step(
             push_new = gossip_packed(push_half, offsets=offsets,
                                      weights=mix_weights,
                                      wire_dtype=cfg.wire_dtype)
+        elif cfg.schedule == "sparse":
+            if sparse_idx is None:
+                raise ValueError(
+                    "sparse schedule requires sparse_idx=/sparse_vals=")
+            push_new = gossip_packed(push_half, sparse_idx=sparse_idx,
+                                     sparse_vals=sparse_vals,
+                                     wire_dtype=cfg.wire_dtype,
+                                     use_kernels=cfg.use_kernels)
         else:
             if w is None:
                 raise ValueError("dense schedule requires w=")
@@ -383,6 +395,11 @@ def dpps_step(
         if mix_weights is None:
             mix_weights = jnp.full((len(offsets),), 1.0 / len(offsets), jnp.float32)
         push_new = gossip_circulant(push_half, offsets, mix_weights)
+    elif cfg.schedule == "sparse":
+        if sparse_idx is None:
+            raise ValueError("sparse schedule requires sparse_idx=/sparse_vals=")
+        push_new = gossip_sparse(push_half, sparse_idx, sparse_vals,
+                                 use_kernels=cfg.use_kernels)
     else:
         if w is None:
             raise ValueError("dense schedule requires w=")

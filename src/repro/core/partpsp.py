@@ -148,6 +148,8 @@ def partpsp_step(
     w: jnp.ndarray | None = None,
     offsets: Sequence[int] | None = None,
     mix_weights: jnp.ndarray | None = None,
+    sparse_idx: jnp.ndarray | None = None,
+    sparse_vals: jnp.ndarray | None = None,
     return_s_half: bool = False,
     gossip_fn: Any = None,
     node_ops: NodeOps = LOCAL_NODE_OPS,
@@ -219,6 +221,7 @@ def partpsp_step(
     dpps_new, diag = dpps_step(
         state.dpps, eps, key_noise, cfg.dpps,
         w=w, offsets=offsets, mix_weights=mix_weights,
+        sparse_idx=sparse_idx, sparse_vals=sparse_vals,
         return_s_half=return_s_half,
         gossip_fn=gossip_fn, node_ops=node_ops,
         mechanism=mechanism, tap=tap, layout=layout,

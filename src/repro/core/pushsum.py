@@ -16,6 +16,11 @@ Two gossip schedules:
   so mixing is a weighted sum of ``d`` rolls along the node axis, which XLA
   lowers to ``d-1`` collective-permutes: O(d * d_s) wire bytes. This is the
   beyond-paper optimized schedule (EXPERIMENTS.md SPerf #1).
+* ``gossip_sparse`` — arbitrary sparse graphs (the net-lab families) as a
+  padded-CSR edge list: gather the K in-neighbours per receiver and
+  contract the slots, O(edges * d_s) per round instead of O(N^2 * d_s),
+  bit-identical (f32) to ``gossip_dense`` on the same support
+  (tests/test_sparse.py pins state and trajectory).
 
 Within-host kernel routing: with ``use_kernels=True`` the dense schedule's
 ``W @ s`` runs through the MXU-shaped ``repro.kernels.pushsum_mix`` Pallas
@@ -46,8 +51,10 @@ __all__ = [
     "init_push_sum",
     "gossip_dense",
     "gossip_circulant",
+    "gossip_sparse",
     "gossip_packed",
     "gossip",
+    "sparse_mix",
     "correct",
     "consensus_error",
 ]
@@ -69,8 +76,56 @@ def init_push_sum(s: PyTree) -> PushSumState:
 
 
 def _mix_dense(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
-    # out[i] = sum_j w[i, j] x[j]
+    # out[i] = sum_j w[i, j] x[j]. Leaves with fewer than 3 trailing
+    # columns — the (N,) push-sum weights especially — are zero-padded to
+    # 3 columns and take the same gemm as everything else: XLA lowers
+    # narrower contractions (gemv, d<3) to a lane-vectorized reduction
+    # whose ordering depends on the contraction width, which the sparse
+    # runtime cannot reproduce; at >= 3 output columns both paths share
+    # the one sequential per-element reduction, keeping sparse == dense
+    # bit-exact in f32 (tests/test_sparse.py pins it).
+    d = 1
+    for dim in x.shape[1:]:
+        d *= dim
+    if d < 3:
+        n = x.shape[0]
+        flat = x.reshape(n, d)
+        padded = jnp.concatenate([flat, jnp.zeros((n, 3 - d), flat.dtype)],
+                                 axis=1)
+        out = jnp.einsum("ij,jd->id", w.astype(x.dtype), padded)
+        return out[:, :d].reshape(x.shape)
     return jnp.einsum("ij,j...->i...", w.astype(x.dtype), x)
+
+
+def sparse_mix(idx: jnp.ndarray, vals: jnp.ndarray,
+               x: jnp.ndarray) -> jnp.ndarray:
+    """Padded-CSR mix: ``out[i] = sum_k vals[i, k] * x[idx[i, k]]``.
+
+    ``idx`` (B, K) int32 names the senders each receiver gathers, ascending
+    per row with self-index zero-weight pads (``repro.core.topology
+    .padded_csr``); ``vals`` (B, K) carries the weights. ``x`` may have
+    more rows than ``idx`` (the sharded engine mixes a local row block
+    against the all-gathered tree), so the output takes its leading dim
+    from ``idx``.
+
+    The contraction is one batched dot over the K slots, padded to >= 3
+    trailing columns exactly like :func:`_mix_dense` — together with the
+    ascending sender order this reproduces the dense gemm's reduction
+    bit-for-bit in f32 (zero-weight pads are fma no-ops).
+    """
+    b, k = idx.shape
+    g = x[idx]  # (B, K, ...)
+    flat = g.reshape(b, k, -1)
+    d = flat.shape[2]
+    if d < 3:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((b, k, 3 - d), flat.dtype)], axis=2)
+    out = jax.lax.dot_general(
+        vals.astype(flat.dtype)[:, None, :], flat,
+        (((2,), (1,)), ((0,), (0,))))[:, 0]
+    if d < 3:
+        out = out[:, :d]
+    return out.reshape((b,) + x.shape[1:])
 
 
 def gossip_dense(state: PushSumState, w: jnp.ndarray, *,
@@ -121,12 +176,39 @@ def gossip_circulant(
     return PushSumState(s=s_new, a=a_new)
 
 
+def gossip_sparse(
+    state: PushSumState, idx: jnp.ndarray, vals: jnp.ndarray, *,
+    use_kernels: bool = False,
+) -> PushSumState:
+    """One mixing round over a padded-CSR edge list (idx, vals).
+
+    The sparse twin of :func:`gossip_dense`: per-round cost is O(edges *
+    d_s) instead of O(N^2 * d_s), and on the topology's own CSR export the
+    result is bit-identical (f32) to the dense mix (tests/test_sparse.py).
+    ``use_kernels=True`` routes each leaf through the Pallas SpMM block
+    ``repro.kernels.ops.pushsum_mix_sparse``; the (N,) push-sum weights
+    stay on the jnp path — too small to tile.
+    """
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        s_new = jax.tree_util.tree_map(
+            lambda x: kops.pushsum_mix_sparse(idx, vals, x), state.s)
+    else:
+        s_new = jax.tree_util.tree_map(
+            lambda x: sparse_mix(idx, vals, x), state.s)
+    a_new = sparse_mix(idx, vals, state.a)
+    return PushSumState(s=s_new, a=a_new)
+
+
 def gossip_packed(
     state: PushSumState,
     *,
     w: jnp.ndarray | None = None,
     offsets: Sequence[int] | None = None,
     weights: jnp.ndarray | None = None,
+    sparse_idx: jnp.ndarray | None = None,
+    sparse_vals: jnp.ndarray | None = None,
     wire_dtype: str = "f32",
     use_kernels: bool = False,
 ) -> PushSumState:
@@ -163,8 +245,25 @@ def gossip_packed(
             s_new = _mix_circulant(offsets, weights, wire)
         a_new = _mix_circulant(offsets, weights, state.a)
         return PushSumState(s=s_new, a=a_new)
+    if sparse_idx is not None:
+        if bf16:
+            # Mirror the dense bf16 contract: bf16 messages, fp32
+            # accumulation, fp32 result (no kernel for the same reason as
+            # the dense branch below).
+            g = wire[sparse_idx]  # (N, K, d_pad) bf16
+            s_new = jnp.einsum("nk,nkd->nd", sparse_vals, g,
+                               preferred_element_type=jnp.float32)
+        elif use_kernels:
+            from repro.kernels import ops as kops
+
+            s_new = kops.pushsum_mix_sparse(sparse_idx, sparse_vals, wire)
+        else:
+            s_new = sparse_mix(sparse_idx, sparse_vals, wire)
+        a_new = sparse_mix(sparse_idx, sparse_vals, state.a)
+        return PushSumState(s=s_new, a=a_new)
     if w is None:
-        raise ValueError("gossip_packed() needs either w= or offsets=")
+        raise ValueError(
+            "gossip_packed() needs w=, offsets=, or sparse_idx=/sparse_vals=")
     if bf16:
         # Always the einsum here, even under use_kernels: the pushsum_mix
         # kernel writes its accumulator back in the wire dtype, which

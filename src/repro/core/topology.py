@@ -27,10 +27,50 @@ __all__ = [
     "RingGraph",
     "FullyConnectedGraph",
     "TimeVaryingTopology",
+    "padded_csr",
     "is_doubly_stochastic",
     "is_strongly_connected_over_window",
     "spectral_gap",
 ]
+
+
+def padded_csr(w: np.ndarray, k: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Dense W -> padded receiver-major CSR ``(idx, vals)``.
+
+    ``idx`` is (N, K) int32: the senders each receiver mixes, ascending per
+    row; ``vals`` is (N, K) float64 with the matching weights. Rows with
+    fewer than K in-edges are padded with the receiver's own index and
+    weight 0 — a padded slot is a no-op in the mix (weight 0) and never a
+    realized edge in the fault model (``vals > 0`` is the support test).
+
+    The ascending sender order is load-bearing: the sparse mix contracts
+    the K slots in storage order, and only an ascending order (with
+    zero-weight pads as reduction no-ops) reproduces the dense gemm's
+    reduction bit-for-bit (see ``repro.core.pushsum.sparse_mix``).
+
+    ``k`` forces the slot count (must be >= the max in-degree) so per-round
+    CSRs of a time-varying topology stack into one (P, N, K) array.
+    """
+    w = np.asarray(w)
+    n = w.shape[0]
+    support = [np.nonzero(w[i] > 0.0)[0] for i in range(n)]  # ascending
+    need = max((len(s) for s in support), default=0)
+    if k is None:
+        k = need
+    elif k < need:
+        raise ValueError(f"k={k} slots cannot hold the max in-degree {need}")
+    idx = np.tile(np.arange(n, dtype=np.int64)[:, None], (1, k))
+    vals = np.zeros((n, k), dtype=np.float64)
+    for i, senders in enumerate(support):
+        idx[i, : len(senders)] = senders
+        vals[i, : len(senders)] = w[i, senders]
+    # Keep each row monotone in the sender index with the self-index pads
+    # interleaved at their sorted position (stable: real entries keep their
+    # relative ascending order; zero-weight pads are no-ops anywhere).
+    order = np.argsort(idx, axis=1, kind="stable")
+    idx = np.take_along_axis(idx, order, axis=1)
+    vals = np.take_along_axis(vals, order, axis=1)
+    return idx.astype(np.int32), vals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +156,20 @@ class Topology:
             recv, send = np.nonzero(self.weight_matrix(t) > 0.0)
             return {(int(j), int(i)) for i, j in zip(recv, send)}
         return {(i, (i + k) % n) for i in range(n) for k in offs}
+
+    def max_in_degree(self, t: int) -> int:
+        """Largest per-receiver in-edge count at round t (incl. self loop)."""
+        return int((self.weight_matrix(t) > 0.0).sum(axis=1).max())
+
+    def sparse_weights(
+        self, t: int, k: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Round t's weights as padded receiver-major CSR (see padded_csr).
+
+        ``k`` fixes the slot count so per-round CSRs of a time-varying
+        topology stack — pass ``max(max_in_degree(t) for t in period)``.
+        """
+        return padded_csr(self.weight_matrix(t), k)
 
 
 @dataclasses.dataclass(frozen=True)

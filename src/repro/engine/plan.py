@@ -17,6 +17,15 @@ Schedule selection (:meth:`from_topology`):
   SPerf #1).
 * ``dense`` (the paper-faithful ``W @ s`` baseline, all-gather on a mesh)
   for non-circulant topologies or when forced with ``schedule="dense"``.
+* ``sparse`` (opt-in via ``schedule="sparse"``) — the topology's per-round
+  weights as a padded-CSR edge list (``(P, N, K)`` sender indices +
+  weights, K = max in-degree over the period) mixed by
+  ``repro.core.pushsum.gossip_sparse``: O(edges * d_s) per round instead
+  of O(N^2 * d_s), bit-identical (f32) to dense on the same support
+  (tests/test_sparse.py). With ``faults=`` the schedule *stays* sparse:
+  the scan body masks and renormalizes the edge list in place
+  (``FaultModel.realize_sparse``) — no dense ``(T, N, N)`` stack is ever
+  materialized, which is the whole point at large N.
 * ``dynamic`` — dense with in-scan fault injection: selected automatically
   when an *active* :class:`repro.net.faults.FaultModel` is attached
   (``faults=``). The nominal per-round W is stacked exactly like dense;
@@ -59,13 +68,16 @@ class ProtocolPlan:
     """Static protocol-execution choices plus their per-round array payloads.
 
     Fields:
-      schedule       "dense" | "circulant" | "dynamic" — which gossip
-                     lowering to emit ("dynamic" = dense + in-scan fault
-                     masking; see module docstring).
+      schedule       "dense" | "circulant" | "sparse" | "dynamic" — which
+                     gossip lowering to emit ("dynamic" = dense + in-scan
+                     fault masking; "sparse" + faults masks the edge list
+                     in-scan instead; see module docstring).
       period         topology period P (1 for static graphs).
       offsets        static superset offsets (circulant only).
       mix_weights    (P, K) per-round weights over ``offsets`` (circulant).
       ws             (P, N, N) per-round weight matrices (dense/dynamic).
+      sparse_idx     (P, N, K) int32 padded-CSR sender indices (sparse).
+      sparse_vals    (P, N, K) f32 matching weights (sparse).
       faults         the active repro.net.faults.FaultModel realized inside
                      the scan (dynamic only; None otherwise).
       use_kernels    route noise/clip through the Pallas kernels.
@@ -90,6 +102,8 @@ class ProtocolPlan:
     offsets: tuple[int, ...] | None = None
     mix_weights: Any = None
     ws: Any = None
+    sparse_idx: Any = None
+    sparse_vals: Any = None
     use_kernels: bool = False
     sync_interval: int | None = None
     chunk: int = 50
@@ -107,11 +121,17 @@ class ProtocolPlan:
         if self.schedule == "dynamic" and self.faults is None:
             raise ValueError("schedule='dynamic' is selected by attaching "
                              "an active FaultModel (faults=), not by hand")
+        if self.schedule == "sparse" and self.sparse_idx is None:
+            raise ValueError("schedule='sparse' needs the padded-CSR "
+                             "payloads (sparse_idx=/sparse_vals=); build "
+                             "the plan with ProtocolPlan.from_topology")
 
     @property
     def dynamic(self) -> bool:
-        """Whether the scan body masks W with the fault model each round."""
-        return self.schedule == "dynamic"
+        """Whether the scan body masks the weights with the fault model
+        each round (dense W for "dynamic", the edge list for "sparse")."""
+        return (self.schedule == "dynamic"
+                or (self.schedule == "sparse" and self.faults is not None))
 
     @classmethod
     def from_topology(
@@ -141,16 +161,17 @@ class ProtocolPlan:
         dense W inside the scan; an inactive model is dropped so the
         compiled program stays identical to the fault-free plan.
         """
-        if schedule not in (None, "dense", "circulant"):
+        if schedule not in (None, "dense", "circulant", "sparse"):
             raise ValueError(f"unknown schedule {schedule!r} (dynamic is "
                              "selected by passing faults=, not schedule=)")
         if faults is not None and not getattr(faults, "active", False):
             faults = None  # inactive model: emit the fault-free program
         if faults is not None and schedule == "circulant":
             raise ValueError(
-                "fault injection needs the dense weight form (masked edges "
-                "break circulant structure); drop schedule='circulant' — "
-                "the plan stacks the topology's per-round W instead")
+                "fault injection needs the dense or sparse weight form "
+                "(masked edges break circulant structure); drop "
+                "schedule='circulant' — the plan stacks the topology's "
+                "per-round W (or its edge list under schedule='sparse')")
         period = int(getattr(topo, "period", 1))
         per_round: list[tuple[tuple[int, ...], np.ndarray]] | None = []
         for t in range(period):
@@ -161,8 +182,11 @@ class ProtocolPlan:
             per_round.append(topo.mixing_weights(t))
 
         if faults is not None:
-            schedule = "dynamic"
-            per_round = None  # always stack the dense per-round matrices
+            # Sparse plans mask their edge list in-scan and stay "sparse";
+            # everything else falls onto the dense "dynamic" schedule.
+            if schedule != "sparse":
+                schedule = "dynamic"
+                per_round = None  # always stack the dense per-round matrices
         elif schedule is None:
             schedule = "circulant" if per_round is not None else "dense"
         if schedule == "circulant" and per_round is None:
@@ -181,7 +205,19 @@ class ProtocolPlan:
         offsets = None
         mix_weights = None
         ws = None
-        if schedule == "circulant":
+        sparse_idx = None
+        sparse_vals = None
+        if schedule == "sparse":
+            # One K for the whole period so per-round CSRs stack into a
+            # scan-indexable (P, N, K) constant; the dense W is built
+            # per-round on the host and never stacked.
+            k = max(topo.max_in_degree(t) for t in range(period))
+            pairs = [topo.sparse_weights(t, k) for t in range(period)]
+            sparse_idx = jnp.stack(
+                [jnp.asarray(i, jnp.int32) for i, _ in pairs], axis=0)
+            sparse_vals = jnp.stack(
+                [jnp.asarray(v, jnp.float32) for _, v in pairs], axis=0)
+        elif schedule == "circulant":
             superset = tuple(sorted({o for offs, _ in per_round for o in offs}))
             rows = np.zeros((period, len(superset)), np.float32)
             col = {o: i for i, o in enumerate(superset)}
@@ -200,7 +236,8 @@ class ProtocolPlan:
             sync_interval = max(2, 2 * period)
 
         return cls(schedule=schedule, period=period, offsets=offsets,
-                   mix_weights=mix_weights, ws=ws, use_kernels=use_kernels,
+                   mix_weights=mix_weights, ws=ws, sparse_idx=sparse_idx,
+                   sparse_vals=sparse_vals, use_kernels=use_kernels,
                    sync_interval=sync_interval, chunk=chunk, packed=packed,
                    wire_dtype=wire_dtype, faults=faults)
 
@@ -209,9 +246,10 @@ class ProtocolPlan:
     def mix_at(self, t) -> dict[str, Any]:
         """dpps_step mixing kwargs for (possibly traced) round index ``t``.
 
-        Dynamic plans return the *nominal* W — the engine's scan body (and
-        the session's loop driver) apply ``faults.realize`` to it with the
-        round's fault key before handing it to the step.
+        Dynamic plans return the *nominal* weights — the engine's scan body
+        (and the session's loop driver) apply ``faults.realize`` (dense) or
+        ``faults.realize_sparse`` (sparse) to them with the round's fault
+        key before handing them to the step.
         """
         if self.schedule == "circulant":
             if self.period == 1:
@@ -220,6 +258,16 @@ class ProtocolPlan:
                 wts = jax.lax.dynamic_index_in_dim(
                     self.mix_weights, jnp.mod(t, self.period), 0, keepdims=False)
             return dict(offsets=self.offsets, mix_weights=wts)
+        if self.schedule == "sparse":
+            if self.period == 1:
+                return dict(sparse_idx=self.sparse_idx[0],
+                            sparse_vals=self.sparse_vals[0])
+            r = jnp.mod(t, self.period)
+            return dict(
+                sparse_idx=jax.lax.dynamic_index_in_dim(
+                    self.sparse_idx, r, 0, keepdims=False),
+                sparse_vals=jax.lax.dynamic_index_in_dim(
+                    self.sparse_vals, r, 0, keepdims=False))
         if self.period == 1:
             return dict(w=self.ws[0])
         return dict(w=jax.lax.dynamic_index_in_dim(

@@ -150,8 +150,11 @@ def _check_dynamic(plan: ProtocolPlan, gossip_builder) -> bool:
     if gossip_builder is not None:
         raise NotImplementedError(
             "fault injection (ProtocolPlan.dynamic) is not implemented for "
-            "the sharded engine's collective gossip; run the fault study on "
-            "the single-device engine, or detach the FaultModel on the mesh")
+            "the sharded engine's collective gossip — static plans shard "
+            "(including schedule='sparse'), fault-masked ones do not; run "
+            "the fault study on the single-device engine (schedule='sparse' "
+            "masks the edge list without stacking dense (T, N, N) weights), "
+            "or detach the FaultModel on the mesh")
     return True
 
 
@@ -166,8 +169,17 @@ def _realize_faults(plan: ProtocolPlan, kwargs: dict[str, Any],
     scan engine and the loop driver, and host-re-derivable from the base
     key. Returns the round's network diagnostics (realized out-degrees,
     dropped edges; the (N, N) realized adjacency only when a hook declared
-    ``needs_adjacency``) for the trajectory/ledger.
+    ``needs_adjacency``) for the trajectory/ledger. Sparse plans mask and
+    renormalize the round's edge-list weights in place
+    (``FaultModel.realize_sparse``) — the dense W never exists.
     """
+    if "sparse_idx" in kwargs:
+        vals_real, net = plan.faults.realize_sparse(
+            kwargs["sparse_idx"], kwargs["sparse_vals"],
+            plan.faults.fault_key(round_key), t,
+            with_adjacency=with_adjacency)
+        kwargs["sparse_vals"] = vals_real
+        return net
     w_real, net = plan.faults.realize(
         kwargs["w"], plan.faults.fault_key(round_key), t,
         with_adjacency=with_adjacency)

@@ -12,6 +12,12 @@ collective:
 * dense     — the paper-faithful baseline: ``lax.all_gather`` of the full
   shared tree followed by the local rows of the W contraction
   (O(N * d_s) wire bytes per round).
+* sparse    — all-gather the shared tree exactly like dense, then mix only
+  the local receivers' padded-CSR rows (``repro.core.pushsum.sparse_mix``
+  against the gathered tree): same wire bytes as dense but O(edges/shards
+  * d_s) local flops. Static sparse plans only — fault-masked plans
+  (``ProtocolPlan.dynamic``) stay on the single-device engine (see
+  :func:`_check_cfg`).
 
 Node-axis reductions (the sensitivity max of Alg. 1 line 4, sync averaging,
 metric aggregation) become ``lax.pmax`` / ``lax.pmean`` over the gossip axis
@@ -51,7 +57,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.dpps import DPPSConfig, DPPSState, NodeOps
 from repro.core.partpsp import PartPSPConfig, PartPSPState
-from repro.core.pushsum import PushSumState
+from repro.core.pushsum import PushSumState, sparse_mix
 from repro.core.sensitivity import SensitivityState
 from repro.engine import rounds as _rounds
 from repro.engine.plan import ProtocolPlan
@@ -149,6 +155,28 @@ def sharded_gossip_builder(plan: ProtocolPlan, axis_name: str, n_shards: int):
 
         return builder
 
+    if plan.schedule == "sparse":
+
+        def builder(mix):
+            idx = mix["sparse_idx"]    # (N, K), replicated
+            vals = mix["sparse_vals"]  # (N, K), replicated
+
+            def mix_leaf(x):
+                full = lax.all_gather(x, axis_name, axis=0, tiled=True)
+                block = x.shape[0]
+                row0 = lax.axis_index(axis_name) * block
+                idx_rows = lax.dynamic_slice_in_dim(idx, row0, block, axis=0)
+                vals_rows = lax.dynamic_slice_in_dim(vals, row0, block, axis=0)
+                return sparse_mix(idx_rows, vals_rows, full)
+
+            def gossip_fn(push: PushSumState) -> PushSumState:
+                s_new = jax.tree_util.tree_map(mix_leaf, push.s)
+                return PushSumState(s=s_new, a=mix_leaf(push.a))
+
+            return gossip_fn
+
+        return builder
+
     def builder(mix):
         w = mix["w"]  # (N, N), replicated
 
@@ -209,10 +237,13 @@ def _check_cfg(cfg: DPPSConfig, n_nodes: int, n_shards: int,
     if plan is not None and getattr(plan, "dynamic", False):
         raise NotImplementedError(
             "fault injection (ProtocolPlan.dynamic / faults=) is not "
-            "implemented for the sharded engine: the realized W masking "
-            "needs the full (N, N) matrix per round, which the collective "
-            "gossip path never materializes. Run fault studies on the "
-            "single-device engine.")
+            "implemented for the sharded engine: per-round masking and "
+            "column renormalization need a global view of each sender's "
+            "surviving mass, which the collective gossip path never "
+            "materializes. Run fault studies on the single-device engine — "
+            "schedule='sparse' masks the edge list there without ever "
+            "stacking dense (T, N, N) weights; *static* sparse plans (no "
+            "faults) shard fine.")
 
 
 def shard_run_dpps(

@@ -20,6 +20,7 @@ from repro.kernels.laplace_noise import LANE, TILE_ROWS
 from repro.kernels.laplace_noise import laplace_from_bits as _laplace_kernel
 from repro.kernels.pushsum_mix import TILE_D
 from repro.kernels.pushsum_mix import pushsum_mix as _pushsum_mix_kernel
+from repro.kernels.spmm import spmm as _spmm_kernel
 
 __all__ = [
     "default_interpret",
@@ -29,6 +30,7 @@ __all__ = [
     "l1_clip_tree",
     "l1_norm_packed",
     "pushsum_mix",
+    "pushsum_mix_sparse",
 ]
 
 _TILE = TILE_ROWS * LANE  # elements per tile
@@ -246,4 +248,18 @@ def pushsum_mix(w: jnp.ndarray, x: jnp.ndarray, interpret: bool | None = None):
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
     out = _pushsum_mix_kernel(w, flat, interpret=interpret)
+    return out[:, :d].reshape(x.shape)
+
+
+def pushsum_mix_sparse(idx: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray,
+                       interpret: bool | None = None):
+    """Padded-CSR mixing for a (N, ...) node-stacked array (SpMM block)."""
+    interpret = default_interpret() if interpret is None else interpret
+    n = x.shape[0]
+    flat = x.reshape(n, -1)
+    d = flat.shape[1]
+    pad = -(-d // TILE_D) * TILE_D - d
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = _spmm_kernel(idx, vals, flat, interpret=interpret)
     return out[:, :d].reshape(x.shape)

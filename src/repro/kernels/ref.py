@@ -8,7 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["laplace_from_bits", "dpps_perturb", "l1_norm", "clip_scale", "pushsum_mix"]
+__all__ = ["laplace_from_bits", "dpps_perturb", "l1_norm", "clip_scale",
+           "pushsum_mix", "spmm"]
 
 
 def laplace_from_bits(bits: jnp.ndarray, scale) -> jnp.ndarray:
@@ -36,6 +37,13 @@ def clip_scale(x, denom) -> jnp.ndarray:
 
 def pushsum_mix(w, x) -> jnp.ndarray:
     return jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32)).astype(x.dtype)
+
+
+def spmm(idx, vals, x) -> jnp.ndarray:
+    """Padded-CSR mix: out[i] = sum_k vals[i, k] * x[idx[i, k]]."""
+    gathered = x[idx].astype(jnp.float32)  # (N, K, D)
+    return jnp.einsum("nk,nkd->nd", vals.astype(jnp.float32),
+                      gathered).astype(x.dtype)
 
 
 def flash_attention(q, k, v, *, group: int = 1, window: int | None = None):

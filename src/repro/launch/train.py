@@ -153,7 +153,8 @@ def main() -> None:
     add_topology_arguments(ap)
     add_fault_arguments(ap)
     ap.add_argument("--sync-interval", type=int, default=5)
-    ap.add_argument("--schedule", choices=("dense", "circulant"), default="dense")
+    ap.add_argument("--schedule", choices=("dense", "circulant", "sparse"),
+                    default="dense")
     ap.add_argument("--use-kernels", action="store_true")
     ap.add_argument("--driver", choices=("engine", "loop"), default="engine",
                     help="scan-compiled engine segments vs per-round loop")
@@ -177,9 +178,10 @@ def main() -> None:
                  f"({type(topo).__name__} has no offset structure); use "
                  "--schedule dense")
     if faults is not None and args.schedule == "circulant":
-        ap.error("--drop-rate/--straggler-rate need --schedule dense: "
-                 "masked edges break circulant structure (the engine "
-                 "switches to the dynamic schedule internally)")
+        ap.error("--drop-rate/--straggler-rate need --schedule dense or "
+                 "sparse: masked edges break circulant structure (dense "
+                 "switches to the dynamic schedule internally; sparse "
+                 "masks its edge list in place)")
 
     model, model_cfg, session = build_session(
         args.arch, reduced=args.reduced, n_nodes=args.nodes,

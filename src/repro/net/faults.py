@@ -188,3 +188,63 @@ class FaultModel:
         if with_adjacency:
             diag["net_adj"] = mask
         return w_real, diag
+
+    def realize_sparse(
+        self, idx: jnp.ndarray, vals: jnp.ndarray, key: jax.Array, t, *,
+        with_adjacency: bool = False,
+    ) -> tuple[jnp.ndarray, dict[str, Any]]:
+        """Padded-CSR twin of :meth:`realize` — never touches an (N, N) W.
+
+        ``idx`` / ``vals`` are the (N, K) receiver-major padded CSR of
+        ``repro.core.topology.padded_csr``: slot (i, k) means sender
+        ``idx[i, k]`` reaches receiver i with weight ``vals[i, k]``; pad
+        slots carry the receiver's own index with weight 0 and are neither
+        edges nor self loops here (``vals > 0`` is the support test).
+        Returns the renormalized ``vals`` (same shape — the sparsity
+        pattern is static, dropped edges just carry weight 0) plus the same
+        diagnostics as the dense path. Column renormalization reduces each
+        sender's surviving mass with a segment-sum over the edge list, so
+        the realized weights are column-stochastic to f32 round-off but not
+        bit-identical to the dense path's axis-0 sum — only the *fault-free*
+        sparse mix is pinned bit-exact against dense (tests/test_sparse.py).
+
+        The per-slot fault draws consume the same ``fault_key`` fold as the
+        dense path but a differently-shaped Bernoulli, so dense and sparse
+        fault streams are independent samples of the same model.
+        """
+        n, k = idx.shape
+        rows = jnp.arange(n, dtype=idx.dtype)[:, None]  # receiver per slot
+        self_slot = idx == rows  # true self loops AND zero-weight pads
+        nominal = (vals > 0.0) & ~self_slot
+        keep = jnp.ones((n, k), dtype=bool)
+        k_drop, k_strag = jax.random.split(key)
+        if self.drop_rate > 0.0:
+            keep &= jax.random.bernoulli(k_drop, 1.0 - self.drop_rate, (n, k))
+        if self.straggler_rate > 0.0:
+            sends = jax.random.bernoulli(k_strag, 1.0 - self.straggler_rate,
+                                         (n,))
+            keep &= sends[idx]  # slot's sender missed the round everywhere
+        if self.churn:
+            up = self.up_mask(t, n)
+            keep &= up[idx] & up[:, None]
+        realized = nominal & keep
+        mask = realized | self_slot  # self loops survive everything
+        vals_masked = vals * mask
+        col_mass = jax.ops.segment_sum(  # (N,) surviving mass per sender
+            vals_masked.reshape(-1), idx.reshape(-1), num_segments=n)
+        vals_real = vals_masked / col_mass[idx]
+        out_degree = jax.ops.segment_sum(
+            realized.astype(jnp.int32).reshape(-1), idx.reshape(-1),
+            num_segments=n)
+        dropped = (jnp.sum(nominal.astype(jnp.int32))
+                   - jnp.sum(out_degree)).astype(jnp.int32)
+        diag = {"net_out_degree": out_degree,
+                "net_dropped_edges": dropped}
+        if with_adjacency:
+            # Scatter-add then threshold: integer adds are deterministic
+            # where a duplicated boolean scatter would not be.
+            hits = jnp.zeros((n, n), jnp.int32).at[
+                jnp.broadcast_to(rows, (n, k)), idx
+            ].add(mask.astype(jnp.int32))
+            diag["net_adj"] = hits > 0
+        return vals_real, diag

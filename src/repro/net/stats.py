@@ -18,8 +18,9 @@ turns the engine's per-round network diagnostics into a typed record:
 
 Fault-free runs get stats too: when the trajectory carries no ``net_*``
 rows (no masking code was emitted), the hook reconstructs the nominal
-per-round adjacency from the plan (circulant offsets or stacked dense
-matrices) — the realized graph *is* the nominal graph then.
+per-round adjacency from the plan (circulant offsets, the sparse edge
+list, or stacked dense matrices) — the realized graph *is* the nominal
+graph then.
 
 ``ProtocolSession`` attaches the finished stats to
 ``RunReport.network`` for any hook exposing a ``network_stats()`` method.
@@ -161,6 +162,13 @@ class NetworkStatsHook:
                 for off, wt in zip(plan.offsets, wts):
                     if wt > 0:
                         adj[i, (idx + off) % n, idx] = True
+            elif getattr(plan, "sparse_idx", None) is not None:
+                # Padded CSR: slot (recv, k) is a live edge iff its weight
+                # is positive (pads carry the receiver's index, weight 0).
+                send = np.asarray(plan.sparse_idx)[r]   # (N, K)
+                live = np.asarray(plan.sparse_vals)[r] > 0.0
+                recv = np.broadcast_to(idx[:, None], send.shape)
+                adj[i, recv[live], send[live]] = True
             else:
                 adj[i] = np.asarray(plan.ws)[r] > 0.0
         eye = np.eye(n, dtype=bool)

@@ -1,0 +1,516 @@
+"""Differential conformance suite for the sparse gossip runtime (PR 6).
+
+The sparse schedule is a second first-class wire representation — a padded
+CSR edge list threaded through topology -> plan -> engine -> kernels ->
+session. Its contract is *bit-exactness* (f32) against the dense oracle on
+the same support: every test here compares whole trajectories, not just
+final states, across the net-lab topology families, both runtimes (packed
+and pytree), tap off and on, and N in {4, 16, 33} (33 exercises the
+non-lane-multiple path). A golden HLO pin asserts the sparse mix never
+lowers to an (N, N) contraction; fault-path edge cases (isolated nodes,
+self-loop-only rounds, churn ids) cover the in-scan masking that
+tests/test_net.py only exercises densely.
+"""
+from __future__ import annotations
+
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PrivacySpec, Session, TranscriptHook
+from repro.api.results import estimate_wire_bytes
+from repro.core.dpps import DPPSConfig, dpps_init
+from repro.core.partition import Partition
+from repro.core.partpsp import make_baseline_config, partpsp_init
+from repro.core.topology import padded_csr
+from repro.engine.plan import ProtocolPlan
+from repro.engine.rounds import run_dpps, run_partpsp, stack_rounds
+from repro.net.faults import FaultModel
+from repro.net.graphs import (
+    ErdosRenyiGraph,
+    RandomMatchingGraph,
+    RandomSequenceTopology,
+    SmallWorldGraph,
+    TorusGraph,
+)
+
+T = 8
+
+
+def _family(name: str, n: int):
+    """Net-lab topology families, parameterized over N (incl. N=4, N=33)."""
+    if name == "er":
+        return ErdosRenyiGraph(n, p=0.35, seed=3)
+    if name == "matching":
+        return RandomMatchingGraph(n, k=2, seed=1)
+    if name == "smallworld":
+        return SmallWorldGraph(n, k=min(2, (n - 1) // 2), beta=0.4, seed=5)
+    if name == "torus":
+        return TorusGraph(n)
+    if name == "rseq":
+        return RandomSequenceTopology(
+            n, base=RandomMatchingGraph(n, k=1, seed=0), period=4)
+    raise ValueError(name)
+
+
+FAMILY_NAMES = ("er", "matching", "smallworld", "torus", "rseq")
+
+
+def _s0(n: int):
+    rng = np.random.default_rng(7)
+    # (n, 2) exercises the <3-trailing-column gemm reroute on a real leaf.
+    return {
+        "m": jnp.asarray(rng.standard_normal((n, 11)), jnp.float32),
+        "k": jnp.asarray(rng.standard_normal((n, 2, 3)), jnp.float32),
+        "v": jnp.asarray(rng.standard_normal((n, 2)), jnp.float32),
+    }
+
+
+def _eps_seq(s0, rounds: int = T):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((rounds,) + x.shape), s0)
+
+
+def _cfg(**kw):
+    base = dict(b=5.0, gamma_n=0.02, c_prime=0.8, lam=0.6, sync_interval=3)
+    base.update(kw)
+    return DPPSConfig(**base)
+
+
+def _run(topo, schedule, packed, cfg, s0, *, hooks=(), faults=None):
+    plan = ProtocolPlan.from_topology(topo, schedule=schedule,
+                                      use_kernels=False, packed=packed,
+                                      faults=faults)
+    fn = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan,
+                                   hooks=hooks))
+    return fn(dpps_init(s0, cfg), _eps_seq(s0), jax.random.PRNGKey(11))
+
+
+def _assert_trees_bitwise(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole pin: sparse == dense, bit for bit, state AND trajectory
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "pytree"])
+@pytest.mark.parametrize("n", [4, 16, 33])
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+def test_sparse_matches_dense_dpps(family, n, packed):
+    topo = _family(family, n)
+    cfg = _cfg()
+    s0 = _s0(n)
+    fin_d, traj_d = _run(topo, "dense", packed, cfg, s0)
+    fin_s, traj_s = _run(topo, "sparse", packed, cfg, s0)
+    _assert_trees_bitwise(fin_d, fin_s)
+    assert traj_d.keys() == traj_s.keys()
+    _assert_trees_bitwise(traj_d, traj_s)
+
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "pytree"])
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+def test_sparse_matches_dense_partpsp(family, packed, n=16):
+    topo = _family(family, n)
+    cfg = make_baseline_config("partpsp", gamma_l=0.05, gamma_s=0.05,
+                               clip=10.0, b=5.0, gamma_n=0.02,
+                               c_prime=0.8, lam=0.6)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((n, 6, 3)) * 0.1,
+                               jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((n, 3)) * 0.1,
+                               jnp.float32)}
+    part = Partition.from_rules(params, [("w", "shared"), ("b", "local")])
+
+    def loss_fn(p, batch, key=None):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    def batch_at(t):
+        r = np.random.default_rng(100 + t)
+        return (jnp.asarray(r.standard_normal((n, 4, 6)), jnp.float32),
+                jnp.asarray(r.standard_normal((n, 4, 3)), jnp.float32))
+
+    batches = stack_rounds(batch_at, 0, 6)
+    outs = {}
+    for schedule in ("dense", "sparse"):
+        plan = ProtocolPlan.from_topology(topo, schedule=schedule,
+                                          use_kernels=False, packed=packed)
+        fn = jax.jit(functools.partial(
+            run_partpsp, cfg=plan.resolve_partpsp(cfg), partition=part,
+            loss_fn=loss_fn, plan=plan))
+        outs[schedule] = fn(partpsp_init(params, part, cfg), batches,
+                            jax.random.PRNGKey(5))
+    _assert_trees_bitwise(outs["dense"][0], outs["sparse"][0])
+    _assert_trees_bitwise(outs["dense"][1], outs["sparse"][1])
+
+
+@pytest.mark.parametrize("n", [4, 33])
+def test_sparse_matches_dense_partpsp_n_sweep(n):
+    # The PartPSP family sweep runs at N=16; this covers the tiny and the
+    # non-lane-multiple node counts on one family.
+    test_sparse_matches_dense_partpsp("er", packed=True, n=n)
+
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "pytree"])
+def test_sparse_matches_dense_with_tap(packed):
+    """Tap on: the recorded wire transcript is bit-identical too."""
+    topo = _family("er", 16)
+    cfg = _cfg()
+    s0 = _s0(16)
+    trajs = {}
+    for schedule in ("dense", "sparse"):
+        _, traj = _run(topo, schedule, packed, cfg, s0,
+                       hooks=(TranscriptHook(),))
+        trajs[schedule] = traj
+    tap_rows = [k for k in trajs["dense"] if k.startswith("tap_")]
+    assert tap_rows, "tap hook recorded nothing"
+    _assert_trees_bitwise(trajs["dense"], trajs["sparse"])
+
+
+def test_sparse_hlo_emits_no_dense_dot():
+    """Golden pin: the sparse program contains zero (N, N) contractions."""
+    n = 16
+    topo = _family("matching", n)
+    cfg = _cfg()
+    s0 = _s0(n)
+    texts = {}
+    for schedule in ("dense", "sparse"):
+        plan = ProtocolPlan.from_topology(topo, schedule=schedule,
+                                          use_kernels=False, packed=True)
+        if schedule == "sparse":
+            assert plan.sparse_idx.shape[-1] < n  # K < N or the pin is vacuous
+        fn = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))
+        texts[schedule] = fn.lower(
+            dpps_init(s0, cfg), _eps_seq(s0),
+            jax.random.PRNGKey(0)).compile().as_text()
+    nn = f"f32[{n},{n}]"
+    dense_dots = [l for l in texts["dense"].splitlines()
+                  if re.search(r"\bdot\(", l)]
+    sparse_dots = [l for l in texts["sparse"].splitlines()
+                   if re.search(r"\bdot\(", l)]
+    assert any(nn in l for l in dense_dots)  # the control is a real (N,N) mix
+    assert sparse_dots, "sparse mix should still be a (batched) contraction"
+    assert not any(nn in l for l in sparse_dots), (
+        "sparse schedule lowered an (N, N) dot:\n"
+        + "\n".join(l for l in sparse_dots if nn in l))
+    assert "gather(" in texts["sparse"]
+
+
+# ---------------------------------------------------------------------------
+# CSR export
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+def test_csr_round_trips_and_matches_edges(family):
+    topo = _family(family, 12)
+    period = int(getattr(topo, "period", 1))
+    for t in range(period):
+        w = topo.weight_matrix(t)
+        idx, vals = topo.sparse_weights(t)
+        n, k = idx.shape
+        assert k == topo.max_in_degree(t)
+        # ascending per row (pads interleave at their own index)
+        assert (np.diff(idx, axis=1) >= 0).all()
+        dense = np.zeros_like(w)
+        np.add.at(dense, (np.repeat(np.arange(n), k), idx.reshape(-1)),
+                  vals.reshape(-1))
+        np.testing.assert_array_equal(dense, w)
+        # the CSR support is exactly the family's declared edge set
+        rows, slots = np.nonzero(vals > 0.0)
+        support = {(int(idx[i, s]), int(i)) for i, s in zip(rows, slots)}
+        assert support == topo.edges(t)
+
+
+def test_csr_k_too_small_raises():
+    topo = _family("er", 12)
+    need = topo.max_in_degree(0)
+    with pytest.raises(ValueError, match="in-degree"):
+        padded_csr(topo.weight_matrix(0), k=need - 1)
+
+
+def test_sparse_plan_payloads():
+    topo = _family("rseq", 12)
+    plan = ProtocolPlan.from_topology(topo, schedule="sparse",
+                                      use_kernels=False)
+    assert plan.schedule == "sparse" and plan.ws is None
+    assert plan.sparse_idx.shape[0] == plan.period == 4
+    assert plan.sparse_idx.shape == plan.sparse_vals.shape
+    assert plan.sparse_idx.dtype == jnp.int32
+    # K is the union max in-degree so every round stacks
+    assert plan.sparse_idx.shape[-1] == max(
+        topo.max_in_degree(t) for t in range(4))
+    with pytest.raises(ValueError, match="sparse"):
+        ProtocolPlan(schedule="sparse", period=1)
+
+
+def test_wire_bytes_sparse_counts_edges_not_n_squared():
+    topo = _family("matching", 16)
+    dense_plan = ProtocolPlan.from_topology(topo, schedule="dense",
+                                            use_kernels=False)
+    sparse_plan = ProtocolPlan.from_topology(topo, schedule="sparse",
+                                             use_kernels=False)
+    dense_bytes = estimate_wire_bytes(dense_plan, 16, 40, 10)
+    sparse_bytes = estimate_wire_bytes(sparse_plan, 16, 40, 10)
+    assert sparse_bytes < dense_bytes
+    nonself = len([e for e in topo.edges(0) if e[0] != e[1]])
+    assert sparse_bytes == 10 * nonself * (40 * 4 + 4 + 4)
+
+
+# ---------------------------------------------------------------------------
+# Fault-path edge cases on the edge list
+# ---------------------------------------------------------------------------
+
+
+def _csr(topo, t=0):
+    idx, vals = topo.sparse_weights(t)
+    return jnp.asarray(idx), jnp.asarray(vals, jnp.float32)
+
+
+def _to_dense(idx, vals):
+    idx, vals = np.asarray(idx), np.asarray(vals)
+    n, k = idx.shape
+    dense = np.zeros((n, n), np.float64)
+    np.add.at(dense, (np.repeat(np.arange(n), k), idx.reshape(-1)),
+              vals.reshape(-1))
+    return dense
+
+
+@pytest.mark.parametrize("rate", [0.1, 0.5, 0.9])
+def test_realize_sparse_column_stochastic_any_drop_rate(rate):
+    topo = _family("er", 12)
+    idx, vals = _csr(topo)
+    fm = FaultModel(drop_rate=rate, straggler_rate=0.2)
+    vals_real, diag = fm.realize_sparse(idx, vals,
+                                        jax.random.PRNGKey(4), 0)
+    w = _to_dense(idx, vals_real)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-6)
+    assert (np.diag(w) > 0).all()  # self loops survive everything
+    assert int(diag["net_dropped_edges"]) >= 0
+
+
+def test_churn_isolates_node_on_sparse_path():
+    topo = _family("torus", 12)
+    idx, vals = _csr(topo)
+    fm = FaultModel(churn=((2, 3, 6),))
+    for t, down in ((4, True), (7, False)):
+        vals_real, diag = fm.realize_sparse(idx, vals,
+                                            jax.random.PRNGKey(0), t)
+        w = _to_dense(idx, vals_real)
+        out_deg = np.asarray(diag["net_out_degree"])
+        if down:
+            assert out_deg[2] == 0
+            assert w[2, 2] == 1.0  # receiver keeps only itself
+            assert (w[2, np.arange(12) != 2] == 0).all()
+            assert (w[np.arange(12) != 2, 2] == 0).all()  # nobody hears it
+        else:
+            assert out_deg[2] > 0
+            np.testing.assert_allclose(_to_dense(idx, vals),
+                                       w)  # round is nominal again
+        np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_all_nodes_down_is_self_loop_only_round():
+    """Out-degree floor: every in-edge dropped leaves w_ii = 1 everywhere."""
+    n = 10
+    topo = _family("matching", n)
+    idx, vals = _csr(topo)
+    fm = FaultModel(churn=tuple((i, 0, 100) for i in range(n)))
+    vals_real, diag = fm.realize_sparse(idx, vals, jax.random.PRNGKey(1), 3)
+    w = _to_dense(idx, vals_real)
+    np.testing.assert_array_equal(w, np.eye(n))
+    assert (np.asarray(diag["net_out_degree"]) == 0).all()
+    nominal = len([e for e in topo.edges(0) if e[0] != e[1]])
+    assert int(diag["net_dropped_edges"]) == nominal
+
+
+def test_self_loop_only_rounds_conserve_mass_in_engine():
+    """A run whose middle rounds drop every edge still keeps mean(a) == 1."""
+    n = 10
+    topo = _family("er", n)
+    fm = FaultModel(churn=tuple((i, 2, 5) for i in range(n)))
+    cfg = _cfg(gamma_n=0.0, noise=False, sync_interval=0)
+    s0 = _s0(n)
+    fin, traj = _run(topo, "sparse", True, cfg, s0, faults=fm)
+    assert abs(float(fin.push.a.mean()) - 1.0) < 1e-5
+    assert bool(jnp.all(fin.push.a > 0))
+    deg = np.asarray(traj["net_out_degree"])
+    assert (deg[2:5] == 0).all() and deg[0].sum() > 0
+
+
+def test_churn_out_of_range_raises_on_sparse_path():
+    topo = _family("er", 8)
+    idx, vals = _csr(topo)
+    fm = FaultModel(churn=((11, 0, 4),))
+    with pytest.raises(ValueError, match="out of range"):
+        fm.realize_sparse(idx, vals, jax.random.PRNGKey(0), 1)
+
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "pytree"])
+def test_faulted_sparse_engine_conserves_mass(packed):
+    topo = _family("er", 16)
+    fm = FaultModel(drop_rate=0.3, straggler_rate=0.1, churn=((3, 2, 6),))
+    cfg = _cfg(gamma_n=0.0, noise=False, sync_interval=0)
+    fin, traj = _run(topo, "sparse", packed, cfg, _s0(16), faults=fm)
+    assert abs(float(fin.push.a.mean()) - 1.0) < 1e-5
+    assert bool(jnp.all(fin.push.a > 0))
+    assert traj["net_out_degree"].shape == (T, 16)
+    assert int(traj["net_dropped_edges"].sum()) > 0
+    assert "net_adj" not in traj  # nobody asked for the adjacency leaf
+
+
+def test_dynamic_sparse_plan_stays_sparse():
+    topo = _family("er", 12)
+    plan = ProtocolPlan.from_topology(topo, schedule="sparse",
+                                      use_kernels=False,
+                                      faults=FaultModel(drop_rate=0.2))
+    assert plan.schedule == "sparse" and plan.dynamic
+    assert plan.ws is None  # the dense (T, N, N) stack never exists
+    assert plan.resolve_dpps(_cfg()).schedule == "sparse"
+    # inactive model: fault-free sparse program, not dynamic
+    plan0 = ProtocolPlan.from_topology(topo, schedule="sparse",
+                                       use_kernels=False, faults=FaultModel())
+    assert plan0.faults is None and not plan0.dynamic
+
+
+# ---------------------------------------------------------------------------
+# Session front door: loop driver == engine under sparse faults
+# ---------------------------------------------------------------------------
+
+
+def test_session_loop_matches_engine_under_sparse_faults():
+    n = 8
+    topo = _family("er", n)
+
+    def _loss(params, batch, key=None):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    class Model:
+        loss_fn = staticmethod(_loss)
+
+        def init(self, key):
+            return {"w": jax.random.normal(key, (6, 3)) * 0.1}
+
+    def batch_at(t):
+        r = np.random.default_rng(t)
+        return (jnp.asarray(r.standard_normal((n, 4, 6)), jnp.float32),
+                jnp.asarray(r.standard_normal((n, 4, 3)), jnp.float32))
+
+    trajs = {}
+    for driver in ("engine", "loop"):
+        sess = Session.build(
+            topology=topo, privacy=PrivacySpec(b=5.0, gamma_n=0.01),
+            model=Model(), partition=(("w", "shared"),), schedule="sparse",
+            packed=False, use_kernels=False, seed=0,
+            faults=FaultModel(drop_rate=0.25, seed=1))
+        assert sess.plan.schedule == "sparse" and sess.plan.dynamic
+        trajs[driver] = sess.train(6, batch_at, driver=driver).trajectory
+    np.testing.assert_array_equal(trajs["engine"]["loss_mean"],
+                                  trajs["loop"]["loss_mean"])
+    np.testing.assert_array_equal(trajs["engine"]["net_out_degree"],
+                                  trajs["loop"]["net_out_degree"])
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine: static sparse shards; fault-masked sparse names itself
+# ---------------------------------------------------------------------------
+
+
+def _mesh():
+    from jax.sharding import Mesh
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 forced host devices")
+    return Mesh(np.asarray(jax.devices()[:4]).reshape(4, 1),
+                ("data", "model"))
+
+
+def test_sharded_static_sparse_matches_single_device():
+    from repro.engine.shard import shard_run_dpps
+
+    mesh = _mesh()
+    n = 8
+    topo = _family("matching", n)
+    cfg = _cfg(gamma_n=0.0, noise=False)
+    s0 = _s0(n)
+    plan = ProtocolPlan.from_topology(topo, schedule="sparse",
+                                      use_kernels=False)
+    ref_fin, _ = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))(
+        dpps_init(s0, cfg), _eps_seq(s0), jax.random.PRNGKey(3))
+    sh_fin, _ = shard_run_dpps(mesh, dpps_init(s0, cfg), _eps_seq(s0),
+                               jax.random.PRNGKey(3), cfg=cfg, plan=plan)
+    for a, b in zip(jax.tree_util.tree_leaves(ref_fin),
+                    jax.tree_util.tree_leaves(sh_fin)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_sharded_engine_rejects_sparse_faults_naming_sparse():
+    """Regression (satellite): the dynamic-plan error must name the sparse
+    schedule rather than pointing users back at a dense (T, N, N) stack."""
+    from repro.engine.shard import shard_run_dpps
+
+    mesh = _mesh()
+    topo = _family("er", 8)
+    plan = ProtocolPlan.from_topology(topo, schedule="sparse",
+                                      use_kernels=False,
+                                      faults=FaultModel(drop_rate=0.1))
+    cfg = _cfg(gamma_n=0.0, noise=False)
+    s0 = _s0(8)
+    with pytest.raises(NotImplementedError, match="sparse"):
+        shard_run_dpps(mesh, dpps_init(s0, cfg), _eps_seq(s0),
+                       jax.random.PRNGKey(0), cfg=cfg, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# Pallas SpMM kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d", [(8, 16), (16, 40), (33, 7)])
+def test_spmm_kernel_matches_oracle(n, d):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+
+    topo = _family("er", n)
+    idx, vals = _csr(topo)
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    out = kops.pushsum_mix_sparse(idx, vals, x)
+    expect = ref.spmm(idx, vals, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-6, atol=1e-6)
+    dense = ref.pushsum_mix(
+        jnp.asarray(topo.weight_matrix(0), jnp.float32), x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gossip_sparse_kernel_route_matches_jnp():
+    from repro.core.pushsum import gossip_sparse, init_push_sum
+
+    n = 16
+    topo = _family("torus", n)
+    idx, vals = _csr(topo)
+    state = init_push_sum(_s0(n))
+    jnp_out = gossip_sparse(state, idx, vals, use_kernels=False)
+    ker_out = gossip_sparse(state, idx, vals, use_kernels=True)
+    for a, b in zip(jax.tree_util.tree_leaves(jnp_out),
+                    jax.tree_util.tree_leaves(ker_out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)

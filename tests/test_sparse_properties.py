@@ -1,0 +1,133 @@
+"""Hypothesis property tests for the padded-CSR sparse runtime (PR 6).
+
+Invariants across ALL families, any seed: the CSR export round-trips to
+the exact dense weight matrix (so the sparse schedule computes on the same
+support by construction); the fault-masked sparse weights stay
+column-stochastic at ANY drop/straggler rate (segment-sum renormalization,
+out-degree floor included); and a noiseless faulted sparse engine run
+conserves push-sum mass, ``mean(a) == 1``. Module-skipped when hypothesis
+is absent (the repo's [test] extra installs it; tier-1 containers may
+not)."""
+import functools
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dpps import DPPSConfig, dpps_init
+from repro.core.topology import padded_csr
+from repro.engine.plan import ProtocolPlan
+from repro.engine.rounds import run_dpps
+from repro.net import (
+    ErdosRenyiGraph,
+    FaultModel,
+    RandomMatchingGraph,
+    RandomSequenceTopology,
+    SmallWorldGraph,
+    TorusGraph,
+)
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _build(family: str, n: int, seed: int, param: float):
+    if family == "er":
+        return ErdosRenyiGraph(n_nodes=n, p=param, seed=seed)
+    if family == "matching":
+        return RandomMatchingGraph(n_nodes=n, k=1 + int(param * 2), seed=seed)
+    if family == "smallworld":
+        return SmallWorldGraph(n_nodes=max(n, 5), k=2, beta=param, seed=seed)
+    if family == "torus":
+        return TorusGraph(n_nodes=12 if n % 2 else n + (n % 4))
+    if family == "sequence":
+        return RandomSequenceTopology(
+            n_nodes=n, base=RandomMatchingGraph(n_nodes=n, k=1, seed=seed),
+            period=3)
+    raise AssertionError(family)
+
+
+def _to_dense(idx, vals):
+    idx, vals = np.asarray(idx), np.asarray(vals)
+    n, k = idx.shape
+    dense = np.zeros((n, n), np.float64)
+    np.add.at(dense, (np.repeat(np.arange(n), k), idx.reshape(-1)),
+              vals.reshape(-1))
+    return dense
+
+
+@given(family=st.sampled_from(["er", "matching", "smallworld", "torus",
+                               "sequence"]),
+       n=st.sampled_from([6, 9, 12, 16]), seed=SEEDS,
+       param=st.floats(min_value=0.0, max_value=1.0),
+       slack=st.integers(min_value=0, max_value=3))
+@settings(max_examples=40, deadline=None)
+def test_csr_round_trips_to_dense(family, n, seed, param, slack):
+    """padded_csr is lossless at the tight K and at any padded K."""
+    topo = _build(family, n, seed, param)
+    period = int(getattr(topo, "period", 1))
+    for t in range(period):
+        w = topo.weight_matrix(t)
+        tight = topo.max_in_degree(t)
+        idx, vals = padded_csr(w, k=tight + slack)
+        assert idx.shape == vals.shape == (w.shape[0], tight + slack)
+        assert idx.dtype == np.int32
+        assert (np.diff(idx, axis=1) >= 0).all()  # ascending senders
+        np.testing.assert_array_equal(_to_dense(idx, vals), w)
+        # pads carry zero weight at the receiver's own index
+        pad = vals == 0.0
+        rows = np.broadcast_to(np.arange(w.shape[0])[:, None], idx.shape)
+        assert (idx[pad] == rows[pad]).all()
+
+
+@given(family=st.sampled_from(["er", "matching", "smallworld", "sequence"]),
+       n=st.sampled_from([6, 9, 12, 16]), seed=SEEDS,
+       drop=st.floats(min_value=0.0, max_value=0.99),
+       straggle=st.floats(min_value=0.0, max_value=0.9),
+       fkey=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_realized_sparse_weights_column_stochastic(family, n, seed, drop,
+                                                   straggle, fkey):
+    """Any admissible drop rate — up to 0.99, where whole rounds can go
+    self-loop-only — leaves the renormalized edge list column-stochastic
+    with positive diagonal (the out-degree floor)."""
+    topo = _build(family, n, seed, 0.5)
+    idx, vals = topo.sparse_weights(0)
+    idx = jnp.asarray(idx)
+    vals = jnp.asarray(vals, jnp.float32)
+    fm = FaultModel(drop_rate=drop, straggler_rate=straggle)
+    vals_real, diag = fm.realize_sparse(idx, vals, jax.random.PRNGKey(fkey), 0)
+    w = _to_dense(idx, vals_real)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-5)
+    assert (np.diag(w) > 0).all()
+    out_deg = np.asarray(diag["net_out_degree"])
+    nominal = _to_dense(idx, vals)
+    nominal_edges = int((nominal > 0).sum() - w.shape[0])
+    assert 0 <= int(diag["net_dropped_edges"]) <= nominal_edges
+    assert int(out_deg.sum()) + int(diag["net_dropped_edges"]) == nominal_edges
+
+
+@given(seed=st.integers(min_value=0, max_value=1000),
+       drop=st.floats(min_value=0.0, max_value=0.95),
+       fseed=st.integers(min_value=0, max_value=1000))
+@settings(max_examples=12, deadline=None)
+def test_faulted_sparse_engine_conserves_mass(seed, drop, fseed):
+    """Noiseless faulted sparse scan: column stochasticity of every realized
+    round implies mean(a) == 1 exactly (up to f32 roundoff)."""
+    n = 10
+    topo = ErdosRenyiGraph(n_nodes=n, p=0.4, seed=seed)
+    cfg = DPPSConfig(b=5.0, gamma_n=0.0, noise=False, c_prime=0.8, lam=0.6)
+    plan = ProtocolPlan.from_topology(
+        topo, schedule="sparse", use_kernels=False,
+        faults=FaultModel(drop_rate=drop, seed=fseed))
+    assert plan.schedule == "sparse" and plan.dynamic
+    rng = np.random.default_rng(seed)
+    s0 = {"x": jnp.asarray(rng.standard_normal((n, 7)), jnp.float32)}
+    eps = {"x": jnp.zeros((6, n, 7))}
+    fin, _ = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))(
+        dpps_init(s0, cfg), eps, jax.random.PRNGKey(fseed))
+    assert abs(float(fin.push.a.mean()) - 1.0) < 1e-5
+    assert bool(jnp.all(fin.push.a > 0))

@@ -79,10 +79,11 @@ class RunResult:
     ras: float                    # real average sensitivity (paper SV.C)
     est_sens_mean: float
     violations: int               # rounds where real > estimated
-    wall_s: float
+    wall_s: float                 # steady-state (post-compile) seconds
     steps: int
     loss: float
     eps_total: float = float("inf")  # composed epsilon spent by the run
+    compile_s: float = 0.0           # first-segment trace+compile seconds
 
     def csv(self) -> str:
         us = self.wall_s / max(self.steps, 1) * 1e6
@@ -203,5 +204,21 @@ def run_experiment(
         ras=float(np.mean(reals)) if reals is not None else float(np.mean(ests)),
         est_sens_mean=float(np.mean(ests)) if ests.size else 0.0,
         violations=real_hook.violations if real_hook else 0,
-        wall_s=report.wall_clock, steps=steps, loss=loss,
-        eps_total=report.epsilon_spent)
+        wall_s=_steady_wall(report, steps, chunk, driver), steps=steps,
+        loss=loss, eps_total=report.epsilon_spent,
+        compile_s=report.compile_s)
+
+
+def _steady_wall(report, steps: int, chunk: int, driver: str) -> float:
+    """Steady-state wall seconds normalized to all ``steps`` rounds.
+
+    ``report.run_s`` excludes the first segment (compile + its rounds);
+    scale it back to the full round count so ``wall_s / steps`` is the
+    post-compile per-round rate. Falls back to the lump sum when the run
+    was a single segment (nothing steady-state to measure).
+    """
+    first_n = 1 if driver == "loop" else min(chunk, steps)
+    steady = steps - first_n
+    if steady <= 0 or report.run_s <= 0:
+        return report.wall_clock
+    return report.run_s * steps / steady

@@ -177,6 +177,9 @@ def main(steps: int = 150):
     results = run(steps)
     for r in results:
         yield r.csv()
+    # Steady-state per-round seconds: RunResult.wall_s is the post-compile
+    # run_s normalized to all rounds (common._steady_wall), so compile time
+    # no longer pollutes the Table IV comparison.
     t = {r.name.split("/")[1]: r.wall_s / r.steps for r in results}
     comm_full = 4 * D_TOTAL       # bytes/round/node (f32)
     comm_part = 4 * D_SHARED_1

@@ -38,7 +38,9 @@ from repro.api.hooks import (
     MetricsHook,
     RealSensitivityHook,
     RoundHook,
+    RunAbort,
     RunContext,
+    TraceSpec,
     TranscriptHook,
     hook_trace_spec,
 )
@@ -54,11 +56,13 @@ __all__ = [
     "ProtocolSession",
     "RealSensitivityHook",
     "RoundHook",
+    "RunAbort",
     "RunContext",
     "RunReport",
     "ServeReport",
     "Session",
     "TOPOLOGY_CHOICES",
+    "TraceSpec",
     "TranscriptHook",
     "add_fault_arguments",
     "add_protocol_arguments",

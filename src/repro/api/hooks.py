@@ -11,13 +11,19 @@ A hook couples one *scan-side* capture with one *host-side* consumer:
   round). This is where JSONL streaming, budget enforcement and logging
   live — outside the compiled program.
 
-Two static trace-time declarations let the drivers emit exactly the code a
-hook needs and nothing more:
+Four static trace-time declarations let the drivers emit exactly the code
+a hook needs and nothing more (collected into a :class:`TraceSpec` by
+:func:`hook_trace_spec`):
 
-* ``tap``          — a :class:`repro.audit.transcript.TranscriptTap` to
+* ``tap``             — a :class:`repro.audit.transcript.TranscriptTap` to
   thread into ``dpps_step`` (at most one tap-bearing hook per run);
-* ``needs_s_half`` — request the perturbed pre-noise state ``s^(t+1/2)``
-  in the diagnostics (the exact-sensitivity input, paper Fig. 2).
+* ``needs_s_half``    — request the perturbed pre-noise state ``s^(t+1/2)``
+  in the diagnostics (the exact-sensitivity input, paper Fig. 2);
+* ``needs_adjacency`` — request the per-round realized (N, N) adjacency
+  under fault injection (:class:`repro.net.stats.NetworkStatsHook`);
+* ``needs_wire_stats`` — request the in-scan health diagnostics (NaN/Inf
+  wire guard, push-sum mass drift, consensus residual — the
+  :class:`repro.obs.watchdog.WatchdogHook` inputs).
 
 Zero-cost contract: with no hooks attached the drivers trace a program
 bit-identical to the audit-free engine (the HLO is pinned against the
@@ -38,7 +44,7 @@ then ``finish()`` in a ``finally`` (close files even on abort).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import numpy as np
 
@@ -49,15 +55,35 @@ from repro.core.sensitivity import real_sensitivity
 __all__ = [
     "RoundHook",
     "RunContext",
+    "TraceSpec",
     "capture_rows",
     "TranscriptHook",
     "LedgerHook",
     "BudgetHook",
     "RealSensitivityHook",
     "MetricsHook",
+    "RunAbort",
     "BudgetExhausted",
     "hook_trace_spec",
 ]
+
+
+def _default_sink() -> Callable[[str], None]:
+    """The obs logger's INFO sink (lazy import: repro.obs is optional at
+    hook-construction time only in the sense that the import should not
+    run until a default sink is actually needed)."""
+    from repro.obs import log_sink
+
+    return log_sink
+
+
+def _resolve_bus(bus: Any) -> Any:
+    """``bus=None`` -> the process-wide default bus (lazy import)."""
+    if bus is not None:
+        return bus
+    from repro.obs import default_bus
+
+    return default_bus()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +108,8 @@ class RoundHook:
 
     tap: Any = None            # TranscriptTap to thread into dpps_step
     needs_s_half: bool = False  # request s^(t+1/2) in the diagnostics
+    needs_adjacency: bool = False   # realized (N, N) adjacency under faults
+    needs_wire_stats: bool = False  # in-scan health diagnostics (wd_* rows)
 
     def prepare(self, ctx: RunContext) -> None:  # noqa: B027 — optional
         pass
@@ -116,20 +144,41 @@ def capture_rows(diag: dict[str, Any], hooks) -> dict[str, Any]:
     return out
 
 
-def hook_trace_spec(hooks) -> tuple[Any, bool]:
-    """(tap, needs_s_half) the compiled round must provide for ``hooks``.
+class TraceSpec(NamedTuple):
+    """Everything the compiled round must provide for a hook pipeline.
+
+    The four trace-time switches of the base class, reduced over the
+    pipeline: the (at most one) transcript tap, and the three or-folded
+    request flags. Both drivers — the engine scan and the session's
+    per-round loop — derive their traced program from this one spec.
+    """
+
+    tap: Any
+    needs_s_half: bool
+    needs_adjacency: bool
+    needs_wire_stats: bool
+
+
+def hook_trace_spec(hooks) -> TraceSpec:
+    """The :class:`TraceSpec` the compiled round must provide for ``hooks``.
 
     The single place both drivers (the engine scan and the session's
     per-round loop) derive their trace-time switches from the pipeline;
-    enforces the at-most-one-tap rule.
+    enforces the at-most-one-tap rule. Flags are read with ``getattr`` so
+    duck-typed hooks (pre-dating the base-class attributes) keep working.
     """
     taps = [h.tap for h in hooks if getattr(h, "tap", None) is not None]
     if len(taps) > 1:
         raise ValueError(
             f"{len(taps)} hooks carry a transcript tap; at most one "
             "tap-bearing hook per run (taps share the tap_* namespace)")
-    need_s_half = any(getattr(h, "needs_s_half", False) for h in hooks)
-    return (taps[0] if taps else None), need_s_half
+    return TraceSpec(
+        tap=taps[0] if taps else None,
+        needs_s_half=any(getattr(h, "needs_s_half", False) for h in hooks),
+        needs_adjacency=any(getattr(h, "needs_adjacency", False)
+                            for h in hooks),
+        needs_wire_stats=any(getattr(h, "needs_wire_stats", False)
+                             for h in hooks))
 
 
 # ---------------------------------------------------------------------------
@@ -206,14 +255,21 @@ class LedgerHook(RoundHook):
     segment through :meth:`PrivacyLedger.record_trajectory`, so entries
     are bit-identical to the kwarg-era path; closes the JSONL on finish.
     Pass a pre-built ``ledger=`` to keep ownership outside the hook.
+
+    Also a bus producer: each consumed segment publishes
+    ``privacy.rounds`` (counter) and ``privacy.epsilon_total`` (gauge) to
+    ``bus`` (default: the process bus). The ledger JSONL itself is
+    untouched — byte-identical to the pre-bus format.
     """
 
     def __init__(self, path: str | None = None, budget: float | None = None,
-                 mechanism: str = "laplace", ledger: Any = None):
+                 mechanism: str = "laplace", ledger: Any = None,
+                 bus: Any = None):
         self.path = path
         self.budget = budget
         self.mechanism = mechanism
         self.ledger = ledger
+        self.bus = bus
         self._protected = True
         self._sync_interval = 0
 
@@ -232,6 +288,12 @@ class LedgerHook(RoundHook):
         self.ledger.record_trajectory(
             rows, t0=t0, protected=self._protected,
             sync_interval=self._sync_interval)
+        n = int(np.asarray(rows["sensitivity_estimate"]).shape[0])
+        bus = self.bus = _resolve_bus(self.bus)
+        bus.count("privacy.rounds", n, round=t0 + n - 1)
+        bus.gauge("privacy.epsilon_total",
+                  float(self.ledger.accountant.epsilon_total),
+                  round=t0 + n - 1)
 
     def finish(self) -> None:
         if self.ledger is not None:
@@ -241,7 +303,15 @@ class LedgerHook(RoundHook):
         return self.ledger.summary()
 
 
-class BudgetExhausted(RuntimeError):
+class RunAbort(RuntimeError):
+    """Base of the hook-raised abort family: the session driver catches
+    it at segment boundaries, stops the run, and reports ``aborted=True``
+    with the message as ``abort_reason``. Subclasses:
+    :class:`BudgetExhausted` (strict privacy budget) and
+    :class:`repro.obs.watchdog.WatchdogAbort` (strict health watchdog)."""
+
+
+class BudgetExhausted(RunAbort):
     """Raised by a strict :class:`BudgetHook` once the epsilon ceiling is
     crossed; the session catches it, stops the run, and reports
     ``aborted=True`` (over-budget parameters are never released)."""
@@ -258,16 +328,19 @@ class BudgetHook(RoundHook):
 
     Steps a :class:`PrivacyAccountant` per consumed round (sync rounds are
     unprotected and spend nothing). On first exceeding the budget it warns
-    once through ``warn``; with ``strict=True`` it raises
+    once through ``warn`` — default: the obs logger
+    (:func:`repro.obs.log_sink`), so quiet/structured drivers capture it
+    through standard ``logging``; inject a callable (e.g. ``print`` or a
+    list's ``append``) to override. With ``strict=True`` it raises
     :class:`BudgetExhausted` at the segment boundary — the engine driver's
     enforcement granularity.
     """
 
     def __init__(self, budget: float, *, strict: bool = False,
-                 warn: Callable[[str], None] = print, note: str = ""):
+                 warn: Callable[[str], None] | None = None, note: str = ""):
         self.budget = budget
         self.strict = strict
-        self.warn = warn
+        self.warn = warn if warn is not None else _default_sink()
         self.note = note
         self.exceeded_at: int | None = None
         self.accountant: PrivacyAccountant | None = None
@@ -305,18 +378,26 @@ class MetricsHook(RoundHook):
     drivers). ``fields`` maps output names to trajectory keys; every round
     lands in ``history`` and is printed every ``log_every`` rounds (plus
     the final round when ``total`` is known) through ``formatter``.
+
+    ``print_fn`` defaults to the obs logger (:func:`repro.obs.log_sink`)
+    — same lines on stdout, but capturable/silenceable through standard
+    ``logging``; inject any callable to override (tests pass
+    ``lines.append``). Each history row is also published to ``bus``
+    (default: the process bus) as ``metrics.<name>`` gauges.
     """
 
     def __init__(self, fields: dict[str, str] | None = None,
                  log_every: int = 10, total: int | None = None,
                  formatter: Callable[[dict[str, Any]], str] | None = None,
-                 print_fn: Callable[[str], None] = print):
+                 print_fn: Callable[[str], None] | None = None,
+                 bus: Any = None):
         self.fields = fields or {"loss": "loss_mean",
                                  "sensitivity": "sensitivity_used"}
         self.log_every = max(int(log_every), 1)
         self.total = total
         self.formatter = formatter or self._default_format
-        self.print_fn = print_fn
+        self.print_fn = print_fn if print_fn is not None else _default_sink()
+        self.bus = bus
         self.history: list[dict[str, Any]] = []
 
     @staticmethod
@@ -330,11 +411,15 @@ class MetricsHook(RoundHook):
         if not cols:
             return
         n = next(iter(cols.values())).shape[0]
+        bus = self.bus = _resolve_bus(self.bus)
         for i in range(n):
             row = {"step": t0 + i,
                    **{name: float(col[i]) for name, col in cols.items()}}
             self.history.append(row)
             t = row["step"]
+            for name, value in row.items():
+                if name != "step":
+                    bus.gauge(f"metrics.{name}", value, round=t)
             if t % self.log_every == 0 or (self.total is not None
                                            and t == self.total - 1):
                 self.print_fn(self.formatter(row))

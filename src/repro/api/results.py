@@ -65,9 +65,17 @@ class RunReport:
       epsilon_spent  composed epsilon of the executed protected rounds
                      (pure-DP linear composition; sync rounds excluded).
       wire_bytes     estimated protocol payload traffic (module docstring).
-      wall_clock     seconds spent driving the run (host side included).
+      compile_s      wall seconds of the *first* segment — tracing + XLA
+                     compilation + its first dispatch (synced).
+      run_s          wall seconds of everything after: the steady-state
+                     segments plus host-side hook consumption. Per-round
+                     timing figures should use this (see
+                     benchmarks/table4_time.py), not the lump sum.
+      wall_clock     derived property: ``compile_s + run_s`` (the lump
+                     sum older callers read).
       aborted        True when a hook aborted the run (strict privacy
-                     budget); ``abort_reason`` carries the message.
+                     budget, strict watchdog); ``abort_reason`` carries
+                     the message.
       network        realized-network record
                      (:class:`repro.net.stats.NetworkStats`) when a
                      ``NetworkStatsHook`` was attached — the per-round
@@ -83,10 +91,15 @@ class RunReport:
     rounds: int
     epsilon_spent: float
     wire_bytes: int
-    wall_clock: float
+    compile_s: float = 0.0
+    run_s: float = 0.0
     aborted: bool = False
     abort_reason: str | None = None
     network: Any = None
+
+    @property
+    def wall_clock(self) -> float:
+        return self.compile_s + self.run_s
 
     def summary(self) -> dict[str, Any]:
         eps = float(self.epsilon_spent)
@@ -94,6 +107,8 @@ class RunReport:
             "rounds": self.rounds,
             "epsilon_spent": eps if np.isfinite(eps) else None,
             "wire_bytes": self.wire_bytes,
+            "compile_s": round(self.compile_s, 3),
+            "run_s": round(self.run_s, 3),
             "wall_clock_s": round(self.wall_clock, 3),
             "aborted": self.aborted,
         }

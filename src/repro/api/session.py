@@ -50,8 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.hooks import (
-    BudgetExhausted,
     RoundHook,
+    RunAbort,
     RunContext,
     capture_rows,
     hook_trace_spec,
@@ -410,12 +410,18 @@ class ProtocolSession:
                d_s: int, start: int = 0) -> RunReport:
         """Shared host loop: consume hooks per segment, assemble the report.
 
-        A strict-budget hook aborts between segments (BudgetExhausted);
-        the report then carries the partial run with ``aborted=True``.
-        The report accounts only the rounds *this* call executed —
-        resumed runs (``start > 0``) never re-count the prefix.
+        A strict hook aborts between segments (any :class:`RunAbort` —
+        BudgetExhausted, WatchdogAbort); the report then carries the
+        partial run with ``aborted=True``. The report accounts only the
+        rounds *this* call executed — resumed runs (``start > 0``) never
+        re-count the prefix.
+
+        Wall-clock split: the first segment's wall time (which includes
+        tracing + XLA compilation of the scan) is reported as
+        ``compile_s``; everything after is steady-state ``run_s``.
         """
         t_start = time.time()
+        compile_s = 0.0
         trajs: list[dict[str, Any]] = []
         state = None
         done = start
@@ -424,10 +430,16 @@ class ProtocolSession:
         try:
             for t0, n, state, traj in segments:
                 done = t0 + n
+                if not trajs:
+                    # End of the first segment = compile + first dispatch;
+                    # sync so the boundary is real device time, not the
+                    # async dispatch returning early.
+                    jax.block_until_ready(traj)
+                    compile_s = time.time() - t_start
                 trajs.append(traj)
                 for h in hooks:
                     h.consume(traj, t0=t0)
-        except BudgetExhausted as e:
+        except RunAbort as e:
             aborted = True
             reason = str(e)
         finally:
@@ -452,7 +464,8 @@ class ProtocolSession:
             epsilon_spent=self.epsilon_spent(executed, start=start),
             wire_bytes=estimate_wire_bytes(self.plan, self.n_nodes, d_s,
                                            executed),
-            wall_clock=time.time() - t_start, aborted=aborted,
+            compile_s=compile_s,
+            run_s=time.time() - t_start - compile_s, aborted=aborted,
             abort_reason=reason, network=network)
 
     def run(
@@ -550,7 +563,7 @@ class ProtocolSession:
         with per-round mixing operands, so time-varying topologies rotate
         correctly; hook captures run eagerly on the concrete diagnostics.
         """
-        tap, need_s_half = hook_trace_spec(hooks)
+        spec = hook_trace_spec(hooks)
         if self.cfg.wire_dtype != "f32":
             raise ValueError("the loop driver runs the pytree path; "
                              "wire_dtype='bf16' needs driver='engine'")
@@ -558,21 +571,22 @@ class ProtocolSession:
         if plan.schedule == "circulant":
             step = jax.jit(functools.partial(
                 partpsp_step, cfg=self.train_cfg, partition=self.partition,
-                loss_fn=self.loss_fn, return_s_half=need_s_half, tap=tap,
+                loss_fn=self.loss_fn, return_s_half=spec.needs_s_half,
+                return_wire_stats=spec.needs_wire_stats, tap=spec.tap,
                 mechanism=self.mechanism, offsets=plan.offsets))
             mix_for = lambda t: ({"mix_weights":
                                   plan.mix_weights[t % plan.period]}, None)
         elif plan.schedule == "sparse":
             step = jax.jit(functools.partial(
                 partpsp_step, cfg=self.train_cfg, partition=self.partition,
-                loss_fn=self.loss_fn, return_s_half=need_s_half, tap=tap,
+                loss_fn=self.loss_fn, return_s_half=spec.needs_s_half,
+                return_wire_stats=spec.needs_wire_stats, tap=spec.tap,
                 mechanism=self.mechanism))
             if getattr(plan, "dynamic", False):
                 # Same fault-key fold as the engine's scan body, on the
                 # edge list instead of the dense W (see the dense dynamic
                 # branch below).
-                want_adj = any(getattr(h, "needs_adjacency", False)
-                               for h in hooks)
+                want_adj = spec.needs_adjacency
 
                 def mix_for(t):
                     r = t % plan.period
@@ -589,15 +603,15 @@ class ProtocolSession:
         else:
             step = jax.jit(functools.partial(
                 partpsp_step, cfg=self.train_cfg, partition=self.partition,
-                loss_fn=self.loss_fn, return_s_half=need_s_half, tap=tap,
+                loss_fn=self.loss_fn, return_s_half=spec.needs_s_half,
+                return_wire_stats=spec.needs_wire_stats, tap=spec.tap,
                 mechanism=self.mechanism))
             if getattr(plan, "dynamic", False):
                 # Same fault-key fold the engine's scan body uses
                 # (FaultModel.fault_key of fold_in(base, t)), so the loop
                 # realizes the identical masked W per round and stays
                 # bit-comparable to the engine under faults.
-                want_adj = any(getattr(h, "needs_adjacency", False)
-                               for h in hooks)
+                want_adj = spec.needs_adjacency
 
                 def mix_for(t):
                     w, net = plan.faults.realize(
@@ -616,6 +630,92 @@ class ProtocolSession:
                 m = dict(m, **net)
             rows = capture_rows(m, hooks)
             yield t, 1, state, jax.tree_util.tree_map(lambda x: x[None], rows)
+
+    # -- profiling -----------------------------------------------------------
+
+    def profile(
+        self,
+        rounds: int = 50,
+        *,
+        values: PyTree | None = None,
+        state: Any = None,
+        batch_at: Callable[[int], PyTree] | None = None,
+        hooks: Iterable[RoundHook] = (),
+        key: jax.Array | None = None,
+        trace_dir: str | None = None,
+    ):
+        """Profile one compiled segment: wall-clock split + phase breakdown.
+
+        Compiles and runs a single ``min(rounds, plan.chunk)``-round
+        segment of the consensus protocol (``values=``/``state=``) or of
+        PartPSP training (``batch_at=``), timing trace, compile, and
+        execute separately, and captures a ``jax.profiler`` device trace
+        of the execute. The trace's per-op times are joined against the
+        compiled module's ``op_name`` metadata — where the
+        :func:`repro.obs.phase` annotations survive — into a per-phase
+        device-time breakdown (:class:`repro.obs.ProfileReport`). When the
+        xplane protobuf bindings are unavailable the breakdown degrades to
+        empty with a ``note``; the wall-clock split always works.
+
+        ``hooks`` are attached trace-time only (their captures shape the
+        profiled program exactly as in :meth:`run`/:meth:`train`); their
+        host-side ``consume`` does not run. ``trace_dir`` keeps the raw
+        profiler trace on disk (e.g. for TensorBoard); by default it lives
+        in a temp dir deleted after the join. The profiled call does NOT
+        donate its inputs, so the passed state survives.
+        """
+        import shutil
+        import tempfile
+
+        from repro.obs.trace import ProfileReport, phase_breakdown
+
+        self._require_protocol()
+        key = self.base_key if key is None else key
+        hooks = tuple(hooks)
+        n = min(rounds, self.plan.chunk)
+        if batch_at is not None:
+            if state is None:
+                state = self.train_state()
+            fn = functools.partial(
+                run_partpsp, cfg=self.train_cfg, partition=self.partition,
+                loss_fn=self.loss_fn, plan=self.plan, hooks=hooks,
+                mechanism=self.mechanism)
+            args = (state, stack_rounds(batch_at, 0, n), key)
+        else:
+            if state is None:
+                if values is None:
+                    raise ValueError("profile() needs values=/state= "
+                                     "(consensus) or batch_at= (training)")
+                state = self.consensus_state(values)
+            fn = functools.partial(run_dpps, cfg=self.cfg, plan=self.plan,
+                                   hooks=hooks, mechanism=self.mechanism,
+                                   rounds=n)
+            args = (state, None, key)
+
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        trace_s = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        hlo = compiled.as_text()
+
+        out_dir = trace_dir if trace_dir is not None else tempfile.mkdtemp(
+            prefix="repro-obs-profile-")
+        try:
+            t0 = time.time()
+            with jax.profiler.trace(out_dir):
+                out = compiled(*args)
+                jax.block_until_ready(out)
+            execute_s = time.time() - t0
+            phases, device_total_s, note = phase_breakdown(hlo, out_dir)
+        finally:
+            if trace_dir is None:
+                shutil.rmtree(out_dir, ignore_errors=True)
+        return ProfileReport(
+            rounds=n, backend=jax.default_backend(), trace_s=trace_s,
+            compile_s=compile_s, execute_s=execute_s, phases=phases,
+            device_total_s=device_total_s, trace_dir=trace_dir, note=note)
 
     # -- serving -------------------------------------------------------------
 

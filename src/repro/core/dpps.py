@@ -69,12 +69,22 @@ from repro.core import privacy
 from repro.core.packing import PackedLayout
 from repro.core.pushsum import (
     PushSumState,
+    consensus_error,
     correct,
     gossip_circulant,
     gossip_dense,
     gossip_packed,
     gossip_sparse,
     init_push_sum,
+)
+from repro.obs.trace import (
+    PHASE_DPPS_GOSSIP,
+    PHASE_DPPS_NOISE,
+    PHASE_DPPS_PERTURB,
+    PHASE_DPPS_SENSITIVITY,
+    PHASE_DPPS_SYNC,
+    PHASE_DPPS_WIRE_STATS,
+    phase,
 )
 from repro.core.sensitivity import SensitivityState, init_sensitivity
 from repro.core.tree_utils import PyTree, tree_l1_norm_per_node, tree_node_mean
@@ -203,6 +213,7 @@ def dpps_step(
     sparse_idx: jnp.ndarray | None = None,
     sparse_vals: jnp.ndarray | None = None,
     return_s_half: bool = False,
+    return_wire_stats: bool = False,
     gossip_fn: Callable[[PushSumState], PushSumState] | None = None,
     node_ops: NodeOps = LOCAL_NODE_OPS,
     mechanism: Any = None,
@@ -230,6 +241,12 @@ def dpps_step(
     are ``None`` by default, in which case this function traces to exactly
     the program without the audit seams.
 
+    ``return_wire_stats`` adds the in-scan watchdog diagnostics under
+    ``wd_*`` keys (non-finite count over the wire payload, push-sum mass
+    drift ``|mean(a) - 1|``, and the corrected iterates' consensus
+    residual) for :class:`repro.obs.WatchdogHook`; like the other seams it
+    defaults off and the traced program is then unchanged.
+
     ``layout`` switches the round onto the packed fast path: ``state.push.s``
     and ``eps`` are then single ``(N, d_pad)`` buffers (see
     :mod:`repro.core.packing`) and the perturb/noise/norm/mix passes run
@@ -254,156 +271,168 @@ def dpps_step(
     # -gamma_s * g so the perturb add keeps the oracle's per-leaf shape —
     # see PackedLayout.add_wire).
     eps_is_buf = packed and isinstance(eps, jnp.ndarray)
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
+    with phase(PHASE_DPPS_PERTURB):
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
 
-        if packed and not eps_is_buf:
-            eps = layout.pack(eps)
-            eps_is_buf = True
-        eps_l1 = (kops.l1_norm_packed(eps, layout.d_s) if packed
-                  else kops.l1_norm_tree(eps))
-    elif eps_is_buf:
-        eps_l1 = layout.l1_norm_per_node(eps)
-    else:
-        eps_l1 = tree_l1_norm_per_node(eps)
-    need_s_half = (return_s_half or cfg.sensitivity_mode == "real"
-                   or mechanism is not None
-                   or not (cfg.noise and cfg.gamma_n > 0))
-    if need_s_half or not cfg.use_kernels:
-        if packed:
-            s_half = s + eps if eps_is_buf else layout.add_wire(s, eps)
+            if packed and not eps_is_buf:
+                eps = layout.pack(eps)
+                eps_is_buf = True
+            eps_l1 = (kops.l1_norm_packed(eps, layout.d_s) if packed
+                      else kops.l1_norm_tree(eps))
+        elif eps_is_buf:
+            eps_l1 = layout.l1_norm_per_node(eps)
         else:
-            s_half = jax.tree_util.tree_map(jnp.add, s, eps)
-    else:
-        s_half = None
+            eps_l1 = tree_l1_norm_per_node(eps)
+        need_s_half = (return_s_half or cfg.sensitivity_mode == "real"
+                       or mechanism is not None
+                       or not (cfg.noise and cfg.gamma_n > 0))
+        if need_s_half or not cfg.use_kernels:
+            if packed:
+                s_half = s + eps if eps_is_buf else layout.add_wire(s, eps)
+            else:
+                s_half = jax.tree_util.tree_map(jnp.add, s, eps)
+        else:
+            s_half = None
 
     # -- 2. sensitivity estimate (Eq. 22 / Remark 1) -------------------------
     # The t == 0 init needs ||s^(0)||_1 — a full pass over the shared tree.
     # lax.cond keeps that pass out of every steady-state round (it used to
     # run under jnp.where each round); branch selection preserves the exact
     # per-round values.
-    def _s_init():
-        s_l1 = (layout.l1_norm_per_node(s) if packed
-                else tree_l1_norm_per_node(s))
-        return 2.0 * state.sens.c_prime * (s_l1 + eps_l1)
+    with phase(PHASE_DPPS_SENSITIVITY):
+        def _s_init():
+            s_l1 = (layout.l1_norm_per_node(s) if packed
+                    else tree_l1_norm_per_node(s))
+            return 2.0 * state.sens.c_prime * (s_l1 + eps_l1)
 
-    def _s_rec():
-        return state.sens.lam * state.sens.s_local + 2.0 * state.sens.c_prime * (
-            eps_l1 + state.sens.lam * cfg.gamma_n * state.sens.prev_noise_l1
-        )
+        def _s_rec():
+            return state.sens.lam * state.sens.s_local + 2.0 * state.sens.c_prime * (
+                eps_l1 + state.sens.lam * cfg.gamma_n * state.sens.prev_noise_l1
+            )
 
-    s_local = jax.lax.cond(state.t == 0, _s_init, _s_rec)
-    sens = state.sens._replace(s_local=s_local)
-    # scalar all-reduce max (Alg. 1 line 4); pmax over gossip axes when sharded
-    s_net = node_ops.vmax(sens.s_local)
+        s_local = jax.lax.cond(state.t == 0, _s_init, _s_rec)
+        sens = state.sens._replace(s_local=s_local)
+        # scalar all-reduce max (Alg. 1 line 4); pmax over gossip axes
+        # when sharded
+        s_net = node_ops.vmax(sens.s_local)
 
-    # Experiment-only calibration modes (paper Table II/III).
-    if cfg.sensitivity_mode == "real":
-        from repro.core.sensitivity import real_sensitivity
+        # Experiment-only calibration modes (paper Table II/III).
+        if cfg.sensitivity_mode == "real":
+            from repro.core.sensitivity import real_sensitivity
 
-        s_used = real_sensitivity(s_half)
-    elif cfg.sensitivity_mode == "fixed":
-        s_used = jnp.asarray(cfg.fixed_sensitivity, jnp.float32)
-    else:
-        s_used = s_net
+            s_used = real_sensitivity(s_half)
+        elif cfg.sensitivity_mode == "fixed":
+            s_used = jnp.asarray(cfg.fixed_sensitivity, jnp.float32)
+        else:
+            s_used = s_net
 
     # -- 3. Laplace noise (Eq. 8, Lemma 1) -----------------------------------
-    if cfg.noise and cfg.gamma_n > 0:
-        noise_scale = s_used / cfg.b
-        if mechanism is None and cfg.use_kernels:
-            from repro.kernels import ops as kops
+    with phase(PHASE_DPPS_NOISE):
+        if cfg.noise and cfg.gamma_n > 0:
+            noise_scale = s_used / cfg.b
+            if mechanism is None and cfg.use_kernels:
+                from repro.kernels import ops as kops
 
-            # Fused kernel: s + eps + gamma_n * Lap(bits; scale) with the
-            # noise L1 accumulated on-chip (one read+write over d_s) —
-            # called once over the packed buffer instead of per leaf.
-            if packed:
-                s_noise, _, noise_l1 = kops.dpps_perturb_packed(
-                    s, eps, key, noise_scale, cfg.gamma_n, layout.d_s)
+                # Fused kernel: s + eps + gamma_n * Lap(bits; scale) with
+                # the noise L1 accumulated on-chip (one read+write over
+                # d_s) — called once over the packed buffer instead of
+                # per leaf.
+                if packed:
+                    s_noise, _, noise_l1 = kops.dpps_perturb_packed(
+                        s, eps, key, noise_scale, cfg.gamma_n, layout.d_s)
+                else:
+                    s_noise, _, noise_l1 = kops.dpps_perturb_tree(
+                        s, eps, key, noise_scale, cfg.gamma_n)
+            elif packed:
+                # One draw + one fused scaled-add + one reduce over the
+                # flat wire row — the same row order (and so the same
+                # bits) as the pytree oracle's noise_wire draw and
+                # flat-row norms. A mechanism's leaf tree is flattened
+                # back to the row first (for LaplaceMechanism those
+                # leaves are views of one noise_wire row, so the flatten
+                # is free and bit-identity with mechanism=None is
+                # preserved).
+                if mechanism is not None:
+                    flat_noise = layout.flat_row(mechanism.sample(
+                        key, layout.view_tree(s_half), noise_scale,
+                        node_ops=node_ops))
+                else:
+                    flat_noise = layout.laplace_noise_flat(key, n_nodes,
+                                                           noise_scale)
+                noise_l1 = jnp.sum(jnp.abs(flat_noise), axis=-1)
+                s_noise = layout.append_pad(
+                    layout.wire_slice(s_half) + cfg.gamma_n * flat_noise,
+                    s_half)
             else:
-                s_noise, _, noise_l1 = kops.dpps_perturb_tree(
-                    s, eps, key, noise_scale, cfg.gamma_n)
-        elif packed:
-            # One draw + one fused scaled-add + one reduce over the flat
-            # wire row — the same row order (and so the same bits) as the
-            # pytree oracle's noise_wire draw and flat-row norms. A
-            # mechanism's leaf tree is flattened back to the row first
-            # (for LaplaceMechanism those leaves are views of one
-            # noise_wire row, so the flatten is free and bit-identity with
-            # mechanism=None is preserved).
-            if mechanism is not None:
-                flat_noise = layout.flat_row(mechanism.sample(
-                    key, layout.view_tree(s_half), noise_scale,
-                    node_ops=node_ops))
-            else:
-                flat_noise = layout.laplace_noise_flat(key, n_nodes,
-                                                       noise_scale)
-            noise_l1 = jnp.sum(jnp.abs(flat_noise), axis=-1)
-            s_noise = layout.append_pad(
-                layout.wire_slice(s_half) + cfg.gamma_n * flat_noise, s_half)
+                noise = (mechanism.sample(key, s_half, noise_scale,
+                                          node_ops=node_ops)
+                         if mechanism is not None
+                         else _draw_noise(key, s_half, noise_scale, False))
+                noise_l1 = tree_l1_norm_per_node(noise)
+                s_noise = jax.tree_util.tree_map(
+                    lambda x, n: x + cfg.gamma_n * n.astype(x.dtype),
+                    s_half, noise
+                )
+            # The noised message is the round's wire payload: pin it with
+            # a barrier so every consumer (gossip, sync, the transcript
+            # tap) reads one materialized value instead of re-deriving it
+            # under a different fusion/contraction context — recomputation
+            # is what lets the packed and pytree programs drift by the
+            # last ulp.
+            s_noise = jax.lax.optimization_barrier(s_noise)
         else:
-            noise = (mechanism.sample(key, s_half, noise_scale,
-                                      node_ops=node_ops)
-                     if mechanism is not None
-                     else _draw_noise(key, s_half, noise_scale, False))
-            noise_l1 = tree_l1_norm_per_node(noise)
-            s_noise = jax.tree_util.tree_map(
-                lambda x, n: x + cfg.gamma_n * n.astype(x.dtype), s_half, noise
-            )
-        # The noised message is the round's wire payload: pin it with a
-        # barrier so every consumer (gossip, sync, the transcript tap)
-        # reads one materialized value instead of re-deriving it under a
-        # different fusion/contraction context — recomputation is what
-        # lets the packed and pytree programs drift by the last ulp.
-        s_noise = jax.lax.optimization_barrier(s_noise)
-    else:
-        noise_l1 = jnp.zeros((n_nodes,), jnp.float32)
-        s_noise = s_half
-    sens = sens._replace(prev_noise_l1=noise_l1)
+            noise_l1 = jnp.zeros((n_nodes,), jnp.float32)
+            s_noise = s_half
+        sens = sens._replace(prev_noise_l1=noise_l1)
 
     # -- 4. gossip (Eq. 9) ----------------------------------------------------
     push_half = PushSumState(s=s_noise, a=state.push.a)
-    if gossip_fn is not None:
-        if packed and cfg.wire_dtype != "f32":
-            raise NotImplementedError(
-                "bf16 wire + custom gossip_fn (sharded engine) is not "
-                "implemented; use wire_dtype='f32' on the mesh")
-        push_new = gossip_fn(push_half)
-    elif packed:
-        if cfg.schedule == "circulant":
+    with phase(PHASE_DPPS_GOSSIP):
+        if gossip_fn is not None:
+            if packed and cfg.wire_dtype != "f32":
+                raise NotImplementedError(
+                    "bf16 wire + custom gossip_fn (sharded engine) is not "
+                    "implemented; use wire_dtype='f32' on the mesh")
+            push_new = gossip_fn(push_half)
+        elif packed:
+            if cfg.schedule == "circulant":
+                if offsets is None:
+                    raise ValueError("circulant schedule requires offsets=")
+                push_new = gossip_packed(push_half, offsets=offsets,
+                                         weights=mix_weights,
+                                         wire_dtype=cfg.wire_dtype)
+            elif cfg.schedule == "sparse":
+                if sparse_idx is None:
+                    raise ValueError(
+                        "sparse schedule requires sparse_idx=/sparse_vals=")
+                push_new = gossip_packed(push_half, sparse_idx=sparse_idx,
+                                         sparse_vals=sparse_vals,
+                                         wire_dtype=cfg.wire_dtype,
+                                         use_kernels=cfg.use_kernels)
+            else:
+                if w is None:
+                    raise ValueError("dense schedule requires w=")
+                push_new = gossip_packed(push_half, w=w,
+                                         wire_dtype=cfg.wire_dtype,
+                                         use_kernels=cfg.use_kernels)
+        elif cfg.schedule == "circulant":
             if offsets is None:
                 raise ValueError("circulant schedule requires offsets=")
-            push_new = gossip_packed(push_half, offsets=offsets,
-                                     weights=mix_weights,
-                                     wire_dtype=cfg.wire_dtype)
+            if mix_weights is None:
+                mix_weights = jnp.full((len(offsets),), 1.0 / len(offsets),
+                                       jnp.float32)
+            push_new = gossip_circulant(push_half, offsets, mix_weights)
         elif cfg.schedule == "sparse":
             if sparse_idx is None:
                 raise ValueError(
                     "sparse schedule requires sparse_idx=/sparse_vals=")
-            push_new = gossip_packed(push_half, sparse_idx=sparse_idx,
-                                     sparse_vals=sparse_vals,
-                                     wire_dtype=cfg.wire_dtype,
+            push_new = gossip_sparse(push_half, sparse_idx, sparse_vals,
                                      use_kernels=cfg.use_kernels)
         else:
             if w is None:
                 raise ValueError("dense schedule requires w=")
-            push_new = gossip_packed(push_half, w=w,
-                                     wire_dtype=cfg.wire_dtype,
-                                     use_kernels=cfg.use_kernels)
-    elif cfg.schedule == "circulant":
-        if offsets is None:
-            raise ValueError("circulant schedule requires offsets=")
-        if mix_weights is None:
-            mix_weights = jnp.full((len(offsets),), 1.0 / len(offsets), jnp.float32)
-        push_new = gossip_circulant(push_half, offsets, mix_weights)
-    elif cfg.schedule == "sparse":
-        if sparse_idx is None:
-            raise ValueError("sparse schedule requires sparse_idx=/sparse_vals=")
-        push_new = gossip_sparse(push_half, sparse_idx, sparse_vals,
-                                 use_kernels=cfg.use_kernels)
-    else:
-        if w is None:
-            raise ValueError("dense schedule requires w=")
-        push_new = gossip_dense(push_half, w, use_kernels=cfg.use_kernels)
+            push_new = gossip_dense(push_half, w, use_kernels=cfg.use_kernels)
 
     # Optional synchronization (paper SIII.C): exact averaging of the
     # *noised* parameters, resetting consensus error and the sensitivity
@@ -412,43 +441,45 @@ def dpps_step(
     # averaging and the reset norm entirely (they used to be computed
     # every round under jnp.where).
     if cfg.sync_interval > 0:
-        do_sync = is_sync_round(state.t, cfg.sync_interval)
+        with phase(PHASE_DPPS_SYNC):
+            do_sync = is_sync_round(state.t, cfg.sync_interval)
 
-        def _synced():
-            # Every synced node holds the same mean, so the reset norm is
-            # the norm of the (1, d) mean broadcast to (N,) — one leaf-dim
-            # pass instead of N. The packed branch averages per leaf view
-            # (not over the whole buffer): the column means must come from
-            # the same per-leaf row reductions as the pytree oracle's or
-            # the tiny tail leaves pick up a reassociation ulp. lax.cond
-            # keeps all of this off the non-sync rounds.
-            views = layout.view_tree(s_noise) if packed else s_noise
-            means = jax.tree_util.tree_map(node_ops.leaf_mean, views)
-            mean_l1 = tree_l1_norm_per_node(means)             # (1,)
-            if packed:
-                bcast = jax.tree_util.tree_map(
-                    lambda m: jnp.broadcast_to(
-                        m, (n_nodes,) + m.shape[1:]).astype(jnp.float32),
-                    means)
-                s_mixed = layout.append_pad(layout.flat_row(bcast),
-                                            push_new.s)
-            else:
-                s_mixed = jax.tree_util.tree_map(
-                    lambda mixed, m: jnp.broadcast_to(
-                        m, (n_nodes,) + m.shape[1:]).astype(mixed.dtype),
-                    push_new.s, means)
-            s_reset = jnp.broadcast_to(2.0 * sens.c_prime * mean_l1,
-                                       (n_nodes,))
-            return (s_mixed, jnp.ones_like(push_new.a), s_reset,
-                    jnp.zeros_like(noise_l1))
+            def _synced():
+                # Every synced node holds the same mean, so the reset norm
+                # is the norm of the (1, d) mean broadcast to (N,) — one
+                # leaf-dim pass instead of N. The packed branch averages
+                # per leaf view (not over the whole buffer): the column
+                # means must come from the same per-leaf row reductions as
+                # the pytree oracle's or the tiny tail leaves pick up a
+                # reassociation ulp. lax.cond keeps all of this off the
+                # non-sync rounds.
+                views = layout.view_tree(s_noise) if packed else s_noise
+                means = jax.tree_util.tree_map(node_ops.leaf_mean, views)
+                mean_l1 = tree_l1_norm_per_node(means)             # (1,)
+                if packed:
+                    bcast = jax.tree_util.tree_map(
+                        lambda m: jnp.broadcast_to(
+                            m, (n_nodes,) + m.shape[1:]).astype(jnp.float32),
+                        means)
+                    s_mixed = layout.append_pad(layout.flat_row(bcast),
+                                                push_new.s)
+                else:
+                    s_mixed = jax.tree_util.tree_map(
+                        lambda mixed, m: jnp.broadcast_to(
+                            m, (n_nodes,) + m.shape[1:]).astype(mixed.dtype),
+                        push_new.s, means)
+                s_reset = jnp.broadcast_to(2.0 * sens.c_prime * mean_l1,
+                                           (n_nodes,))
+                return (s_mixed, jnp.ones_like(push_new.a), s_reset,
+                        jnp.zeros_like(noise_l1))
 
-        def _unsynced():
-            return push_new.s, push_new.a, sens.s_local, noise_l1
+            def _unsynced():
+                return push_new.s, push_new.a, sens.s_local, noise_l1
 
-        s_mixed, a_mixed, s_loc, prev_l1 = jax.lax.cond(
-            do_sync, _synced, _unsynced)
-        push_new = PushSumState(s=s_mixed, a=a_mixed)
-        sens = sens._replace(s_local=s_loc, prev_noise_l1=prev_l1)
+            s_mixed, a_mixed, s_loc, prev_l1 = jax.lax.cond(
+                do_sync, _synced, _unsynced)
+            push_new = PushSumState(s=s_mixed, a=a_mixed)
+            sens = sens._replace(s_local=s_loc, prev_noise_l1=prev_l1)
 
     new_state = DPPSState(push=push_new, sens=sens, t=state.t + 1)
 
@@ -461,6 +492,17 @@ def dpps_step(
         "a_min": node_ops.vmin(push_new.a),
         "a_max": node_ops.vmax(push_new.a),
     }
+    if return_wire_stats:
+        # Watchdog diagnostics (repro.obs.watchdog) — computed inside the
+        # scan so a hook can see every round, judged host-side at segment
+        # boundaries. Off by default: the hookless program stays pinned.
+        with phase(PHASE_DPPS_WIRE_STATS):
+            diag["wd_nonfinite"] = sum(
+                jnp.sum(~jnp.isfinite(leaf)).astype(jnp.int32)
+                for leaf in jax.tree_util.tree_leaves(s_noise))
+            diag["wd_mass_drift"] = jnp.abs(jnp.mean(push_new.a) - 1.0)
+            diag["wd_consensus_residual"] = consensus_error(
+                correct(push_new.s, push_new.a))
     if tap is not None:
         # Wire-visible payloads of this round (see repro.audit.transcript):
         # every node broadcasts its noised message s_noise + push-sum weight

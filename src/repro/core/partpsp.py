@@ -49,6 +49,12 @@ from repro.core.partition import SHARE_ALL, Partition
 from repro.core.privacy import PrivacyAccountant, l1_clip_per_node
 from repro.core.pushsum import correct
 from repro.core.tree_utils import PyTree, tree_node_mean
+from repro.obs.trace import (
+    PHASE_CLIP,
+    PHASE_GRADS_LOCAL,
+    PHASE_GRADS_SHARED,
+    phase,
+)
 
 __all__ = [
     "PartPSPConfig",
@@ -151,6 +157,7 @@ def partpsp_step(
     sparse_idx: jnp.ndarray | None = None,
     sparse_vals: jnp.ndarray | None = None,
     return_s_half: bool = False,
+    return_wire_stats: bool = False,
     gossip_fn: Any = None,
     node_ops: NodeOps = LOCAL_NODE_OPS,
     mechanism: Any = None,
@@ -182,47 +189,52 @@ def partpsp_step(
     y = layout.unpack(y_rep) if layout is not None else y_rep
 
     # --- pass 1: local-parameter gradient at (y, l_t) — Eq. (5) -------------
-    params_t = partition.merge(y, state.local)
-    losses, grads_t = _node_grads(loss_fn, params_t, batch, node_keys1)
-    _, g_local = partition.split(grads_t)
-    local_new = [
-        l - cfg.gamma_l * g.astype(l.dtype) for l, g in zip(state.local, g_local)
-    ]
+    with phase(PHASE_GRADS_LOCAL):
+        params_t = partition.merge(y, state.local)
+        losses, grads_t = _node_grads(loss_fn, params_t, batch, node_keys1)
+        _, g_local = partition.split(grads_t)
+        local_new = [
+            l - cfg.gamma_l * g.astype(l.dtype)
+            for l, g in zip(state.local, g_local)
+        ]
 
     # --- pass 2: shared-parameter gradient at (y, l_{t+1}) — Eq. (6) --------
-    if cfg.two_pass:
-        params_t1 = partition.merge(y, local_new)
-        _, grads_t1 = _node_grads(loss_fn, params_t1, batch, node_keys2)
-        g_shared, _ = partition.split(grads_t1)
-    else:
-        # Fused single-pass variant (beyond-paper efficiency option; uses
-        # grads at (y, l_t) for both updates).
-        g_shared, _ = partition.split(grads_t)
+    with phase(PHASE_GRADS_SHARED):
+        if cfg.two_pass:
+            params_t1 = partition.merge(y, local_new)
+            _, grads_t1 = _node_grads(loss_fn, params_t1, batch, node_keys2)
+            g_shared, _ = partition.split(grads_t1)
+        else:
+            # Fused single-pass variant (beyond-paper efficiency option;
+            # uses grads at (y, l_t) for both updates).
+            g_shared, _ = partition.split(grads_t)
 
     # --- clip (Eq. 24) and form the DPPS perturbation (Eq. 25) --------------
-    if cfg.clip > 0:
-        g_shared, g_norms = l1_clip_per_node(g_shared, cfg.clip)
-    else:
-        from repro.core.tree_utils import tree_l1_norm_per_node
+    with phase(PHASE_CLIP):
+        if cfg.clip > 0:
+            g_shared, g_norms = l1_clip_per_node(g_shared, cfg.clip)
+        else:
+            from repro.core.tree_utils import tree_l1_norm_per_node
 
-        g_norms = (tree_l1_norm_per_node(g_shared) if g_shared
-                   else jnp.zeros((n_nodes,)))
-    if layout is not None:
-        # Identical per-leaf expression to the pytree path (its
-        # bit-equivalence oracle); the leaves go to dpps_step un-packed so
-        # the packed perturb add keeps each -gamma_s * g in its own
-        # region (PackedLayout.add_wire).
-        eps: Any = [(-cfg.gamma_s * g).astype(jnp.float32) for g in g_shared]
-    else:
-        eps = [(-cfg.gamma_s * g).astype(s.dtype)
-               for g, s in zip(g_shared, shared_buf)]
+            g_norms = (tree_l1_norm_per_node(g_shared) if g_shared
+                       else jnp.zeros((n_nodes,)))
+        if layout is not None:
+            # Identical per-leaf expression to the pytree path (its
+            # bit-equivalence oracle); the leaves go to dpps_step un-packed
+            # so the packed perturb add keeps each -gamma_s * g in its own
+            # region (PackedLayout.add_wire).
+            eps: Any = [(-cfg.gamma_s * g).astype(jnp.float32)
+                        for g in g_shared]
+        else:
+            eps = [(-cfg.gamma_s * g).astype(s.dtype)
+                   for g, s in zip(g_shared, shared_buf)]
 
     # --- DPPS round on the shared leaves -------------------------------------
     dpps_new, diag = dpps_step(
         state.dpps, eps, key_noise, cfg.dpps,
         w=w, offsets=offsets, mix_weights=mix_weights,
         sparse_idx=sparse_idx, sparse_vals=sparse_vals,
-        return_s_half=return_s_half,
+        return_s_half=return_s_half, return_wire_stats=return_wire_stats,
         gossip_fn=gossip_fn, node_ops=node_ops,
         mechanism=mechanism, tap=tap, layout=layout,
     )

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tree_utils import PyTree
+from repro.obs.trace import PHASE_PUSHSUM_MIX, phase
 
 __all__ = [
     "PushSumState",
@@ -139,14 +140,16 @@ def gossip_dense(state: PushSumState, w: jnp.ndarray, *,
     kernel counterpart (its rolls are permutations, not contractions);
     see :func:`gossip_circulant`.
     """
-    if use_kernels:
-        from repro.kernels import ops as kops
+    with phase(PHASE_PUSHSUM_MIX):
+        if use_kernels:
+            from repro.kernels import ops as kops
 
-        s_new = jax.tree_util.tree_map(lambda x: kops.pushsum_mix(w, x),
-                                       state.s)
-    else:
-        s_new = jax.tree_util.tree_map(lambda x: _mix_dense(w, x), state.s)
-    a_new = _mix_dense(w, state.a)
+            s_new = jax.tree_util.tree_map(lambda x: kops.pushsum_mix(w, x),
+                                           state.s)
+        else:
+            s_new = jax.tree_util.tree_map(lambda x: _mix_dense(w, x),
+                                           state.s)
+        a_new = _mix_dense(w, state.a)
     return PushSumState(s=s_new, a=a_new)
 
 
@@ -169,10 +172,11 @@ def gossip_circulant(
     collective-permute, giving the cheap schedule described above.
     """
     offsets = tuple(int(o) for o in offsets)
-    s_new = jax.tree_util.tree_map(
-        lambda x: _mix_circulant(offsets, weights, x), state.s
-    )
-    a_new = _mix_circulant(offsets, weights, state.a)
+    with phase(PHASE_PUSHSUM_MIX):
+        s_new = jax.tree_util.tree_map(
+            lambda x: _mix_circulant(offsets, weights, x), state.s
+        )
+        a_new = _mix_circulant(offsets, weights, state.a)
     return PushSumState(s=s_new, a=a_new)
 
 
@@ -189,15 +193,16 @@ def gossip_sparse(
     ``repro.kernels.ops.pushsum_mix_sparse``; the (N,) push-sum weights
     stay on the jnp path — too small to tile.
     """
-    if use_kernels:
-        from repro.kernels import ops as kops
+    with phase(PHASE_PUSHSUM_MIX):
+        if use_kernels:
+            from repro.kernels import ops as kops
 
-        s_new = jax.tree_util.tree_map(
-            lambda x: kops.pushsum_mix_sparse(idx, vals, x), state.s)
-    else:
-        s_new = jax.tree_util.tree_map(
-            lambda x: sparse_mix(idx, vals, x), state.s)
-    a_new = sparse_mix(idx, vals, state.a)
+            s_new = jax.tree_util.tree_map(
+                lambda x: kops.pushsum_mix_sparse(idx, vals, x), state.s)
+        else:
+            s_new = jax.tree_util.tree_map(
+                lambda x: sparse_mix(idx, vals, x), state.s)
+        a_new = sparse_mix(idx, vals, state.a)
     return PushSumState(s=s_new, a=a_new)
 
 
@@ -226,58 +231,63 @@ def gossip_packed(
     """
     buf = state.s
     bf16 = wire_dtype == "bf16"
-    wire = buf.astype(jnp.bfloat16) if bf16 else buf
-    if offsets is not None:
-        offsets = tuple(int(o) for o in offsets)
-        if weights is None:
-            weights = jnp.full((len(offsets),), 1.0 / len(offsets), jnp.float32)
+    with phase(PHASE_PUSHSUM_MIX):
+        wire = buf.astype(jnp.bfloat16) if bf16 else buf
+        if offsets is not None:
+            offsets = tuple(int(o) for o in offsets)
+            if weights is None:
+                weights = jnp.full((len(offsets),), 1.0 / len(offsets),
+                                   jnp.float32)
+            if bf16:
+                # accumulate in fp32: each rolled bf16 message is upcast
+                # before the weighted sum (the cast is the wire round-trip).
+                acc = weights[0] * (wire if offsets[0] == 0 else
+                                    jnp.roll(wire, offsets[0], axis=0)
+                                    ).astype(jnp.float32)
+                for k, off in enumerate(offsets[1:], start=1):
+                    acc = acc + weights[k] * jnp.roll(
+                        wire, off, axis=0).astype(jnp.float32)
+                s_new = acc
+            else:
+                s_new = _mix_circulant(offsets, weights, wire)
+            a_new = _mix_circulant(offsets, weights, state.a)
+            return PushSumState(s=s_new, a=a_new)
+        if sparse_idx is not None:
+            if bf16:
+                # Mirror the dense bf16 contract: bf16 messages, fp32
+                # accumulation, fp32 result (no kernel for the same reason
+                # as the dense branch below).
+                g = wire[sparse_idx]  # (N, K, d_pad) bf16
+                s_new = jnp.einsum("nk,nkd->nd", sparse_vals, g,
+                                   preferred_element_type=jnp.float32)
+            elif use_kernels:
+                from repro.kernels import ops as kops
+
+                s_new = kops.pushsum_mix_sparse(sparse_idx, sparse_vals,
+                                                wire)
+            else:
+                s_new = sparse_mix(sparse_idx, sparse_vals, wire)
+            a_new = sparse_mix(sparse_idx, sparse_vals, state.a)
+            return PushSumState(s=s_new, a=a_new)
+        if w is None:
+            raise ValueError(
+                "gossip_packed() needs w=, offsets=, or "
+                "sparse_idx=/sparse_vals=")
         if bf16:
-            # accumulate in fp32: each rolled bf16 message is upcast before
-            # the weighted sum (the cast is the wire round-trip).
-            acc = weights[0] * (wire if offsets[0] == 0 else
-                                jnp.roll(wire, offsets[0], axis=0)
-                                ).astype(jnp.float32)
-            for k, off in enumerate(offsets[1:], start=1):
-                acc = acc + weights[k] * jnp.roll(wire, off, axis=0).astype(
-                    jnp.float32)
-            s_new = acc
-        else:
-            s_new = _mix_circulant(offsets, weights, wire)
-        a_new = _mix_circulant(offsets, weights, state.a)
-        return PushSumState(s=s_new, a=a_new)
-    if sparse_idx is not None:
-        if bf16:
-            # Mirror the dense bf16 contract: bf16 messages, fp32
-            # accumulation, fp32 result (no kernel for the same reason as
-            # the dense branch below).
-            g = wire[sparse_idx]  # (N, K, d_pad) bf16
-            s_new = jnp.einsum("nk,nkd->nd", sparse_vals, g,
+            # Always the einsum here, even under use_kernels: the
+            # pushsum_mix kernel writes its accumulator back in the wire
+            # dtype, which would re-quantize the mixed state to bf16 every
+            # round — the wire format's contract is bf16 messages with an
+            # fp32 result.
+            s_new = jnp.einsum("ij,jd->id", w, wire,
                                preferred_element_type=jnp.float32)
         elif use_kernels:
             from repro.kernels import ops as kops
 
-            s_new = kops.pushsum_mix_sparse(sparse_idx, sparse_vals, wire)
+            s_new = kops.pushsum_mix(w, wire)
         else:
-            s_new = sparse_mix(sparse_idx, sparse_vals, wire)
-        a_new = sparse_mix(sparse_idx, sparse_vals, state.a)
-        return PushSumState(s=s_new, a=a_new)
-    if w is None:
-        raise ValueError(
-            "gossip_packed() needs w=, offsets=, or sparse_idx=/sparse_vals=")
-    if bf16:
-        # Always the einsum here, even under use_kernels: the pushsum_mix
-        # kernel writes its accumulator back in the wire dtype, which
-        # would re-quantize the mixed state to bf16 every round — the
-        # wire format's contract is bf16 messages with an fp32 result.
-        s_new = jnp.einsum("ij,jd->id", w, wire,
-                           preferred_element_type=jnp.float32)
-    elif use_kernels:
-        from repro.kernels import ops as kops
-
-        s_new = kops.pushsum_mix(w, wire)
-    else:
-        s_new = _mix_dense(w, wire)
-    a_new = _mix_dense(w, state.a)
+            s_new = _mix_dense(w, wire)
+        a_new = _mix_dense(w, state.a)
     return PushSumState(s=s_new, a=a_new)
 
 

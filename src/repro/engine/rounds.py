@@ -63,6 +63,12 @@ from repro.core.partpsp import PartPSPConfig, PartPSPState, partpsp_step
 from repro.core.pushsum import PushSumState
 from repro.core.tree_utils import PyTree
 from repro.engine.plan import ProtocolPlan
+from repro.obs.trace import (
+    PHASE_FAULTS,
+    PHASE_PACK,
+    PHASE_UNPACK,
+    phase,
+)
 
 __all__ = ["run_dpps", "run_partpsp", "run_decode", "run_segments",
            "stack_rounds", "wire_layout"]
@@ -80,7 +86,7 @@ def _warn_once(key: str, message: str) -> None:
 
 
 def _resolve_hooks(hooks: Sequence[Any], tap, track_real: bool, caller: str):
-    """Hook pipeline + deprecated kwarg adapters -> (hooks, tap, s_half?).
+    """Hook pipeline + deprecated kwarg adapters -> (hooks, TraceSpec).
 
     ``tap=`` and ``track_real=`` predate the hook pipeline (PR 2); they now
     adapt into the equivalent first-class hooks (repro.api.hooks) so the
@@ -104,8 +110,7 @@ def _resolve_hooks(hooks: Sequence[Any], tap, track_real: bool, caller: str):
         hooks += (RealSensitivityHook(),)
     from repro.api.hooks import hook_trace_spec
 
-    tap, need_s_half = hook_trace_spec(hooks)
-    return hooks, tap, need_s_half
+    return hooks, hook_trace_spec(hooks)
 
 
 def stack_rounds(make_round: Callable[[int], PyTree], t0: int, n: int) -> PyTree:
@@ -173,23 +178,19 @@ def _realize_faults(plan: ProtocolPlan, kwargs: dict[str, Any],
     renormalize the round's edge-list weights in place
     (``FaultModel.realize_sparse``) — the dense W never exists.
     """
-    if "sparse_idx" in kwargs:
-        vals_real, net = plan.faults.realize_sparse(
-            kwargs["sparse_idx"], kwargs["sparse_vals"],
-            plan.faults.fault_key(round_key), t,
+    with phase(PHASE_FAULTS):
+        if "sparse_idx" in kwargs:
+            vals_real, net = plan.faults.realize_sparse(
+                kwargs["sparse_idx"], kwargs["sparse_vals"],
+                plan.faults.fault_key(round_key), t,
+                with_adjacency=with_adjacency)
+            kwargs["sparse_vals"] = vals_real
+            return net
+        w_real, net = plan.faults.realize(
+            kwargs["w"], plan.faults.fault_key(round_key), t,
             with_adjacency=with_adjacency)
-        kwargs["sparse_vals"] = vals_real
+        kwargs["w"] = w_real
         return net
-    w_real, net = plan.faults.realize(
-        kwargs["w"], plan.faults.fault_key(round_key), t,
-        with_adjacency=with_adjacency)
-    kwargs["w"] = w_real
-    return net
-
-
-def _needs_adjacency(hooks: Sequence[Any]) -> bool:
-    """Whether any attached hook wants the per-round realized adjacency."""
-    return any(getattr(h, "needs_adjacency", False) for h in hooks)
 
 
 def _capture(diag: dict[str, Any], hooks: Sequence[Any]) -> dict[str, Any]:
@@ -228,13 +229,16 @@ def wire_layout(plan: ProtocolPlan, shared: PyTree) -> PackedLayout | None:
 
 
 def _pack_dpps(state: DPPSState, layout: PackedLayout) -> DPPSState:
-    return state._replace(push=PushSumState(s=layout.pack(state.push.s),
-                                            a=state.push.a))
+    with phase(PHASE_PACK):
+        return state._replace(push=PushSumState(s=layout.pack(state.push.s),
+                                                a=state.push.a))
 
 
 def _unpack_dpps(state: DPPSState, layout: PackedLayout) -> DPPSState:
-    return state._replace(push=PushSumState(s=layout.unpack(state.push.s),
-                                            a=state.push.a))
+    with phase(PHASE_UNPACK):
+        return state._replace(
+            push=PushSumState(s=layout.unpack(state.push.s),
+                              a=state.push.a))
 
 
 def run_dpps(
@@ -275,10 +279,9 @@ def run_dpps(
     :class:`repro.audit.mechanisms.NoiseMechanism`; it changes the traced
     program (not an observer), so it stays a first-class kwarg.
     """
-    hooks, tap, need_s_half = _resolve_hooks(hooks, tap, track_real,
-                                             "run_dpps")
+    hooks, spec = _resolve_hooks(hooks, tap, track_real, "run_dpps")
     dynamic = _check_dynamic(plan, _gossip_builder)
-    want_adj = dynamic and _needs_adjacency(hooks)
+    want_adj = dynamic and spec.needs_adjacency
     cfg = plan.resolve_dpps(cfg)
     layout = wire_layout(plan, state.push.s)
     if layout is not None:
@@ -313,9 +316,10 @@ def run_dpps(
         net = (_realize_faults(plan, kwargs, k, st.t, want_adj)
                if dynamic else None)
         st2, diag = dpps_step(st, eps_at(x), k, cfg,
-                              return_s_half=need_s_half,
-                              mechanism=mechanism, tap=tap, layout=layout,
-                              **kwargs)
+                              return_s_half=spec.needs_s_half,
+                              return_wire_stats=spec.needs_wire_stats,
+                              mechanism=mechanism, tap=spec.tap,
+                              layout=layout, **kwargs)
         if net is not None:
             diag.update(net)
         return st2, _capture(diag, hooks)
@@ -352,10 +356,9 @@ def run_partpsp(
     deprecated adapters (see :func:`run_dpps`); ``mechanism`` swaps the
     noise draw. All are zero-cost at their defaults.
     """
-    hooks, tap, need_s_half = _resolve_hooks(hooks, tap, track_real,
-                                             "run_partpsp")
+    hooks, spec = _resolve_hooks(hooks, tap, track_real, "run_partpsp")
     dynamic = _check_dynamic(plan, _gossip_builder)
-    want_adj = dynamic and _needs_adjacency(hooks)
+    want_adj = dynamic and spec.needs_adjacency
     cfg = plan.resolve_partpsp(cfg)
     layout = wire_layout(plan, state.dpps.push.s)
     if layout is not None:
@@ -369,9 +372,11 @@ def run_partpsp(
         net = (_realize_faults(plan, kwargs, k, st.dpps.t, want_adj)
                if dynamic else None)
         st2, m = partpsp_step(st, batch_t, k, cfg=cfg, partition=partition,
-                              loss_fn=loss_fn, return_s_half=need_s_half,
-                              mechanism=mechanism, tap=tap, layout=layout,
-                              **kwargs)
+                              loss_fn=loss_fn,
+                              return_s_half=spec.needs_s_half,
+                              return_wire_stats=spec.needs_wire_stats,
+                              mechanism=mechanism, tap=spec.tap,
+                              layout=layout, **kwargs)
         if net is not None:
             m.update(net)
         return st2, _capture(m, hooks)

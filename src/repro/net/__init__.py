@@ -19,9 +19,10 @@ realistic ones and breaks them the way production networks do:
 Wire-up: ``Session.build(topology=..., faults=FaultModel(...))`` threads a
 fault model end to end (the plan switches to the ``dynamic`` schedule);
 ``benchmarks/fig_resilience.py`` sweeps drop rates and tracks
-``BENCH_net.json``. This package never imports ``repro.api`` at module
-scope — the session front door imports nothing from here either, so the
-dependency edge stays one-way at runtime (duck-typed hooks/plans).
+``BENCH_net.json``. The dependency edge to the front door is one-way:
+``stats.py`` subclasses :class:`repro.api.hooks.RoundHook`, and
+``repro.api`` only ever imports this package inside function bodies
+(graphs/faults stay import-free of ``repro.api`` entirely).
 """
 from repro.net.faults import FAULT_SALT, FaultModel
 from repro.net.graphs import (

@@ -9,12 +9,14 @@ turns the engine's per-round network diagnostics into a typed record:
   realized out-degree floor, Assumption-1 B-window connectivity over the
   *realized* graphs, and effective wire bytes (realized edges x payload)
   next to the nominal estimate.
-* :class:`NetworkStatsHook` — the session hook that collects them. It is
-  deliberately *not* a subclass of :class:`repro.api.hooks.RoundHook`
-  (``repro.net`` must stay importable without touching the ``repro.api``
-  package init); it implements the same duck-typed protocol — ``tap`` /
-  ``needs_s_half`` attributes plus ``prepare`` / ``capture`` / ``consume``
-  / ``finish`` — which is all the drivers read.
+* :class:`NetworkStatsHook` — the session hook that collects them. A real
+  :class:`repro.api.hooks.RoundHook` subclass since the trace-time
+  declarations (including ``needs_adjacency``) moved into the base class:
+  the import edge ``repro.net -> repro.api`` is safe because ``repro.api``
+  defers every ``repro.net`` import into function bodies (the historical
+  duck-typing existed only to keep that edge one-way). It also publishes
+  per-segment realized/dropped edge counters to the obs bus
+  (``net.realized_edges`` / ``net.dropped_edges``).
 
 Fault-free runs get stats too: when the trajectory carries no ``net_*``
 rows (no masking code was emitted), the hook reconstructs the nominal
@@ -31,6 +33,8 @@ import dataclasses
 from typing import Any
 
 import numpy as np
+
+from repro.api.hooks import RoundHook, _resolve_bus
 
 __all__ = ["NetworkStats", "NetworkStatsHook", "strongly_connected"]
 
@@ -93,8 +97,8 @@ class NetworkStats:
         }
 
 
-class NetworkStatsHook:
-    """Collect :class:`NetworkStats` from a session run (duck-typed hook).
+class NetworkStatsHook(RoundHook):
+    """Collect :class:`NetworkStats` from a session run.
 
     ``b_window`` is the Assumption-1 window length the connectivity check
     slides over the realized graphs; ``None`` defaults to the plan's
@@ -102,18 +106,19 @@ class NetworkStatsHook:
     are returned by :meth:`network_stats` and attached to
     ``RunReport.network`` by the session driver.
 
-    ``needs_adjacency`` asks the dynamic engine to emit the per-round
-    realized (N, N) adjacency into the trajectory — only runs carrying
-    this hook pay for that leaf; fault runs without it record just the
-    (N,) out-degrees and the dropped-edge scalar.
+    ``needs_adjacency`` (a base-class trace declaration) asks the dynamic
+    engine to emit the per-round realized (N, N) adjacency into the
+    trajectory — only runs carrying this hook pay for that leaf; fault
+    runs without it record just the (N,) out-degrees and the dropped-edge
+    scalar. Each consumed segment's realized/dropped non-self edge totals
+    go to the obs ``bus`` as counters.
     """
 
-    tap: Any = None
-    needs_s_half: bool = False
-    needs_adjacency: bool = True
+    needs_adjacency = True
 
-    def __init__(self, b_window: int | None = None):
+    def __init__(self, b_window: int | None = None, *, bus: Any = None):
         self.b_window = b_window
+        self.bus = bus
         self._adj: list[np.ndarray] = []
         self._out_deg: list[np.ndarray] = []
         self._dropped: list[np.ndarray] = []
@@ -144,6 +149,13 @@ class NetworkStatsHook:
         self._adj.append(adj)
         self._out_deg.append(out_deg)
         self._dropped.append(dropped)
+        if adj.shape[0]:
+            eye = np.eye(adj.shape[1], dtype=bool)
+            t_last = t0 + adj.shape[0] - 1
+            bus = self.bus = _resolve_bus(self.bus)
+            bus.count("net.realized_edges",
+                      int((adj & ~eye).sum()), round=t_last)
+            bus.count("net.dropped_edges", int(dropped.sum()), round=t_last)
 
     def finish(self) -> None:  # stats are pulled, not pushed
         pass

@@ -1,0 +1,63 @@
+"""repro.obs — the protocol observability layer.
+
+Four pieces, all wired through the session's RoundHook seam:
+
+* **Phase tracing** (:mod:`repro.obs.trace`): ``jax.named_scope``
+  annotations on the round phases (metadata-only — the golden-HLO pins
+  stay binding) plus the profiling join that turns a ``jax.profiler``
+  trace into a per-phase device-time breakdown
+  (:meth:`repro.api.Session.profile`).
+* **Metrics/event bus** (:mod:`repro.obs.metrics`): one timestamped
+  :class:`Event` schema, counter/gauge/histogram aggregates, and the
+  ``repro.obs`` logger that the hooks' warn/print sinks route through.
+* **Exporters** (:mod:`repro.obs.export`): JSONL event stream +
+  Prometheus text exposition.
+* **Health watchdogs** (:mod:`repro.obs.watchdog`): in-scan traced
+  diagnostics (NaN/Inf wire guard, push-sum mass drift, consensus
+  residual) surfaced as structured :class:`Alert` events at segment
+  boundaries, with warn/abort policies mirroring ``BudgetHook.strict``.
+
+Import discipline: this package imports only jax + stdlib, so the core
+protocol (:mod:`repro.core.dpps`) can annotate phases without an import
+cycle. The watchdog subclasses :class:`repro.api.hooks.RoundHook`, so it
+loads lazily (module ``__getattr__``) — ``repro.obs`` stays importable
+before/without ``repro.api``.
+"""
+from __future__ import annotations
+
+from repro.obs.export import JsonlExporter, prometheus_text, write_prometheus
+from repro.obs.metrics import (
+    Event,
+    MetricsBus,
+    default_bus,
+    get_logger,
+    log_sink,
+)
+from repro.obs.trace import KNOWN_PHASES, ProfileReport, phase
+
+__all__ = [
+    "Alert",
+    "Event",
+    "JsonlExporter",
+    "KNOWN_PHASES",
+    "MetricsBus",
+    "ProfileReport",
+    "WatchdogAbort",
+    "WatchdogHook",
+    "default_bus",
+    "get_logger",
+    "log_sink",
+    "phase",
+    "prometheus_text",
+    "write_prometheus",
+]
+
+_LAZY = ("Alert", "WatchdogAbort", "WatchdogHook")
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.obs import watchdog as _watchdog
+
+        return getattr(_watchdog, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,240 @@
+"""Phase-scoped tracing: named scopes on the round phases + profiling.
+
+:func:`phase` is the annotation the protocol code wraps its phases in —
+a thin veneer over ``jax.named_scope`` that also registers the phase name
+in :data:`KNOWN_PHASES`. Named scopes change only HLO *metadata*
+(``op_name="jit(f)/.../<phase>/<op>"``): the traced ops are identical, so
+the golden-HLO pins (which strip metadata) stay binding — annotating the
+hot path is free by construction, which is the whole point.
+
+The profiling half turns one compiled segment into a
+:class:`ProfileReport`:
+
+* the trace/compile/execute wall-clock split comes from timing
+  ``jit(...).lower()`` / ``.compile()`` / the compiled call separately;
+* the per-phase device-time breakdown comes from capturing a
+  ``jax.profiler`` trace of the execute and joining the xplane events'
+  ``hlo_op`` instruction names against the compiled module's ``op_name``
+  metadata — the only place the phase names survive compilation.
+
+The xplane protobuf lives in TensorFlow's profiler package; when it is
+not importable (the CI runners install jax only) the breakdown degrades
+to empty with an explanatory ``note`` — the wall-clock split never needs
+it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import os
+import re
+from typing import Any
+
+import jax
+
+__all__ = [
+    "KNOWN_PHASES",
+    "PHASE_DPPS_PERTURB",
+    "PHASE_DPPS_SENSITIVITY",
+    "PHASE_DPPS_NOISE",
+    "PHASE_DPPS_GOSSIP",
+    "PHASE_DPPS_SYNC",
+    "PHASE_DPPS_WIRE_STATS",
+    "PHASE_PUSHSUM_MIX",
+    "PHASE_GRADS_LOCAL",
+    "PHASE_GRADS_SHARED",
+    "PHASE_CLIP",
+    "PHASE_PACK",
+    "PHASE_UNPACK",
+    "PHASE_FAULTS",
+    "ProfileReport",
+    "phase",
+    "phase_breakdown",
+    "hlo_phase_map",
+    "xplane_durations",
+]
+
+# Registry of every phase name the protocol code has annotated (insertion
+# ordered). The profiler's HLO join only attributes device time to names
+# registered here; entering a phase() scope registers it.
+KNOWN_PHASES: dict[str, None] = {}
+
+# Canonical phase names (one vocabulary across core/engine/net and the
+# profiler output). Distinctive snake_case tokens: the join looks for them
+# as path components of the op_name metadata.
+PHASE_DPPS_PERTURB = "dpps_perturb"
+PHASE_DPPS_SENSITIVITY = "dpps_sensitivity"
+PHASE_DPPS_NOISE = "dpps_noise"
+PHASE_DPPS_GOSSIP = "dpps_gossip"
+PHASE_DPPS_SYNC = "dpps_sync"
+PHASE_DPPS_WIRE_STATS = "dpps_wire_stats"
+PHASE_PUSHSUM_MIX = "pushsum_mix"   # nests inside dpps_gossip
+PHASE_GRADS_LOCAL = "partpsp_local_grads"
+PHASE_GRADS_SHARED = "partpsp_shared_grads"
+PHASE_CLIP = "partpsp_clip"
+PHASE_PACK = "engine_pack"
+PHASE_UNPACK = "engine_unpack"
+PHASE_FAULTS = "net_faults"
+
+
+def phase(name: str):
+    """Annotate a round phase: ``with phase("dpps_gossip"): ...``.
+
+    Returns ``jax.named_scope(name)`` after registering ``name`` in
+    :data:`KNOWN_PHASES`. Metadata-only — zero traced ops, pinned by the
+    golden-HLO tests.
+    """
+    KNOWN_PHASES.setdefault(name)
+    return jax.named_scope(name)
+
+
+# ---------------------------------------------------------------------------
+# Profiling: wall-clock split + per-phase device-time breakdown
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProfileReport:
+    """One profiled segment (see :meth:`repro.api.Session.profile`).
+
+    ``trace_s`` / ``compile_s`` / ``execute_s`` split the wall clock the
+    lump-sum ``RunReport.wall_clock`` used to conflate; ``phases`` maps
+    phase name -> device seconds (plus ``"unattributed"`` for device time
+    outside any registered phase), summing to ``device_total_s``.
+    """
+
+    rounds: int
+    backend: str
+    trace_s: float
+    compile_s: float
+    execute_s: float
+    phases: dict[str, float]
+    device_total_s: float
+    trace_dir: str | None = None
+    note: str | None = None
+
+    @property
+    def wall_clock(self) -> float:
+        return self.trace_s + self.compile_s + self.execute_s
+
+    def summary(self) -> dict[str, Any]:
+        out: dict[str, Any] = {
+            "rounds": self.rounds,
+            "backend": self.backend,
+            "trace_s": round(self.trace_s, 4),
+            "compile_s": round(self.compile_s, 4),
+            "execute_s": round(self.execute_s, 4),
+            "wall_clock_s": round(self.wall_clock, 4),
+            "device_total_s": round(self.device_total_s, 4),
+            "phases": {k: round(v, 6) for k, v in sorted(
+                self.phases.items(), key=lambda kv: -kv[1])},
+        }
+        if self.note:
+            out["note"] = self.note
+        return out
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def hlo_phase_map(hlo_text: str) -> dict[str, str]:
+    """Compiled HLO text -> {instruction name: phase name}.
+
+    An instruction belongs to a phase when any :data:`KNOWN_PHASES` name
+    appears as a path component of its ``op_name`` metadata (named scopes
+    become path components; fused instructions carry a representative
+    constituent's op_name, which is attribution enough for a breakdown).
+    """
+    phases = set(KNOWN_PHASES)
+    out: dict[str, str] = {}
+    if not phases:
+        return out
+    for line in hlo_text.splitlines():
+        op_name = _OP_NAME_RE.search(line)
+        if op_name is None:
+            continue
+        instr = _INSTR_RE.match(line)
+        if instr is None:
+            continue
+        for part in op_name.group(1).split("/"):
+            if part in phases:
+                out[instr.group(1)] = part
+                break
+    return out
+
+
+def _xplane_files(trace_dir: str) -> list[str]:
+    return sorted(glob.glob(
+        os.path.join(trace_dir, "**", "*.xplane.pb"), recursive=True))
+
+
+def _stat_lookup(plane) -> dict[int, str]:
+    return {sid: meta.name for sid, meta in plane.stat_metadata.items()}
+
+
+def xplane_durations(trace_dir: str) -> dict[str, int] | None:
+    """Profiler trace dir -> {hlo instruction name: duration_ps summed}.
+
+    Returns ``None`` when the xplane protobuf bindings (TensorFlow's
+    profiler package) are unavailable or no trace file was written —
+    callers degrade to an empty breakdown with a note.
+    """
+    try:
+        from tensorflow.tsl.profiler.protobuf import xplane_pb2
+    except Exception:
+        return None
+    files = _xplane_files(trace_dir)
+    if not files:
+        return None
+    durations: dict[str, int] = {}
+    for path in files:
+        space = xplane_pb2.XSpace()
+        with open(path, "rb") as f:
+            space.ParseFromString(f.read())
+        for plane in space.planes:
+            stat_names = _stat_lookup(plane)
+            for line in plane.lines:
+                for event in line.events:
+                    # Only events carrying an "hlo_op" stat are per-op
+                    # executions; everything else on the plane (python
+                    # tracer frames, thunk bookkeeping) nests/overlaps and
+                    # would double-count.
+                    hlo_op = None
+                    for stat in event.stats:
+                        if stat_names.get(stat.metadata_id) != "hlo_op":
+                            continue
+                        kind = stat.WhichOneof("value")
+                        if kind == "str_value":
+                            hlo_op = stat.str_value
+                        elif kind == "ref_value":
+                            hlo_op = stat_names.get(stat.ref_value)
+                        break
+                    if hlo_op:
+                        durations[hlo_op] = (durations.get(hlo_op, 0)
+                                             + int(event.duration_ps))
+    return durations or None
+
+
+def phase_breakdown(
+    hlo_text: str, trace_dir: str
+) -> tuple[dict[str, float], float, str | None]:
+    """Join a profiler trace against compiled HLO metadata.
+
+    Returns ``(phases, device_total_s, note)`` where ``phases`` maps each
+    registered phase (plus ``"unattributed"``) to device seconds.
+    """
+    durations = xplane_durations(trace_dir)
+    if durations is None:
+        return {}, 0.0, ("no per-op device trace (xplane protobuf "
+                         "unavailable or empty trace); wall-clock split "
+                         "only")
+    instr_phase = hlo_phase_map(hlo_text)
+    phases: dict[str, float] = {}
+    total = 0.0
+    for instr, ps in durations.items():
+        seconds = ps * 1e-12
+        total += seconds
+        key = instr_phase.get(instr, "unattributed")
+        phases[key] = phases.get(key, 0.0) + seconds
+    return phases, total, None

@@ -1,0 +1,182 @@
+"""In-scan health watchdogs — traced diagnostics, host-side judgement.
+
+A protocol run can rot silently: a NaN on the wire poisons every
+neighbor within one gossip round, push-sum mass can leak under a buggy
+mixing matrix, consensus can diverge while the loss still prints, and a
+broken sensitivity estimator under-noises the wire (the exact failure
+Remark 1 rules out — so seeing it means the guarantee is void).
+
+:class:`WatchdogHook` watches all four. The first three read the ``wd_*``
+diagnostics the round emits when a hook declares ``needs_wire_stats``
+(:func:`repro.core.dpps.dpps_step` computes them inside the scan — a
+non-finite count over the wire buffer, ``|mean(a) - 1|`` mass drift, and
+the consensus residual of the corrected iterates); the fourth compares
+``sensitivity_real`` rows against the broadcast estimate whenever a
+:class:`repro.api.hooks.RealSensitivityHook` rides the same pipeline.
+Judgement happens at segment boundaries on the host: findings become
+structured :class:`Alert` records, warned through the obs logger, and
+published to the bus as ``alert`` events. ``strict=True`` mirrors
+``BudgetHook.strict``: a critical finding raises :class:`WatchdogAbort`
+(a :class:`repro.api.hooks.RunAbort`) at the boundary and the session
+reports ``aborted=True``.
+
+Zero-cost contract: without this hook no ``wd_*`` code is traced — the
+hookless program stays bit-identical to the golden pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.api.hooks import RoundHook, RunAbort, _default_sink, _resolve_bus
+
+__all__ = ["Alert", "WatchdogAbort", "WatchdogHook"]
+
+# checks -> severity: critical findings abort under strict=True, warnings
+# never do (mass drift and a rising residual are degradation signals; a
+# non-finite wire or a violated sensitivity bound is a broken run).
+_SEVERITY = {
+    "nonfinite_wire": "critical",
+    "sensitivity_gap": "critical",
+    "mass_drift": "warn",
+    "residual_trend": "warn",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Alert:
+    """One watchdog finding, surfaced at a segment boundary."""
+
+    round: int
+    check: str       # nonfinite_wire | mass_drift | residual_trend | sensitivity_gap
+    severity: str    # "warn" | "critical"
+    value: float
+    threshold: float
+    message: str
+
+
+class WatchdogAbort(RunAbort):
+    """Raised by a strict :class:`WatchdogHook` on a critical finding;
+    the session catches it at the segment boundary and reports
+    ``aborted=True`` (same enforcement granularity as the budget)."""
+
+    def __init__(self, message: str, alert: Alert):
+        super().__init__(message)
+        self.alert = alert
+
+
+class WatchdogHook(RoundHook):
+    """Watch the run's health (module docstring). Thresholds:
+
+    * ``mass_tol``      — ``|mean(a) - 1|`` above this warns (push-sum
+      with column-stochastic W conserves total mass exactly; drift is
+      f32 rounding, so the default is generous at 1e-3).
+    * ``trend_window`` / ``trend_factor`` — the consensus residual's
+      trailing window; when the newer half's mean exceeds
+      ``trend_factor`` x the older half's, consensus is diverging.
+    * ``gap_tol``       — slack on real > estimate sensitivity violations
+      (matches :class:`RealSensitivityHook`'s tolerance).
+
+    ``alerts`` accumulates every finding; each is warned once through
+    ``warn`` (default: the obs logger) and published to ``bus`` as an
+    ``alert`` event named ``watchdog.<check>``.
+    """
+
+    needs_wire_stats = True
+
+    def __init__(self, *, strict: bool = False, mass_tol: float = 1e-3,
+                 trend_window: int = 20, trend_factor: float = 4.0,
+                 gap_tol: float = 1e-6,
+                 warn: Callable[[str], None] | None = None,
+                 bus: Any = None):
+        self.strict = strict
+        self.mass_tol = mass_tol
+        self.trend_window = max(int(trend_window), 2)
+        self.trend_factor = trend_factor
+        self.gap_tol = gap_tol
+        self.warn = warn if warn is not None else _default_sink()
+        self.bus = bus
+        self.alerts: list[Alert] = []
+        self._residuals: list[float] = []
+        self._trend_round: int | None = None  # last round a trend fired at
+
+    # -- findings ------------------------------------------------------------
+
+    def _raise_alert(self, check: str, round_: int, value: float,
+                     threshold: float, message: str) -> Alert:
+        alert = Alert(round=round_, check=check, severity=_SEVERITY[check],
+                      value=float(value), threshold=float(threshold),
+                      message=message)
+        self.alerts.append(alert)
+        self.warn(f"WATCHDOG[{alert.severity}] {message}")
+        bus = self.bus = _resolve_bus(self.bus)
+        bus.alert(f"watchdog.{check}", message, value=alert.value,
+                  round=round_, labels=(("severity", alert.severity),))
+        return alert
+
+    def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        critical: Alert | None = None
+
+        nonfinite = np.asarray(rows["wd_nonfinite"])
+        bad = np.flatnonzero(nonfinite > 0)
+        if bad.size:
+            t = t0 + int(bad[0])
+            alert = self._raise_alert(
+                "nonfinite_wire", t, float(nonfinite[bad[0]]), 0.0,
+                f"round {t}: {int(nonfinite[bad[0]])} non-finite elements "
+                "on the wire buffer (noised message)")
+            critical = critical or alert
+
+        mass = np.asarray(rows["wd_mass_drift"])
+        worst = int(np.argmax(mass))
+        if mass[worst] > self.mass_tol:
+            t = t0 + worst
+            self._raise_alert(
+                "mass_drift", t, float(mass[worst]), self.mass_tol,
+                f"round {t}: push-sum mass drift |mean(a)-1|="
+                f"{float(mass[worst]):.3e} exceeds {self.mass_tol:.1e}")
+
+        self._residuals.extend(
+            np.asarray(rows["wd_consensus_residual"]).tolist())
+        trend = self._check_trend(t0 + len(np.atleast_1d(mass)) - 1)
+        if trend is not None:
+            self._raise_alert(*trend)
+
+        if "sensitivity_real" in rows and "sensitivity_estimate" in rows:
+            real = np.asarray(rows["sensitivity_real"])
+            est = np.asarray(rows["sensitivity_estimate"])
+            viol = np.flatnonzero(real > est + self.gap_tol)
+            if viol.size:
+                t = t0 + int(viol[0])
+                alert = self._raise_alert(
+                    "sensitivity_gap", t, float(real[viol[0]]),
+                    float(est[viol[0]]),
+                    f"round {t}: real sensitivity {float(real[viol[0]]):.4f}"
+                    f" exceeds the broadcast estimate "
+                    f"{float(est[viol[0]]):.4f} — the Remark-1 bound is "
+                    "violated and the round is under-noised")
+                critical = critical or alert
+
+        if self.strict and critical is not None:
+            raise WatchdogAbort(
+                f"watchdog critical: {critical.message}", critical)
+
+    def _check_trend(self, t_last: int):
+        """Rising-consensus-residual check over the trailing window."""
+        w = self.trend_window
+        if len(self._residuals) < w:
+            return None
+        if self._trend_round is not None and t_last - self._trend_round < w:
+            return None  # one finding per window, not one per segment
+        tail = np.asarray(self._residuals[-w:])
+        older, newer = tail[: w // 2].mean(), tail[w // 2:].mean()
+        if older > 0.0 and newer > self.trend_factor * older:
+            self._trend_round = t_last
+            return ("residual_trend", t_last, float(newer),
+                    float(self.trend_factor * older),
+                    f"round {t_last}: consensus residual rising — trailing "
+                    f"mean {newer:.3e} vs {older:.3e} a half-window ago "
+                    f"(> {self.trend_factor:g}x)")
+        return None

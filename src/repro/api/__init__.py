@@ -23,9 +23,11 @@ builds its runs through this package.
 """
 from repro.api.cli import (
     TOPOLOGY_CHOICES,
+    add_delay_arguments,
     add_fault_arguments,
     add_protocol_arguments,
     add_topology_arguments,
+    delays_from_args,
     faults_from_args,
     make_topology,
     topology_from_args,
@@ -64,9 +66,11 @@ __all__ = [
     "TOPOLOGY_CHOICES",
     "TraceSpec",
     "TranscriptHook",
+    "add_delay_arguments",
     "add_fault_arguments",
     "add_protocol_arguments",
     "add_topology_arguments",
+    "delays_from_args",
     "estimate_wire_bytes",
     "faults_from_args",
     "hook_trace_spec",

@@ -31,6 +31,8 @@ __all__ = [
     "make_topology",
     "add_fault_arguments",
     "faults_from_args",
+    "add_delay_arguments",
+    "delays_from_args",
 ]
 
 # The shared --topology vocabulary: the paper circulants (dout, exp), the
@@ -179,17 +181,97 @@ def add_fault_arguments(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--straggler-rate", type=float, default=0.0,
                     help="per-node probability a round's messages miss the "
                          "deadline (outgoing edges dropped, renormalized)")
+    ap.add_argument("--churn", action="append", default=[],
+                    metavar="NODE:T_DOWN:T_UP",
+                    help="deterministic downtime window: node NODE is down "
+                         "for rounds [T_DOWN, T_UP) (repeatable)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault stream (distinct streams for "
+                         "repeated studies on one base key)")
 
 
-def faults_from_args(ap: argparse.ArgumentParser,
-                     args: argparse.Namespace) -> Any:
-    """FaultModel from the flags, or None when every knob is off."""
-    if not (args.drop_rate or args.straggler_rate):
+def _parse_churn(ap: argparse.ArgumentParser, specs: list[str],
+                 n_nodes: int | None) -> tuple[tuple[int, int, int], ...]:
+    """``NODE:T_DOWN:T_UP`` strings -> churn triples, parse-time validated."""
+    churn = []
+    for spec in specs:
+        parts = spec.split(":")
+        if len(parts) != 3:
+            ap.error(f"--churn {spec!r}: expected NODE:T_DOWN:T_UP "
+                     "(three ints separated by colons)")
+        try:
+            node, t_down, t_up = (int(p) for p in parts)
+        except ValueError:
+            ap.error(f"--churn {spec!r}: NODE, T_DOWN and T_UP must be ints")
+        if n_nodes is not None and not 0 <= node < n_nodes:
+            ap.error(f"--churn {spec!r}: node {node} out of range for "
+                     f"n_nodes={n_nodes}")
+        churn.append((node, t_down, t_up))
+    return tuple(churn)
+
+
+def faults_from_args(ap: argparse.ArgumentParser, args: argparse.Namespace,
+                     n_nodes: int | None = None) -> Any:
+    """FaultModel from the flags, or None when every knob is off.
+
+    ``n_nodes`` (when the caller knows it at parse time) validates
+    ``--churn`` node ids against the topology size — out-of-range ids die
+    as an ``ap.error`` instead of a traced ``up_mask`` error mid-build.
+    """
+    churn = _parse_churn(ap, args.churn, n_nodes)
+    if not (args.drop_rate or args.straggler_rate or churn):
         return None
     from repro.net.faults import FaultModel
 
     try:
         return FaultModel(drop_rate=args.drop_rate,
-                          straggler_rate=args.straggler_rate)
+                          straggler_rate=args.straggler_rate,
+                          churn=churn, seed=args.fault_seed)
+    except ValueError as e:
+        ap.error(str(e))
+
+
+def add_delay_arguments(ap: argparse.ArgumentParser) -> None:
+    """Attach the bounded-delay async flags (repro.net.delays)."""
+    ap.add_argument("--max-delay", type=int, default=0,
+                    help="staleness bound B: sent messages get a uniform "
+                         "random delay in {0..B} rounds (0 = synchronous)")
+    ap.add_argument("--timeout-rate", type=float, default=0.0,
+                    help="per-message probability of exceeding the "
+                         "staleness bound; the mass re-credits the "
+                         "sender's self-loop")
+    ap.add_argument("--node-rates", type=str, default="",
+                    help="comma-separated per-node round rates (node i "
+                         "participates every r_i rounds); empty = every "
+                         "node every round")
+    ap.add_argument("--delay-seed", type=int, default=0,
+                    help="seed of the delay/timeout stream")
+
+
+def delays_from_args(ap: argparse.ArgumentParser, args: argparse.Namespace,
+                     n_nodes: int | None = None) -> Any:
+    """DelayModel from the flags, or None when every knob is off.
+
+    ``n_nodes`` validates the ``--node-rates`` list length at parse time.
+    """
+    rates: tuple[int, ...] = ()
+    if args.node_rates:
+        try:
+            rates = tuple(int(r) for r in args.node_rates.split(","))
+        except ValueError:
+            ap.error(f"--node-rates {args.node_rates!r}: expected "
+                     "comma-separated ints (one rate per node)")
+        if n_nodes is not None and len(rates) != n_nodes:
+            ap.error(f"--node-rates has {len(rates)} entries but "
+                     f"n_nodes={n_nodes}; give one rate per node")
+    if not (args.max_delay or args.timeout_rate
+            or any(r > 1 for r in rates)):
+        return None
+    from repro.net.delays import DelayModel
+
+    try:
+        return DelayModel(max_delay=args.max_delay,
+                          timeout_rate=args.timeout_rate,
+                          rates=rates, seed=args.delay_seed)
     except ValueError as e:
         ap.error(str(e))

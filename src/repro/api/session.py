@@ -185,6 +185,7 @@ class ProtocolSession:
         wire_dtype: str = "f32",
         mesh: Any = None,
         faults: Any = None,
+        delays: Any = None,
         seed: int = 0,
         key: jax.Array | None = None,
     ) -> "ProtocolSession":
@@ -216,6 +217,15 @@ class ProtocolSession:
         trajectory/ledger record the *realized* out-degrees. Attach a
         :class:`repro.net.stats.NetworkStatsHook` to a run to get the
         realized-network record on ``RunReport.network``.
+
+        ``delays`` (a :class:`repro.net.delays.DelayModel`) attaches the
+        bounded-delay async runtime: the engine carries a message mailbox
+        through the scan, each sent message gets a seeded random delay
+        (timeouts re-credit the sender's self-loop; heterogeneous node
+        rates hold skipped nodes), and the per-round
+        staleness/timeout/participation stats join the trajectory. An
+        inactive model is dropped — the session then runs the synchronous
+        program bit-for-bit. Composes with ``faults``.
         """
         spec = PrivacySpec() if privacy is None else privacy
         base_key = jax.random.PRNGKey(seed) if key is None else key
@@ -239,10 +249,15 @@ class ProtocolSession:
                     topology, mesh=mesh, schedule=schedule,
                     use_kernels=use_kernels, sync_interval=sync_interval,
                     chunk=chunk, packed=packed, wire_dtype=wire_dtype,
-                    faults=faults)
+                    faults=faults, delays=delays)
             elif faults is not None:
                 raise ValueError(
                     "pass faults= either to Session.build (plan derived) or "
+                    "to ProtocolPlan.from_topology — not alongside an "
+                    "explicit plan=, which already fixed the schedule")
+            elif delays is not None:
+                raise ValueError(
+                    "pass delays= either to Session.build (plan derived) or "
                     "to ProtocolPlan.from_topology — not alongside an "
                     "explicit plan=, which already fixed the schedule")
             cfg_sync = sync_interval if isinstance(sync_interval, int) else 0
@@ -306,10 +321,20 @@ class ProtocolSession:
                 "this session has no protocol (built without a topology); "
                 "Session.build(topology=...) enables run()/train()")
 
+    def _attach_mail(self, dpps_state: DPPSState) -> DPPSState:
+        """Async sessions carry the message Mailbox from round 0, so every
+        segment (and checkpoint) shares one pytree structure — the engine
+        would otherwise attach it on first dispatch and recompile."""
+        delays = getattr(self.plan, "delays", None)
+        if delays is not None and not dpps_state.mail:
+            dpps_state = dpps_state._replace(
+                mail=delays.init_mailbox(dpps_state.push.s))
+        return dpps_state
+
     def consensus_state(self, values: PyTree) -> DPPSState:
         """Protocol state over per-node private ``values`` (node-stacked)."""
         self._require_protocol()
-        return dpps_init(values, self.cfg)
+        return self._attach_mail(dpps_init(values, self.cfg))
 
     def train_state(self) -> PartPSPState:
         """Fresh PartPSP state from the session's initial parameters."""
@@ -317,7 +342,8 @@ class ProtocolSession:
         if self.partition is None or self.init_params is None:
             raise ValueError(
                 "training needs model=/params= and partition= at build time")
-        return partpsp_init(self.init_params, self.partition, self.train_cfg)
+        state = partpsp_init(self.init_params, self.partition, self.train_cfg)
+        return state._replace(dpps=self._attach_mail(state.dpps))
 
     def consensus(self, state: DPPSState) -> PyTree:
         """Protocol output s-bar (Alg. 1 Output) from a consensus run."""
@@ -621,6 +647,36 @@ class ProtocolSession:
                     return {"w": w}, net
             else:
                 mix_for = lambda t: ({"w": plan.ws[t % plan.period]}, None)
+
+        if getattr(plan, "delays", None) is not None:
+            # Async loop driver: the round's mixing operands (realized by
+            # the fault branches above when faults compose) feed the
+            # DelayModel's gossip closure instead of the built-in mixing —
+            # the same open_round the engine's scan body builds, from the
+            # same per-round key fold, so loop and engine trajectories
+            # stay bit-identical under delays.
+            delays = plan.delays
+            needs_ws = spec.needs_wire_stats
+
+            def async_step(state, batch, k, **mix):
+                gossip_fn, close = delays.open_round(
+                    state.dpps.push, state.dpps.mail, k, state.dpps.t, **mix)
+                st2, m = partpsp_step(
+                    state, batch, k, cfg=self.train_cfg,
+                    partition=self.partition, loss_fn=self.loss_fn,
+                    return_s_half=spec.needs_s_half,
+                    return_wire_stats=needs_ws, tap=spec.tap,
+                    mechanism=self.mechanism, gossip_fn=gossip_fn)
+                mail_new, stats = close()
+                m = dict(m, **stats)
+                if needs_ws:
+                    m["wd_mass_drift"] = jnp.abs(
+                        stats["async_mass_mean"] - 1.0)
+                return st2._replace(
+                    dpps=st2.dpps._replace(mail=mail_new)), m
+
+            step = jax.jit(async_step)
+            state = state._replace(dpps=self._attach_mail(state.dpps))
 
         for t in range(start, start + rounds):
             mix, net = mix_for(t)

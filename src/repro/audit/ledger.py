@@ -85,6 +85,9 @@ class PrivacyLedger:
         synced: bool = False,
         out_degree: Any = None,
         dropped_edges: int | None = None,
+        staleness_max: int | None = None,
+        timeouts: int | None = None,
+        participating: Any = None,
     ) -> dict[str, Any]:
         """Record round ``t``; returns the (JSON-ready) ledger entry.
 
@@ -95,6 +98,11 @@ class PrivacyLedger:
         wire; empirical-epsilon audits (benchmarks/fig5_audit.py) stay
         valid under faults because the trail states the realized graph
         each round's transcript was produced on, not the nominal one.
+        Async runs (``repro.net.delays``) add ``staleness_max`` (oldest
+        message delivered this round), ``timeouts`` (messages whose mass
+        was re-credited to the sender) and ``participating`` (per-node
+        active mask — recorded as a count): a transcript observed under
+        delays spans several rounds of sends, and the trail must say which.
         """
         protected = protected and not synced
         self.accountant = self.accountant.step(protected=protected)
@@ -128,6 +136,13 @@ class PrivacyLedger:
             entry["out_degree_mean"] = float(deg.mean())
         if dropped_edges is not None:
             entry["dropped_edges"] = int(dropped_edges)
+        if staleness_max is not None:
+            entry["staleness_max"] = int(staleness_max)
+        if timeouts is not None:
+            entry["timeouts"] = int(timeouts)
+        if participating is not None:
+            part = np.asarray(participating, dtype=bool)
+            entry["participating"] = int(part.sum())
         self.entries.append(entry)
         if self._fh is not None:
             self._fh.write(json.dumps(entry) + "\n")
@@ -147,6 +162,10 @@ class PrivacyLedger:
         Under fault injection (repro.net) the trajectory carries
         ``net_out_degree`` / ``net_dropped_edges`` rows; they land on each
         entry so the trail records the realized graph, not the nominal one.
+        Async trajectories (``ProtocolPlan.delays``) add
+        ``async_staleness_max`` / ``async_timeouts`` /
+        ``async_participated`` rows — recorded per entry so the trail says
+        how stale each round's delivered transcript actually was.
         """
         ests = np.asarray(traj["sensitivity_estimate"])
         reals = traj.get("sensitivity_real")
@@ -157,6 +176,12 @@ class PrivacyLedger:
         degs = None if degs is None else np.asarray(degs)
         drops = traj.get("net_dropped_edges")
         drops = None if drops is None else np.asarray(drops)
+        stale = traj.get("async_staleness_max")
+        stale = None if stale is None else np.asarray(stale)
+        touts = traj.get("async_timeouts")
+        touts = None if touts is None else np.asarray(touts)
+        parts = traj.get("async_participated")
+        parts = None if parts is None else np.asarray(parts)
         for i in range(ests.shape[0]):
             t = t0 + i
             synced = is_sync_round(t, sync_interval)
@@ -169,6 +194,9 @@ class PrivacyLedger:
                 synced=synced,
                 out_degree=None if degs is None else degs[i],
                 dropped_edges=None if drops is None else drops[i],
+                staleness_max=None if stale is None else stale[i],
+                timeouts=None if touts is None else touts[i],
+                participating=None if parts is None else parts[i],
             )
 
     # -- reading -------------------------------------------------------------

@@ -179,6 +179,11 @@ class DPPSState(NamedTuple):
     push: PushSumState
     sens: SensitivityState
     t: jnp.ndarray  # int32 round counter
+    # In-flight message mass under the async runtime (a repro.net.delays
+    # Mailbox, attached by the engine when ProtocolPlan.delays is active).
+    # The default () contributes zero pytree leaves, so synchronous
+    # programs, checkpoints, and the golden-HLO pins are unchanged.
+    mail: Any = ()
 
 
 def dpps_init(s0: PyTree, cfg: DPPSConfig) -> DPPSState:
@@ -481,7 +486,8 @@ def dpps_step(
             push_new = PushSumState(s=s_mixed, a=a_mixed)
             sens = sens._replace(s_local=s_loc, prev_noise_l1=prev_l1)
 
-    new_state = DPPSState(push=push_new, sens=sens, t=state.t + 1)
+    new_state = DPPSState(push=push_new, sens=sens, t=state.t + 1,
+                          mail=state.mail)
 
     diag: dict[str, Any] = {
         "sensitivity_used": s_used,

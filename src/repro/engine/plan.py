@@ -95,6 +95,15 @@ class ProtocolPlan:
       wire_dtype     gossip wire format, "f32" | "bf16". bf16 mixes the
                      outgoing messages in bf16 with fp32 accumulation
                      (half the wire bytes; requires packed=True).
+      delays         the active repro.net.delays.DelayModel: the scan then
+                     carries a message Mailbox next to the state and runs
+                     each round's gossip through DelayModel.open_round
+                     (bounded random delays, staleness timeouts,
+                     heterogeneous node rates). Works on the dense and
+                     sparse weight forms, composes with ``faults`` (the
+                     realized W feeds the mailbox), and an inactive model
+                     is dropped so the compiled program stays the
+                     synchronous one. None otherwise.
     """
 
     schedule: str
@@ -110,6 +119,7 @@ class ProtocolPlan:
     packed: bool = True
     wire_dtype: str = "f32"
     faults: Any = None  # repro.net.faults.FaultModel (duck-typed: no import)
+    delays: Any = None  # repro.net.delays.DelayModel (duck-typed: no import)
 
     def __post_init__(self):
         if self.wire_dtype not in ("f32", "bf16"):
@@ -125,6 +135,12 @@ class ProtocolPlan:
             raise ValueError("schedule='sparse' needs the padded-CSR "
                              "payloads (sparse_idx=/sparse_vals=); build "
                              "the plan with ProtocolPlan.from_topology")
+        if self.delays is not None and self.schedule == "circulant":
+            raise ValueError(
+                "bounded-delay async gossip needs the dense or sparse "
+                "weight form (per-message delay draws break circulant "
+                "structure); build the plan with schedule='dense' or "
+                "'sparse'")
 
     @property
     def dynamic(self) -> bool:
@@ -146,6 +162,7 @@ class ProtocolPlan:
         packed: bool = True,
         wire_dtype: str = "f32",
         faults: Any = None,
+        delays: Any = None,
     ) -> "ProtocolPlan":
         """Derive the plan for ``topo`` (and optionally a device mesh).
 
@@ -160,6 +177,12 @@ class ProtocolPlan:
         onto the ``dynamic`` schedule — per-round masking of the stacked
         dense W inside the scan; an inactive model is dropped so the
         compiled program stays identical to the fault-free plan.
+        ``delays`` (a :class:`repro.net.delays.DelayModel`) attaches the
+        bounded-delay async runtime the same way — an *active* model
+        forces the dense/sparse weight form and the engine carries a
+        message mailbox through the scan; an inactive one (delay 0, no
+        timeouts, all rates 1) is dropped, which is what makes the
+        delay-0 program bit-identical to the synchronous engine.
         """
         if schedule not in (None, "dense", "circulant", "sparse"):
             raise ValueError(f"unknown schedule {schedule!r} (dynamic is "
@@ -172,6 +195,20 @@ class ProtocolPlan:
                 "(masked edges break circulant structure); drop "
                 "schedule='circulant' — the plan stacks the topology's "
                 "per-round W (or its edge list under schedule='sparse')")
+        if delays is not None and not getattr(delays, "active", False):
+            delays = None  # inactive model: emit the synchronous program
+        if delays is not None:
+            if schedule == "circulant":
+                raise ValueError(
+                    "bounded-delay async gossip needs the dense or sparse "
+                    "weight form (per-message delay draws break circulant "
+                    "structure); use schedule='dense' or 'sparse'")
+            delays.validate_nodes(topo.n_nodes)
+            if sync_interval not in (None, 0):
+                raise ValueError(
+                    "sync_interval with an active DelayModel would average "
+                    "node states while message mass is still in flight "
+                    "(breaking conservation); use sync_interval=0")
         period = int(getattr(topo, "period", 1))
         per_round: list[tuple[tuple[int, ...], np.ndarray]] | None = []
         for t in range(period):
@@ -188,7 +225,13 @@ class ProtocolPlan:
                 schedule = "dynamic"
                 per_round = None  # always stack the dense per-round matrices
         elif schedule is None:
-            schedule = "circulant" if per_round is not None else "dense"
+            if delays is not None:
+                # Async gossip draws per-message delays, so it needs an
+                # explicit weight form even on circulant topologies.
+                schedule = "dense"
+                per_round = None
+            else:
+                schedule = "circulant" if per_round is not None else "dense"
         if schedule == "circulant" and per_round is None:
             raise ValueError(
                 f"{type(topo).__name__} is not circulant; use schedule='dense'")
@@ -239,7 +282,7 @@ class ProtocolPlan:
                    mix_weights=mix_weights, ws=ws, sparse_idx=sparse_idx,
                    sparse_vals=sparse_vals, use_kernels=use_kernels,
                    sync_interval=sync_interval, chunk=chunk, packed=packed,
-                   wire_dtype=wire_dtype, faults=faults)
+                   wire_dtype=wire_dtype, faults=faults, delays=delays)
 
     # -- per-round mixing operands -------------------------------------------
 

@@ -48,6 +48,16 @@ merges the realized-network diagnostics (out-degrees, dropped edges,
 adjacency) into the trajectory. Inactive/absent fault models emit no
 masking code — the traced program is the plain engine's (the golden HLO
 pins in tests/test_api.py stay binding).
+
+Bounded-delay async (``ProtocolPlan.delays``, an active
+``repro.net.delays.DelayModel``): the scan carry gains a message
+``Mailbox`` (``DPPSState.mail``; packed alongside the state), each round's
+mixing runs through ``DelayModel.open_round`` as a ``gossip_fn`` over the
+realized weights (faults compose — masking happens first), and the
+per-round staleness/timeout/participation stats join the trajectory.
+Inactive/absent delay models are dropped at plan build, so the delay-0
+program is bit-identical to the synchronous engine (pinned in
+tests/test_async.py).
 """
 from __future__ import annotations
 
@@ -163,6 +173,62 @@ def _check_dynamic(plan: ProtocolPlan, gossip_builder) -> bool:
     return True
 
 
+def _check_async(plan: ProtocolPlan, gossip_builder, cfg: DPPSConfig) -> bool:
+    """Whether this run carries a message mailbox (ProtocolPlan.delays).
+
+    ``cfg`` must already be plan-resolved — the sync-interval check reads
+    the stamped value. The sharded engine's collective gossip and the bf16
+    wire are rejected here: the mailbox carry accumulates in f32 and the
+    delay draws need the explicit weight form on one device.
+    """
+    delays = getattr(plan, "delays", None)
+    if delays is None:
+        return False
+    if gossip_builder is not None:
+        raise NotImplementedError(
+            "bounded-delay async gossip (ProtocolPlan.delays) is not "
+            "implemented for the sharded engine's collective gossip; run "
+            "the async study on the single-device engine, or detach the "
+            "DelayModel on the mesh")
+    if cfg.wire_dtype != "f32":
+        raise NotImplementedError(
+            "bf16 wire + async mailboxes is not implemented (the mailbox "
+            "carry accumulates in-flight mass in f32); use wire_dtype='f32'")
+    if cfg.sync_interval > 0:
+        raise ValueError(
+            "sync_interval > 0 with an active DelayModel would average "
+            "node states while message mass is still in flight (breaking "
+            "conservation); use sync_interval=0")
+    return True
+
+
+def _open_async(plan: ProtocolPlan, kwargs: dict[str, Any],
+                push: PushSumState, mail, round_key: jax.Array, t):
+    """Swap the round's mixing operands for the DelayModel's gossip closure.
+
+    Runs *after* ``_realize_faults`` so the mailbox consumes the realized
+    (masked, renormalized) weights. Returns the ``close`` callback the body
+    calls after the step for ``(new_mailbox, stats)``.
+    """
+    mix = {name: kwargs.pop(name)
+           for name in ("w", "sparse_idx", "sparse_vals") if name in kwargs}
+    gossip_fn, close = plan.delays.open_round(push, mail, round_key, t, **mix)
+    kwargs["gossip_fn"] = gossip_fn
+    return close
+
+
+def _async_merge(st2: DPPSState, diag: dict[str, Any], close,
+                 needs_wire_stats: bool) -> DPPSState:
+    """Fold the round's mailbox + async stats back into state/diagnostics."""
+    mail_new, stats = close()
+    diag.update(stats)
+    if needs_wire_stats:
+        # dpps_step's drift only sees the state's a-mass; under async the
+        # invariant is state + inbox + calendar mass (async_mass_mean).
+        diag["wd_mass_drift"] = jnp.abs(stats["async_mass_mean"] - 1.0)
+    return st2._replace(mail=mail_new)
+
+
 def _realize_faults(plan: ProtocolPlan, kwargs: dict[str, Any],
                     round_key: jax.Array, t,
                     with_adjacency: bool) -> dict[str, Any]:
@@ -230,15 +296,49 @@ def wire_layout(plan: ProtocolPlan, shared: PyTree) -> PackedLayout | None:
 
 def _pack_dpps(state: DPPSState, layout: PackedLayout) -> DPPSState:
     with phase(PHASE_PACK):
+        mail = state.mail
+        if mail:
+            # Mailbox leaves mirror the state's runtime form: the calendar
+            # (B, N, ...) and inbox (N, ...) pack onto the same wire rows
+            # (PackedLayout.pack handles arbitrary leading prefixes).
+            mail = mail._replace(cal_s=layout.pack(mail.cal_s),
+                                 inbox_s=layout.pack(mail.inbox_s))
         return state._replace(push=PushSumState(s=layout.pack(state.push.s),
-                                                a=state.push.a))
+                                                a=state.push.a),
+                              mail=mail)
 
 
 def _unpack_dpps(state: DPPSState, layout: PackedLayout) -> DPPSState:
     with phase(PHASE_UNPACK):
+        mail = state.mail
+        if mail:
+            mail = mail._replace(cal_s=layout.unpack(mail.cal_s),
+                                 inbox_s=layout.unpack(mail.inbox_s))
         return state._replace(
             push=PushSumState(s=layout.unpack(state.push.s),
-                              a=state.push.a))
+                              a=state.push.a),
+            mail=mail)
+
+
+def _ensure_mail(state: DPPSState, plan: ProtocolPlan,
+                 asynchronous: bool) -> DPPSState:
+    """Attach an empty mailbox for async runs; reject orphaned ones.
+
+    Called after packing, so the mailbox mirrors the state's runtime form.
+    A state already carrying a mailbox (a resumed async run) keeps it —
+    its in-flight mass continues draining on the exact same schedule.
+    """
+    if asynchronous:
+        if not state.mail:
+            state = state._replace(mail=plan.delays.init_mailbox(state.push.s))
+        return state
+    if state.mail:
+        raise ValueError(
+            "state carries an async Mailbox but the plan has no active "
+            "DelayModel — running it synchronously would abandon the "
+            "in-flight message mass; keep the DelayModel on the plan (or "
+            "drain the mailbox by finishing the async run first)")
+    return state
 
 
 def run_dpps(
@@ -283,9 +383,11 @@ def run_dpps(
     dynamic = _check_dynamic(plan, _gossip_builder)
     want_adj = dynamic and spec.needs_adjacency
     cfg = plan.resolve_dpps(cfg)
+    asynchronous = _check_async(plan, _gossip_builder, cfg)
     layout = wire_layout(plan, state.push.s)
     if layout is not None:
         state = _pack_dpps(state, layout)
+    state = _ensure_mail(state, plan, asynchronous)
     if eps_seq is None:
         if rounds is None:
             raise ValueError("rounds= is required when eps_seq is None")
@@ -315,11 +417,15 @@ def run_dpps(
         kwargs = _round_kwargs(plan, st.t, _gossip_builder, _node_ops)
         net = (_realize_faults(plan, kwargs, k, st.t, want_adj)
                if dynamic else None)
+        close = (_open_async(plan, kwargs, st.push, st.mail, k, st.t)
+                 if asynchronous else None)
         st2, diag = dpps_step(st, eps_at(x), k, cfg,
                               return_s_half=spec.needs_s_half,
                               return_wire_stats=spec.needs_wire_stats,
                               mechanism=mechanism, tap=spec.tap,
                               layout=layout, **kwargs)
+        if close is not None:
+            st2 = _async_merge(st2, diag, close, spec.needs_wire_stats)
         if net is not None:
             diag.update(net)
         return st2, _capture(diag, hooks)
@@ -360,9 +466,11 @@ def run_partpsp(
     dynamic = _check_dynamic(plan, _gossip_builder)
     want_adj = dynamic and spec.needs_adjacency
     cfg = plan.resolve_partpsp(cfg)
+    asynchronous = _check_async(plan, _gossip_builder, cfg.dpps)
     layout = wire_layout(plan, state.dpps.push.s)
     if layout is not None:
         state = state._replace(dpps=_pack_dpps(state.dpps, layout))
+    state = state._replace(dpps=_ensure_mail(state.dpps, plan, asynchronous))
 
     def body(st: PartPSPState, batch_t):
         k = jax.random.fold_in(key, st.dpps.t)
@@ -371,12 +479,18 @@ def run_partpsp(
         kwargs = _round_kwargs(plan, st.dpps.t, _gossip_builder, _node_ops)
         net = (_realize_faults(plan, kwargs, k, st.dpps.t, want_adj)
                if dynamic else None)
+        close = (_open_async(plan, kwargs, st.dpps.push, st.dpps.mail,
+                             k, st.dpps.t)
+                 if asynchronous else None)
         st2, m = partpsp_step(st, batch_t, k, cfg=cfg, partition=partition,
                               loss_fn=loss_fn,
                               return_s_half=spec.needs_s_half,
                               return_wire_stats=spec.needs_wire_stats,
                               mechanism=mechanism, tap=spec.tap,
                               layout=layout, **kwargs)
+        if close is not None:
+            st2 = st2._replace(
+                dpps=_async_merge(st2.dpps, m, close, spec.needs_wire_stats))
         if net is not None:
             m.update(net)
         return st2, _capture(m, hooks)

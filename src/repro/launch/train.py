@@ -13,8 +13,12 @@ Key flags mirror the paper's experimental grid: --algorithm
 registry; random families take --graph-seed / --er-p / --matchings /
 --resample-period), --degree, --sync-interval, --schedule
 {dense,circulant}. Network fault injection (repro.net): --drop-rate /
---straggler-rate attach a FaultModel — the engine masks the realized W
-inside the scan and the ledger records realized out-degrees.
+--straggler-rate / --churn attach a FaultModel — the engine masks the
+realized W inside the scan and the ledger records realized out-degrees.
+Bounded-delay asynchrony (repro.net.delays): --max-delay /
+--timeout-rate / --node-rates attach a DelayModel — messages ride
+per-edge mailboxes inside the scan, stale ones time out back to the
+sender, and the ledger records per-round staleness/participation.
 
 The driver is a thin shell over the session front door
 (:mod:`repro.api`): :func:`build_session` assembles the arch-specific
@@ -48,9 +52,11 @@ from repro.api import (
     MetricsHook,
     PrivacySpec,
     Session,
+    add_delay_arguments,
     add_fault_arguments,
     add_protocol_arguments,
     add_topology_arguments,
+    delays_from_args,
     faults_from_args,
     make_topology as _registry_topology,
     topology_from_args,
@@ -71,7 +77,8 @@ def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
                   gamma_s: float, clip: float, topology, degree: int = 2,
                   sync_interval: int = 5, schedule: str = "dense",
                   use_kernels: bool = False, seed: int = 0, chunk: int = 50,
-                  packed: bool = True, wire_dtype: str = "f32", faults=None):
+                  packed: bool = True, wire_dtype: str = "f32", faults=None,
+                  delays=None):
     """Arch-specific assembly -> one protocol session (the front door).
 
     Owns only what is genuinely arch-shaped — model construction and the
@@ -79,7 +86,8 @@ def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
     SGP/SGPDP, split-point clamping for the 2-layer smoke stacks); every
     protocol decision lives in ``Session.build``. ``topology`` is a
     registry name (repro.api.cli) or an already-built Topology;
-    ``faults`` attaches a repro.net FaultModel.
+    ``faults`` attaches a repro.net FaultModel, ``delays`` a repro.net
+    DelayModel (bounded-delay asynchronous push-sum).
     """
     arch = get_config(arch_name)
     model_cfg = arch.smoke if reduced else arch.model
@@ -101,7 +109,8 @@ def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
         partition=rules, algorithm=algorithm, gamma_l=gamma_l,
         gamma_s=gamma_s, clip=clip, schedule=schedule,
         sync_interval=sync_interval, use_kernels=use_kernels, chunk=chunk,
-        packed=packed, wire_dtype=wire_dtype, faults=faults, seed=seed)
+        packed=packed, wire_dtype=wire_dtype, faults=faults, delays=delays,
+        seed=seed)
     return model, model_cfg, session
 
 
@@ -152,6 +161,7 @@ def main() -> None:
     ap.add_argument("--clip", type=float, default=100.0)
     add_topology_arguments(ap)
     add_fault_arguments(ap)
+    add_delay_arguments(ap)
     ap.add_argument("--sync-interval", type=int, default=5)
     ap.add_argument("--schedule", choices=("dense", "circulant", "sparse"),
                     default="dense")
@@ -172,7 +182,16 @@ def main() -> None:
     args = ap.parse_args()
     validate_protocol_args(ap, args)
     topo = topology_from_args(ap, args, args.nodes)
-    faults = faults_from_args(ap, args)
+    faults = faults_from_args(ap, args, n_nodes=args.nodes)
+    delays = delays_from_args(ap, args, n_nodes=args.nodes)
+    if delays is not None and args.sync_interval:
+        ap.error("--max-delay/--timeout-rate/--node-rates need "
+                 "--sync-interval 0: a synchronization round would average "
+                 "exact values while mass is still in flight in mailboxes")
+    if delays is not None and args.schedule == "circulant":
+        ap.error("--max-delay/--timeout-rate/--node-rates need --schedule "
+                 "dense or sparse: the mailbox runtime consumes per-round "
+                 "weight operands, not circulant offsets")
     if args.schedule == "circulant" and topo.offsets(0) is None:
         ap.error(f"--topology {args.topology} is not circulant "
                  f"({type(topo).__name__} has no offset structure); use "
@@ -190,7 +209,7 @@ def main() -> None:
         topology=topo, sync_interval=args.sync_interval,
         schedule=args.schedule, use_kernels=args.use_kernels,
         seed=args.seed, chunk=args.chunk, packed=args.packed,
-        wire_dtype=args.wire_dtype, faults=faults)
+        wire_dtype=args.wire_dtype, faults=faults, delays=delays)
     partition = session.partition
 
     mode = (f"packed/{args.wire_dtype}" if args.driver == "engine"

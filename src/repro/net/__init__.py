@@ -12,6 +12,12 @@ realistic ones and breaks them the way production networks do:
   stragglers, realized *inside* the engine's compiled scan with
   column-stochastic renormalization so push-sum mass conservation (and the
   DP accounting) survives.
+* delays.py — :class:`DelayModel`: bounded-delay asynchronous push-sum —
+  per-message random delays through an in-scan :class:`Mailbox` carry,
+  staleness timeouts re-crediting the sender's self-loop, heterogeneous
+  per-node round rates. Mass travels on the messages, so conservation
+  holds for any delay pattern; delay-0 is bit-identical to the
+  synchronous engine.
 * stats.py  — :class:`NetworkStats` / :class:`NetworkStatsHook`: realized
   edges, B-window connectivity of the realized graphs, effective wire
   bytes — attached to ``RunReport.network``.
@@ -24,6 +30,7 @@ fault model end to end (the plan switches to the ``dynamic`` schedule);
 ``repro.api`` only ever imports this package inside function bodies
 (graphs/faults stay import-free of ``repro.api`` entirely).
 """
+from repro.net.delays import DELAY_SALT, DelayModel, Mailbox
 from repro.net.faults import FAULT_SALT, FaultModel
 from repro.net.graphs import (
     ErdosRenyiGraph,
@@ -37,6 +44,9 @@ from repro.net.graphs import (
 from repro.net.stats import NetworkStats, NetworkStatsHook, strongly_connected
 
 __all__ = [
+    "DELAY_SALT",
+    "DelayModel",
+    "Mailbox",
     "FAULT_SALT",
     "FaultModel",
     "ErdosRenyiGraph",

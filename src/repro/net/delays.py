@@ -1,0 +1,335 @@
+"""DelayModel — bounded-delay asynchronous push-sum for the protocol engine.
+
+Every runtime in the repo is bulk-synchronous; the harshest thing
+:mod:`repro.net.faults` can do to a straggler is erase its messages. Real
+decentralized networks degrade more gently: messages arrive *late*, nodes
+tick at different rates, and only pathologically-old traffic is given up
+on. This module models exactly that regime — the ROADMAP's async +
+heterogeneous scenario lab — as a frozen, hashable model riding on
+:class:`repro.engine.ProtocolPlan` (the ``FaultModel`` pattern):
+
+* **bounded random delays** — every sent ``(value, weight)`` message is
+  assigned a seeded delay in ``{0..max_delay}``; delayed mass waits in a
+  per-receiver arrival calendar (:class:`Mailbox`) carried through the
+  compiled scan and is mixed in the round it lands.
+* **staleness timeouts** — with probability ``timeout_rate`` a message
+  would exceed the staleness bound ``B = max_delay``; it times out at send
+  time and its mass is re-credited to the sender's self-loop. Delivered-
+  late beats never-delivered: where ``FaultModel`` drops a straggler's
+  edge and renormalizes, the delay model reroutes the same mass, so
+  nothing is ever lost.
+* **heterogeneous node rates** — node ``i`` participates every
+  ``rates[i]`` rounds; in between it neither perturbs nor sends, holds its
+  entire state (no self-loop scaling), and arrivals accumulate in its
+  inbox until the next active round.
+
+Push-sum makes the bookkeeping trivial: Eq. 9 only needs every sender's
+outgoing mass to sum to 1 *eventually*, and because the mass travels on
+the messages themselves, conservation holds for any delay pattern — the
+invariant becomes ``state + inbox + calendar`` mass ``== N`` (the
+``async_mass_mean`` diagnostic; pinned to 1e-5 in tests/test_async.py and
+watched by :class:`repro.obs.WatchdogHook`). DP is untouched: the engine
+hands this module the *noised* wire payload ``s_noise`` (noise is injected
+before enqueue), so every transmitted message carries exactly the Eq.-8
+protection of the synchronous protocol.
+
+Randomness discipline mirrors ``FaultModel``: delays and timeouts are
+drawn from :meth:`DelayModel.delay_key` — a salted fold
+(``DELAY_SALT != FAULT_SALT``) of the engine's per-round key — so the
+delay stream is independent of both the noise stream and the fault
+stream, identical between the scan engine and the loop driver, and
+host-re-derivable from the base key. Faults compose: the engine realizes
+the (masked, renormalized) W first and the delay model consumes it.
+
+An inactive ``DelayModel()`` (delay 0, no timeouts, all rates 1) is
+dropped at plan build, so the compiled program is bit-identical to the
+synchronous engine — packed and pytree, dense and sparse (an acceptance
+pin, not an accident).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pushsum import PushSumState, _mix_dense, sparse_mix
+
+__all__ = ["DelayModel", "Mailbox", "DELAY_SALT"]
+
+# Folded into the round key to derive the delay/timeout stream. Distinct
+# from FAULT_SALT ("NETF"): a run with both models active draws two
+# independent streams off the same round key.
+DELAY_SALT = 0x4E455444  # "NETD"
+
+
+class Mailbox(NamedTuple):
+    """In-flight message mass, carried through the scan next to the state.
+
+    ``cal_s`` / ``cal_a`` are arrival calendars with a leading depth axis
+    of ``B = max_delay`` slots: slot ``k`` holds the aggregated messages
+    landing ``k + 1`` rounds from now (delay-0 traffic mixes immediately
+    and never touches the calendar). ``inbox_s`` / ``inbox_a`` accumulate
+    mass that has *arrived* at a node that is not participating this round
+    — it is folded into the state at the node's next active round. The
+    ``*_s`` fields mirror the runtime form of the protocol state ``s``
+    (pytree leaves or the packed ``(N, d_pad)`` buffer; the engine packs
+    and unpacks them alongside the state at segment boundaries).
+    """
+
+    cal_s: Any             # leaves (B, N, ...)
+    cal_a: jnp.ndarray     # (B, N) f32
+    inbox_s: Any           # leaves (N, ...)
+    inbox_a: jnp.ndarray   # (N,) f32
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayModel:
+    """Static description of the network's asynchrony.
+
+    Fields:
+      max_delay     staleness bound ``B``: sent messages are assigned a
+                    uniform random delay in ``{0..B}`` rounds. 0 = every
+                    delivery is immediate.
+      timeout_rate  per-message probability that delivery would exceed
+                    ``B``; the message times out and its mass re-credits
+                    the sender's self-loop (the straggler-reroute knob).
+      rates         per-node round rates: node ``i`` participates when
+                    ``t % rates[i] == 0``. Empty = every node every round.
+                    Length must equal the topology's node count.
+      seed          reserved fold for running several independent delay
+                    streams off one base key.
+
+    Frozen and hashable — it rides on :class:`repro.engine.ProtocolPlan`
+    as a trace-time constant.
+    """
+
+    max_delay: int = 0
+    timeout_rate: float = 0.0
+    rates: tuple[int, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.max_delay, int) or isinstance(
+                self.max_delay, bool) or self.max_delay < 0:
+            raise ValueError(
+                f"max_delay={self.max_delay!r} must be an int >= 0")
+        if not (0.0 <= self.timeout_rate < 1.0):
+            raise ValueError(
+                f"timeout_rate={self.timeout_rate} must be in [0, 1)")
+        for i, r in enumerate(self.rates):
+            if not isinstance(r, int) or isinstance(r, bool) or r < 1:
+                raise ValueError(
+                    f"rates[{i}]={r!r} must be an int >= 1 (node "
+                    "participates every r rounds)")
+
+    @property
+    def active(self) -> bool:
+        """Whether any asynchrony code needs to be emitted at all."""
+        return (self.max_delay > 0 or self.timeout_rate > 0.0
+                or any(r > 1 for r in self.rates))
+
+    def validate_nodes(self, n_nodes: int) -> None:
+        """Raise if ``rates`` doesn't cover the topology (plan-build check)."""
+        if self.rates and len(self.rates) != n_nodes:
+            raise ValueError(
+                f"DelayModel.rates has {len(self.rates)} entries but the "
+                f"topology has N={n_nodes} nodes; give one rate per node "
+                "(or leave rates empty for all-every-round)")
+
+    # -- key discipline ------------------------------------------------------
+
+    def delay_key(self, round_key: jax.Array) -> jax.Array:
+        """The delay stream's key for a round, derived from the engine's
+        per-round key (``fold_in(base_key, t)``) by folding the salt and
+        the model's ``seed`` — independent of the noise draw and of
+        ``FaultModel.fault_key``'s fault stream."""
+        return jax.random.fold_in(
+            jax.random.fold_in(round_key, DELAY_SALT), self.seed)
+
+    # -- in-scan machinery ---------------------------------------------------
+
+    def active_mask(self, t, n_nodes: int) -> jnp.ndarray:
+        """(N,) bool: node participating this round (traced ``t``)."""
+        if not self.rates:
+            return jnp.ones((n_nodes,), dtype=bool)
+        self.validate_nodes(n_nodes)
+        rates = jnp.asarray(self.rates, jnp.int32)
+        return jnp.mod(jnp.asarray(t, jnp.int32), rates) == 0
+
+    def init_mailbox(self, s: Any) -> Mailbox:
+        """Empty mailbox mirroring the runtime form of the state ``s``
+        (pytree leaves or the packed buffer — either way leaves are
+        ``(N, ...)``)."""
+        leaves = jax.tree_util.tree_leaves(s)
+        n = leaves[0].shape[0]
+        b = self.max_delay
+        return Mailbox(
+            cal_s=jax.tree_util.tree_map(
+                lambda x: jnp.zeros((b,) + x.shape, x.dtype), s),
+            cal_a=jnp.zeros((b, n), jnp.float32),
+            inbox_s=jax.tree_util.tree_map(jnp.zeros_like, s),
+            inbox_a=jnp.zeros((n,), jnp.float32))
+
+    def open_round(
+        self,
+        push_old: PushSumState,
+        mail: Mailbox,
+        round_key: jax.Array,
+        t,
+        *,
+        w: jnp.ndarray | None = None,
+        sparse_idx: jnp.ndarray | None = None,
+        sparse_vals: jnp.ndarray | None = None,
+    ) -> tuple[Callable[[PushSumState], PushSumState], Callable[[], tuple]]:
+        """One async round as a ``gossip_fn`` closure pair.
+
+        Returns ``(gossip_fn, close)``: the engine hands ``gossip_fn`` to
+        ``dpps_step`` in place of the built-in mixing (it receives the
+        round's *noised* wire payload as ``push_half`` — DP noise is
+        already on every enqueued message), then calls ``close()`` after
+        the step for ``(new_mailbox, stats)``. Both the scan engine and
+        the session loop driver build the closure from the same operands
+        and key folds, so the two drivers stay bit-identical under delays.
+
+        Mixing operands are the round's *realized* weights — pass the
+        dense ``w`` or the padded-CSR ``sparse_idx``/``sparse_vals``
+        (after ``FaultModel.realize*`` when faults compose). Per-leaf
+        arrivals run through the same ``_mix_dense`` / ``sparse_mix``
+        primitives as the synchronous gossip, which is what keeps the
+        packed and pytree async programs bit-equal in f32.
+
+        Round mechanics (all per-message draws shared by value and
+        weight — the ``(value, weight)`` pair travels together):
+
+        * active sender ``j`` keeps ``w_jj x_j`` plus the mass of its
+          timed-out messages; each surviving off-diagonal message gets a
+          delay ``d``: ``d = 0`` mixes now, ``d >= 1`` lands in calendar
+          slot ``d - 1``.
+        * every node's arrivals this round = popped calendar slot 0 +
+          immediate messages; active receivers fold arrivals + inbox into
+          their state, inactive receivers hold state and bank arrivals in
+          the inbox.
+        * inactive senders contribute nothing (their whole state holds),
+          so every column of realized mass still sums to 1 and total mass
+          (state + inbox + calendar) is conserved for any configuration.
+
+        Stats (merged into the engine trajectory):
+          async_delay_hist     (B+1,) i32 surviving messages per delay
+          async_timeouts       () i32 timed-out (rerouted) messages
+          async_staleness_max  () i32 max assigned delay (<= B always)
+          async_participated   (N,) bool this round's active mask
+          async_active         () i32 participating node count
+          async_mass_mean      () f32 (state + inbox + calendar mass) / N
+        """
+        if (w is None) == (sparse_idx is None):
+            raise ValueError(
+                "open_round needs exactly one of w= (dense) or "
+                "sparse_idx=/sparse_vals= (padded CSR)")
+        out: dict[str, Any] = {}
+        b = self.max_delay
+
+        def gossip_fn(push_half: PushSumState) -> PushSumState:
+            x_tree, a = push_half.s, push_half.a
+            n = a.shape[0]
+            act = self.active_mask(t, n)
+            k_to, k_dly = jax.random.split(self.delay_key(round_key))
+
+            if w is not None:
+                eye = jnp.eye(n, dtype=bool)
+                support = (w > 0.0) & ~eye
+                sent = support & act[None, :]       # column j = sender j
+                shape = (n, n)
+                weights = w
+                diag_w = jnp.diagonal(w)
+                def colsum(m):
+                    return jnp.sum(m, axis=0)
+            else:
+                rows = jnp.arange(n, dtype=sparse_idx.dtype)[:, None]
+                self_slot = sparse_idx == rows      # self loops AND pads
+                support = (sparse_vals > 0.0) & ~self_slot
+                sent = support & act[sparse_idx]
+                shape = sparse_idx.shape
+                weights = sparse_vals
+                diag_w = jnp.sum(sparse_vals * self_slot, axis=1)
+                def colsum(m):
+                    return jax.ops.segment_sum(
+                        m.reshape(-1), sparse_idx.reshape(-1), num_segments=n)
+
+            if self.timeout_rate > 0.0:
+                timeout = jax.random.bernoulli(
+                    k_to, self.timeout_rate, shape) & sent
+            else:
+                timeout = jnp.zeros(shape, dtype=bool)
+            if b > 0:
+                dly = jax.random.randint(k_dly, shape, 0, b + 1)
+            else:
+                dly = jnp.zeros(shape, jnp.int32)
+            surv = sent & ~timeout
+            w_surv = weights * surv
+            slot_w = [w_surv * (dly == d) for d in range(b + 1)]
+            recred = colsum(weights * timeout)          # (N,) per sender
+            keep_c = diag_w + recred                    # active senders only
+
+            if w is not None:
+                mixes = [lambda x, m=m: _mix_dense(m, x) for m in slot_w]
+            else:
+                mixes = [lambda x, v=v: sparse_mix(sparse_idx, v, x)
+                         for v in slot_w]
+
+            def bcast(v, x):
+                return v.reshape(v.shape + (1,) * (x.ndim - 1))
+
+            def step_leaf(x, old, cal, inbox):
+                arrive = mixes[0](x)
+                if b > 0:
+                    arrive = arrive + cal[0]
+                inbox_tot = inbox + arrive
+                act_x = bcast(act, x)
+                keep = bcast(keep_c, x).astype(x.dtype) * x
+                new = jnp.where(act_x, keep + inbox_tot, old)
+                inbox_new = jnp.where(act_x, jnp.zeros_like(inbox), inbox_tot)
+                if b > 0:
+                    enq = jnp.stack([mixes[d](x) for d in range(1, b + 1)])
+                    cal_new = jnp.concatenate(
+                        [cal[1:], jnp.zeros_like(cal[:1])], axis=0) + enq
+                else:
+                    cal_new = cal
+                return new, inbox_new, cal_new
+
+            x_leaves, treedef = jax.tree_util.tree_flatten(x_tree)
+            old_leaves = treedef.flatten_up_to(push_old.s)
+            cal_leaves = treedef.flatten_up_to(mail.cal_s)
+            inbox_leaves = treedef.flatten_up_to(mail.inbox_s)
+            trips = [step_leaf(x, o, c, i) for x, o, c, i in
+                     zip(x_leaves, old_leaves, cal_leaves, inbox_leaves)]
+            s_new = treedef.unflatten([tr[0] for tr in trips])
+            inbox_s = treedef.unflatten([tr[1] for tr in trips])
+            cal_s = treedef.unflatten([tr[2] for tr in trips])
+            a_new, inbox_a, cal_a = step_leaf(a, a, mail.cal_a, mail.inbox_a)
+
+            out["mail"] = Mailbox(cal_s=cal_s, cal_a=cal_a,
+                                  inbox_s=inbox_s, inbox_a=inbox_a)
+            out["stats"] = {
+                "async_delay_hist": jnp.stack([
+                    jnp.sum(surv & (dly == d)).astype(jnp.int32)
+                    for d in range(b + 1)]),
+                "async_timeouts": jnp.sum(timeout).astype(jnp.int32),
+                "async_staleness_max": jnp.max(
+                    jnp.where(surv, dly, 0)).astype(jnp.int32),
+                "async_participated": act,
+                "async_active": jnp.sum(act).astype(jnp.int32),
+                "async_mass_mean": (jnp.sum(a_new) + jnp.sum(inbox_a)
+                                    + jnp.sum(cal_a)) / n,
+            }
+            return PushSumState(s=s_new, a=a_new)
+
+        def close() -> tuple[Mailbox, dict[str, Any]]:
+            if "mail" not in out:
+                raise RuntimeError(
+                    "close() before the gossip ran — open_round's gossip_fn "
+                    "must be handed to dpps_step first")
+            return out["mail"], out["stats"]
+
+        return gossip_fn, close

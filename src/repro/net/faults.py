@@ -87,17 +87,32 @@ class FaultModel:
         if not (0.0 <= self.straggler_rate < 1.0):
             raise ValueError(
                 f"straggler_rate={self.straggler_rate} must be in [0, 1)")
+        windows: dict[int, list[tuple[int, int]]] = {}
         for entry in self.churn:
             if len(entry) != 3:
                 raise ValueError(
                     f"churn entries are (node, t_down, t_up); got {entry!r}")
             node, t_down, t_up = entry
+            for name, val in (("node", node), ("t_down", t_down),
+                              ("t_up", t_up)):
+                if not isinstance(val, int) or isinstance(val, bool):
+                    raise ValueError(
+                        f"churn {name}={val!r} must be an int (entry "
+                        f"{entry!r}); floats/strings are silently wrong in "
+                        "the traced round comparison")
             if node < 0:
                 raise ValueError(f"churn node {node} must be >= 0")
             if not t_down < t_up:
                 raise ValueError(
                     f"churn interval [{t_down}, {t_up}) is empty for node "
                     f"{node}")
+            for lo, hi in windows.get(node, ()):
+                if t_down < hi and lo < t_up:
+                    raise ValueError(
+                        f"churn windows [{lo}, {hi}) and [{t_down}, {t_up}) "
+                        f"overlap for node {node}; merge them into one "
+                        "interval per downtime")
+            windows.setdefault(node, []).append((t_down, t_up))
 
     @property
     def active(self) -> bool:

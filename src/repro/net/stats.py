@@ -132,7 +132,31 @@ class NetworkStatsHook(RoundHook):
     def capture(self, diag: dict[str, Any]) -> dict[str, Any] | None:
         return None  # the engine already emits net_* rows when faults are on
 
+    def _publish_async(self, rows: dict[str, Any], t0: int) -> None:
+        """Async trajectories (ProtocolPlan.delays): staleness histogram,
+        timeout counter and participation gauge onto the bus. The per-delay
+        counts arrive pre-binned (``async_delay_hist`` is (T, B+1)), so
+        each bin becomes one weighted histogram observation per segment
+        instead of one event per message."""
+        if "async_delay_hist" not in rows:
+            return
+        hist = np.asarray(rows["async_delay_hist"])          # (T, B+1)
+        t_last = t0 + hist.shape[0] - 1
+        bus = self.bus = _resolve_bus(self.bus)
+        for d in range(hist.shape[1]):
+            delivered = int(hist[:, d].sum())
+            if delivered:
+                bus.observe("net.staleness", float(d), count=delivered,
+                            round=t_last)
+        bus.count("net.timeouts",
+                  int(np.asarray(rows["async_timeouts"]).sum()),
+                  round=t_last)
+        bus.gauge("net.participation",
+                  float(np.asarray(rows["async_participated"]).mean()),
+                  round=t_last)
+
     def consume(self, rows: dict[str, Any], *, t0: int) -> None:
+        self._publish_async(rows, t0)
         if "net_adj" in rows:
             adj = np.asarray(rows["net_adj"], dtype=bool)
             out_deg = np.asarray(rows["net_out_degree"])

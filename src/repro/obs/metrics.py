@@ -61,6 +61,11 @@ class Event:
     labels: tuple[tuple[str, str], ...] = ()
     round: int | None = None
     message: str | None = None
+    # Histogram weight: one emitted event standing for ``count`` identical
+    # observations (segment-boundary producers aggregate per-round arrays
+    # — e.g. the async staleness histogram's per-delay bins — into one
+    # event per bin instead of one per message).
+    count: int = 1
 
     def to_dict(self) -> dict[str, Any]:
         out: dict[str, Any] = {"ts": round(self.ts, 6), "kind": self.kind,
@@ -71,6 +76,8 @@ class Event:
             out["round"] = self.round
         if self.message is not None:
             out["message"] = self.message
+        if self.count != 1:
+            out["count"] = self.count
         return out
 
 
@@ -85,9 +92,11 @@ class HistogramSummary:
     min: float = float("inf")
     max: float = float("-inf")
 
-    def observe(self, value: float) -> None:
-        self.count += 1
-        self.total += value
+    def observe(self, value: float, count: int = 1) -> None:
+        if count < 1:
+            return
+        self.count += count
+        self.total += value * count
         self.min = min(self.min, value)
         self.max = max(self.max, value)
 
@@ -129,7 +138,8 @@ class MetricsBus:
                 self._gauges[series] = event.value
             elif event.kind == "histogram":
                 self._hists.setdefault(
-                    series, HistogramSummary()).observe(event.value)
+                    series, HistogramSummary()).observe(event.value,
+                                                        count=event.count)
             subscribers = list(self._subscribers)
         for fn in subscribers:
             fn(event)
@@ -137,10 +147,11 @@ class MetricsBus:
     def _event(self, kind: str, name: str, value: float, *,
                labels: Iterable[tuple[str, str]] = (),
                round: int | None = None,
-               message: str | None = None) -> Event:
+               message: str | None = None,
+               count: int = 1) -> Event:
         event = Event(ts=time.time(), kind=kind, name=name,
                       value=float(value), labels=_label_key(labels),
-                      round=round, message=message)
+                      round=round, message=message, count=int(count))
         self.emit(event)
         return event
 
@@ -152,9 +163,11 @@ class MetricsBus:
         """Set the gauge series ``name`` to ``value`` (last write wins)."""
         return self._event("gauge", name, value, **kw)
 
-    def observe(self, name: str, value: float, **kw) -> Event:
-        """Record one observation into the histogram series ``name``."""
-        return self._event("histogram", name, value, **kw)
+    def observe(self, name: str, value: float, *, count: int = 1,
+                **kw) -> Event:
+        """Record one observation into the histogram series ``name``
+        (``count`` weights it as that many identical observations)."""
+        return self._event("histogram", name, value, count=count, **kw)
 
     def alert(self, name: str, message: str, value: float = 1.0,
               **kw) -> Event:

@@ -42,6 +42,11 @@ _SEVERITY = {
     "sensitivity_gap": "critical",
     "mass_drift": "warn",
     "residual_trend": "warn",
+    # Async runtime (ProtocolPlan.delays): a message older than the
+    # staleness bound B surviving to delivery, or a node silent for
+    # longer than its rate explains, are both broken-runtime findings.
+    "staleness_bound": "critical",
+    "participation_gap": "critical",
 }
 
 
@@ -78,6 +83,18 @@ class WatchdogHook(RoundHook):
       ``trend_factor`` x the older half's, consensus is diverging.
     * ``gap_tol``       — slack on real > estimate sensitivity violations
       (matches :class:`RealSensitivityHook`'s tolerance).
+    * ``participation_window`` — async runs only: rounds a node may go
+      without participating before the participation-gap check fires.
+      ``None`` derives it at ``prepare`` from the plan's
+      :class:`repro.net.delays.DelayModel` rates (``2 * max rate`` —
+      twice what the declared heterogeneity explains).
+
+    Async runs (``ProtocolPlan.delays``) add two checks on the
+    trajectory's ``async_*`` rows: a delivered message whose assigned
+    delay exceeds the staleness bound ``B`` (impossible by construction —
+    seeing it means the mailbox runtime is broken) and a node silent for
+    longer than ``participation_window`` rounds. Both are critical and
+    abort under ``strict=True``.
 
     ``alerts`` accumulates every finding; each is warned once through
     ``warn`` (default: the obs logger) and published to ``bus`` as an
@@ -89,6 +106,7 @@ class WatchdogHook(RoundHook):
     def __init__(self, *, strict: bool = False, mass_tol: float = 1e-3,
                  trend_window: int = 20, trend_factor: float = 4.0,
                  gap_tol: float = 1e-6,
+                 participation_window: int | None = None,
                  warn: Callable[[str], None] | None = None,
                  bus: Any = None):
         self.strict = strict
@@ -96,11 +114,23 @@ class WatchdogHook(RoundHook):
         self.trend_window = max(int(trend_window), 2)
         self.trend_factor = trend_factor
         self.gap_tol = gap_tol
+        self.participation_window = participation_window
         self.warn = warn if warn is not None else _default_sink()
         self.bus = bus
         self.alerts: list[Alert] = []
         self._residuals: list[float] = []
         self._trend_round: int | None = None  # last round a trend fired at
+        self._staleness_bound: int | None = None  # plan's B (async runs)
+        self._part_gap = None  # (N,) rounds-since-participation, cross-segment
+
+    def prepare(self, ctx) -> None:
+        delays = getattr(getattr(ctx, "plan", None), "delays", None)
+        if delays is None:
+            return
+        self._staleness_bound = int(delays.max_delay)
+        if self.participation_window is None:
+            max_rate = max(delays.rates) if delays.rates else 1
+            self.participation_window = max(2, 2 * int(max_rate))
 
     # -- findings ------------------------------------------------------------
 
@@ -159,9 +189,46 @@ class WatchdogHook(RoundHook):
                     "violated and the round is under-noised")
                 critical = critical or alert
 
+        if "async_staleness_max" in rows:
+            critical = self._check_async(rows, t0) or critical
+
         if self.strict and critical is not None:
             raise WatchdogAbort(
                 f"watchdog critical: {critical.message}", critical)
+
+    def _check_async(self, rows: dict[str, Any], t0: int) -> Alert | None:
+        """Async-runtime checks: staleness bound + participation gap."""
+        critical: Alert | None = None
+        bound = self._staleness_bound
+        if bound is None:
+            # A plan-less (loop) run still carries the rows; trust them.
+            bound = int(np.asarray(rows["async_delay_hist"]).shape[-1]) - 1
+        stale = np.asarray(rows["async_staleness_max"])
+        viol = np.flatnonzero(stale > bound)
+        if viol.size:
+            t = t0 + int(viol[0])
+            critical = self._raise_alert(
+                "staleness_bound", t, float(stale[viol[0]]), float(bound),
+                f"round {t}: a delivered message carries staleness "
+                f"{int(stale[viol[0]])} > bound B={bound} — the mailbox "
+                "runtime is broken (delays are drawn in {0..B})")
+        part = np.asarray(rows["async_participated"], dtype=bool)  # (T, N)
+        if self._part_gap is None:
+            self._part_gap = np.zeros((part.shape[1],), dtype=np.int64)
+        window = self.participation_window or 2
+        for i in range(part.shape[0]):
+            self._part_gap = np.where(part[i], 0, self._part_gap + 1)
+            worst = int(np.argmax(self._part_gap))
+            if self._part_gap[worst] > window:
+                t = t0 + i
+                critical = critical or self._raise_alert(
+                    "participation_gap", t, float(self._part_gap[worst]),
+                    float(window),
+                    f"round {t}: node {worst} has not participated for "
+                    f"{int(self._part_gap[worst])} rounds (> window "
+                    f"{window}) — it is effectively down, not just slow")
+                self._part_gap[worst] = 0  # one finding per outage, not per round
+        return critical
 
     def _check_trend(self, t_last: int):
         """Rising-consensus-residual check over the trailing window."""

@@ -1,0 +1,496 @@
+"""Bounded-delay asynchronous push-sum (repro.net.delays) — acceptance pins.
+
+* an inactive DelayModel (delay 0, no timeouts, all rates 1) is dropped at
+  plan build and the run is bit-identical to the synchronous engine —
+  dense AND sparse schedule, packed AND pytree state;
+* under active delays the conservation invariant holds to 1e-5 for every
+  knob combination: state mass + inbox mass + in-flight calendar mass
+  always averages to exactly 1 per node;
+* no delivered message is ever older than the staleness bound B, and
+  heterogeneous node rates produce exactly the declared participation
+  pattern;
+* the per-round loop driver and the scan engine produce bit-identical
+  trajectories under the same delay stream;
+* the staleness story threads the stack: ledger entries, the obs metrics
+  bus, and two critical watchdog checks.
+"""
+import argparse
+import contextlib
+import io
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    LedgerHook,
+    PrivacySpec,
+    Session,
+    add_delay_arguments,
+    add_fault_arguments,
+    delays_from_args,
+    faults_from_args,
+)
+from repro.core.dpps import DPPSConfig, DPPSState, dpps_init
+from repro.core.topology import DOutGraph, calibrate_constants
+from repro.engine import ProtocolPlan, run_dpps
+from repro.engine import rounds as engine_rounds
+from repro.net import DelayModel, FaultModel, NetworkStatsHook
+from repro.obs import MetricsBus, WatchdogAbort, WatchdogHook
+
+N, T = 8, 12
+TOPO = DOutGraph(n_nodes=N, d=2)
+CP, LAM = calibrate_constants(TOPO)
+
+# the workhorse model: delays, timeouts and two slow nodes at once
+DM = DelayModel(max_delay=2, timeout_rate=0.05,
+                rates=(1, 1, 2, 1, 1, 3, 1, 1), seed=7)
+
+
+def _cfg(**kw):
+    kw.setdefault("b", 5.0)
+    kw.setdefault("gamma_n", 0.02)
+    kw.setdefault("c_prime", CP)
+    kw.setdefault("lam", LAM)
+    kw.setdefault("sync_interval", 0)
+    return DPPSConfig(**kw)
+
+
+def _s0(n=N, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(key, (n, 11)),
+            jax.random.normal(jax.random.fold_in(key, 1), (n, 2, 3))]
+
+
+def _run(plan, cfg, *, rounds=T, seed=0, key=42, state=None):
+    if state is None:
+        state = dpps_init(_s0(seed=seed), cfg)
+    return run_dpps(state, None, jax.random.PRNGKey(key), cfg=cfg,
+                    plan=plan, rounds=rounds)
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# The pinned contract: delay-0 async == synchronous engine, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["dense", "sparse"])
+@pytest.mark.parametrize("packed", [False, True])
+def test_inactive_delay_model_bit_identical_to_sync(schedule, packed):
+    """DelayModel() (delay 0, no timeouts, all rates 1) is dropped at plan
+    build; state AND trajectory are bit-identical to the plain engine."""
+    cfg = _cfg()
+    plan_sync = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                           packed=packed, sync_interval=0)
+    plan_null = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                           packed=packed, sync_interval=0,
+                                           delays=DelayModel())
+    assert plan_null.delays is None
+    out_s, traj_s = _run(plan_sync, cfg)
+    out_n, traj_n = _run(plan_null, cfg)
+    _assert_trees_equal(out_s.push, out_n.push)
+    assert sorted(traj_s) == sorted(traj_n)
+    _assert_trees_equal(traj_s, traj_n)
+    assert out_n.mail == ()  # no mailbox leaves on the sync state
+
+
+@pytest.mark.parametrize("schedule", ["dense", "sparse"])
+def test_packed_matches_pytree_under_delays(schedule):
+    cfg = _cfg()
+    outs = {}
+    for packed in (False, True):
+        plan = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                          packed=packed, sync_interval=0,
+                                          delays=DM)
+        outs[packed] = _run(plan, cfg)
+    _assert_trees_equal(outs[False][0].push, outs[True][0].push)
+    _assert_trees_equal(outs[False][1], outs[True][1])
+
+
+# ---------------------------------------------------------------------------
+# Conservation + staleness under every knob
+# ---------------------------------------------------------------------------
+
+MODELS = [
+    DelayModel(max_delay=1),
+    DelayModel(max_delay=4, seed=3),
+    DelayModel(timeout_rate=0.3),
+    DelayModel(max_delay=2, timeout_rate=0.5, seed=1),
+    DelayModel(rates=(1, 2, 4, 1, 1, 2, 1, 3)),
+    DM,
+]
+
+
+@pytest.mark.parametrize("dm", MODELS)
+@pytest.mark.parametrize("schedule", ["dense", "sparse"])
+def test_mass_conserved_every_configuration(dm, schedule):
+    """state + inbox + in-flight calendar mass averages to 1 per node at
+    every round, for any delay/timeout/rate combination."""
+    cfg = _cfg()
+    plan = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                      sync_interval=0, delays=dm)
+    out, traj = _run(plan, cfg)
+    np.testing.assert_allclose(np.asarray(traj["async_mass_mean"]), 1.0,
+                               atol=1e-5)
+    assert np.all(np.isfinite(np.asarray(jax.tree_util.tree_leaves(
+        out.push.s)[0])))
+
+
+@pytest.mark.parametrize("dm", MODELS)
+def test_staleness_never_exceeds_bound(dm):
+    cfg = _cfg()
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0, delays=dm)
+    _, traj = _run(plan, cfg)
+    stale = np.asarray(traj["async_staleness_max"])
+    assert stale.max() <= dm.max_delay
+    assert np.asarray(traj["async_delay_hist"]).shape[-1] == dm.max_delay + 1
+
+
+def test_heterogeneous_rates_participation_pattern():
+    """Node i participates exactly on rounds t with t % rates[i] == 0."""
+    dm = DelayModel(rates=(1, 2, 3, 4, 1, 2, 3, 4))
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0, delays=dm)
+    _, traj = _run(plan, _cfg())
+    part = np.asarray(traj["async_participated"], dtype=bool)  # (T, N)
+    rates = np.asarray(dm.rates)
+    expect = (np.arange(T)[:, None] % rates[None, :]) == 0
+    np.testing.assert_array_equal(part, expect)
+    assert np.asarray(traj["async_active"]).tolist() == \
+        expect.sum(axis=1).tolist()
+
+
+def test_timeouts_recredit_mass_same_round():
+    """Aggressive timeouts lose messages but never mass."""
+    dm = DelayModel(max_delay=3, timeout_rate=0.6, seed=2)
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0, delays=dm)
+    _, traj = _run(plan, _cfg())
+    assert int(np.asarray(traj["async_timeouts"]).sum()) > 0
+    np.testing.assert_allclose(np.asarray(traj["async_mass_mean"]), 1.0,
+                               atol=1e-5)
+
+
+def test_noiseless_async_consensus_converges():
+    """With noise off, the corrected iterates still reach consensus —
+    delays slow mixing but do not bias it (graceful degradation)."""
+    cfg = _cfg(noise=False)
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0, delays=DM)
+    s0 = _s0()
+    target = np.asarray(jnp.mean(s0[0], axis=0))
+    out, _ = _run(plan, cfg, rounds=300, state=dpps_init(s0, cfg))
+    y = np.asarray(out.push.s[0]) / np.asarray(out.push.a)[:, None]
+    np.testing.assert_allclose(y, np.broadcast_to(target, y.shape),
+                               atol=2e-3)
+
+
+def test_faults_compose_with_delays():
+    """FaultModel realizes W first; the mailbox consumes the realized W —
+    conservation survives both layers at once."""
+    cfg = _cfg()
+    plan = ProtocolPlan.from_topology(
+        TOPO, sync_interval=0, delays=DM,
+        faults=FaultModel(drop_rate=0.2, seed=4))
+    _, traj = _run(plan, cfg)
+    assert int(np.asarray(traj["net_dropped_edges"]).sum()) > 0
+    np.testing.assert_allclose(np.asarray(traj["async_mass_mean"]), 1.0,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Loop driver == scan engine under delays
+# ---------------------------------------------------------------------------
+
+def _train_session(delays, **kw):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = {"l1": jax.random.normal(k1, (12, 8)) / 3.0,
+              "l2": jax.random.normal(k2, (8, 4)) / 3.0}
+
+    def loss_fn(p, batch, k):
+        x, y = batch
+        logits = jnp.tanh(x @ p["l1"]) @ p["l2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    bk = jax.random.PRNGKey(5)
+    batches = (jax.random.normal(bk, (T, N, 6, 12)),
+               jax.random.randint(jax.random.fold_in(bk, 1), (T, N, 6), 0, 4))
+    batch_at = lambda t: jax.tree_util.tree_map(lambda x: x[t], batches)
+    session = Session.build(
+        TOPO, model=loss_fn, partition=(("l1", "shared"),), params=params,
+        privacy=PrivacySpec(b=5.0, gamma_n=1e-4, c_prime=CP, lam=LAM),
+        sync_interval=0, chunk=4, delays=delays, **kw)
+    return session, batch_at
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_loop_driver_matches_engine_under_delays(packed):
+    results = {}
+    for driver in ("engine", "loop"):
+        session, batch_at = _train_session(DM, packed=packed)
+        results[driver] = session.train(
+            T, batch_at, key=jax.random.PRNGKey(9), driver=driver)
+    st_e = results["engine"].state.dpps
+    st_l = results["loop"].state.dpps
+    _assert_trees_equal(st_e.push, st_l.push)
+    _assert_trees_equal(st_e.mail, st_l.mail)
+
+
+def test_session_delay0_train_identical_to_sync():
+    out = {}
+    for name, dm in (("sync", None), ("null", DelayModel())):
+        session, batch_at = _train_session(dm)
+        out[name] = session.train(T, batch_at, key=jax.random.PRNGKey(9))
+    _assert_trees_equal(out["sync"].state.dpps.push,
+                        out["null"].state.dpps.push)
+
+
+# ---------------------------------------------------------------------------
+# Validation surface
+# ---------------------------------------------------------------------------
+
+def test_delay_model_field_validation():
+    with pytest.raises(ValueError, match="max_delay"):
+        DelayModel(max_delay=-1)
+    with pytest.raises(ValueError, match="max_delay"):
+        DelayModel(max_delay=1.5)
+    with pytest.raises(ValueError, match="timeout_rate"):
+        DelayModel(timeout_rate=1.0)
+    with pytest.raises(ValueError, match="rates"):
+        DelayModel(rates=(1, 0, 2))
+    with pytest.raises(ValueError, match="rates"):
+        DelayModel(rates=(1, 2.0))
+    with pytest.raises(ValueError, match="one rate per node"):
+        DelayModel(rates=(1, 2)).validate_nodes(8)
+    assert not DelayModel().active
+    assert DelayModel(rates=(1, 1, 1)).active is False
+    assert DelayModel(max_delay=1).active
+
+
+def test_plan_rejects_sync_interval_with_delays():
+    with pytest.raises(ValueError, match="sync_interval"):
+        ProtocolPlan.from_topology(TOPO, sync_interval=3, delays=DM)
+
+
+def test_plan_rejects_circulant_with_delays():
+    with pytest.raises(ValueError, match="circulant"):
+        ProtocolPlan.from_topology(TOPO, schedule="circulant",
+                                   sync_interval=0, delays=DM)
+
+
+def test_plan_defaults_to_dense_schedule_under_delays():
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0, delays=DM)
+    assert plan.schedule == "dense"
+    assert plan.delays is DM
+
+
+def test_bf16_wire_rejected_with_delays():
+    cfg = _cfg(wire_dtype="bf16")
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0,
+                                      wire_dtype="bf16", delays=DM)
+    with pytest.raises(NotImplementedError, match="bf16"):
+        _run(plan, cfg)
+
+
+def test_sharded_gossip_rejected_with_delays():
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0, delays=DM)
+    with pytest.raises(NotImplementedError, match="sharded"):
+        engine_rounds._check_async(plan, object(), _cfg())
+
+
+def test_orphaned_mailbox_rejected():
+    """A state carrying in-flight mass must not run on a delay-free plan —
+    silently dropping the mailbox would abandon that mass."""
+    cfg = _cfg()
+    state = dpps_init(_s0(), cfg)
+    state = DPPSState(push=state.push, sens=state.sens, t=state.t,
+                      mail=DM.init_mailbox(state.push.s))
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0)
+    with pytest.raises(ValueError, match="mailbox"):
+        _run(plan, cfg, state=state)
+
+
+def test_session_build_rejects_delays_with_explicit_plan():
+    plan = ProtocolPlan.from_topology(TOPO, sync_interval=0)
+    with pytest.raises(ValueError, match="delays"):
+        Session.build(TOPO, privacy=PrivacySpec(b=5.0, gamma_n=0.02),
+                      plan=plan, delays=DM)
+
+
+# ---------------------------------------------------------------------------
+# CLI surface (satellite: churn + fault-seed + delay flags)
+# ---------------------------------------------------------------------------
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    add_fault_arguments(ap)
+    add_delay_arguments(ap)
+    return ap
+
+
+def _expect_cli_error(ap, fn, match):
+    with pytest.raises(SystemExit):
+        with contextlib.redirect_stderr(io.StringIO()) as err:
+            fn()
+    assert match in err.getvalue()
+
+
+def test_cli_churn_and_fault_seed():
+    ap = _cli()
+    args = ap.parse_args(["--churn", "2:5:10", "--churn", "3:0:4",
+                          "--fault-seed", "9"])
+    fm = faults_from_args(ap, args, n_nodes=8)
+    assert fm == FaultModel(churn=((2, 5, 10), (3, 0, 4)), seed=9)
+
+
+def test_cli_churn_validation():
+    ap = _cli()
+    _expect_cli_error(
+        ap, lambda: faults_from_args(
+            ap, ap.parse_args(["--churn", "9:0:4"]), n_nodes=8), "churn")
+    _expect_cli_error(
+        ap, lambda: faults_from_args(
+            ap, ap.parse_args(["--churn", "1:4"])), "NODE:T_DOWN:T_UP")
+    _expect_cli_error(
+        ap, lambda: faults_from_args(
+            ap, ap.parse_args(["--churn", "a:0:4"])), "NODE:T_DOWN:T_UP")
+    # overlapping windows are caught by FaultModel and routed to ap.error
+    _expect_cli_error(
+        ap, lambda: faults_from_args(
+            ap, ap.parse_args(["--churn", "1:0:5", "--churn", "1:3:8"])),
+        "overlap")
+
+
+def test_cli_delay_arguments():
+    ap = _cli()
+    args = ap.parse_args(["--max-delay", "2", "--timeout-rate", "0.1",
+                          "--node-rates", "1,2,1,4", "--delay-seed", "3"])
+    dm = delays_from_args(ap, args, n_nodes=4)
+    assert dm == DelayModel(max_delay=2, timeout_rate=0.1,
+                            rates=(1, 2, 1, 4), seed=3)
+    assert delays_from_args(ap, ap.parse_args([])) is None
+    # all knobs at rest -> None even with rates spelled out as all-1
+    assert delays_from_args(ap, ap.parse_args(["--node-rates", "1,1"])) is None
+    _expect_cli_error(
+        ap, lambda: delays_from_args(
+            ap, ap.parse_args(["--node-rates", "1,2"]), n_nodes=8), "rates")
+    _expect_cli_error(
+        ap, lambda: delays_from_args(
+            ap, ap.parse_args(["--timeout-rate", "1.5"])), "timeout")
+
+
+# ---------------------------------------------------------------------------
+# FaultModel churn validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_faultmodel_churn_type_validation():
+    with pytest.raises(ValueError, match="must be an int"):
+        FaultModel(churn=((1.0, 0, 4),))
+    with pytest.raises(ValueError, match="must be an int"):
+        FaultModel(churn=((1, 0, "4"),))
+    with pytest.raises(ValueError, match="must be an int"):
+        FaultModel(churn=((True, 0, 4),))
+    with pytest.raises(ValueError, match="empty"):
+        FaultModel(churn=((1, 4, 4),))
+
+
+def test_faultmodel_churn_overlap_validation():
+    with pytest.raises(ValueError, match="overlap"):
+        FaultModel(churn=((1, 0, 5), (1, 3, 8)))
+    # back-to-back windows on one node are fine; different nodes may overlap
+    FaultModel(churn=((1, 0, 5), (1, 5, 8)))
+    FaultModel(churn=((1, 0, 5), (2, 3, 8)))
+
+
+# ---------------------------------------------------------------------------
+# Staleness through the stack: ledger, bus, watchdogs
+# ---------------------------------------------------------------------------
+
+def _consensus_session(delays=DM, **kw):
+    return Session.build(
+        TOPO, privacy=PrivacySpec(b=5.0, gamma_n=0.02, c_prime=CP, lam=LAM),
+        sync_interval=0, chunk=4, delays=delays, **kw)
+
+
+def test_ledger_records_async_fields():
+    ledger = LedgerHook()
+    _consensus_session().run(T, values=_s0(), hooks=[ledger])
+    entries = ledger.ledger.entries
+    assert len(entries) == T
+    for e in entries:
+        assert 0 <= e["staleness_max"] <= DM.max_delay
+        assert e["timeouts"] >= 0
+        assert 0 < e["participating"] <= N
+    # round 0: every node participates (t % r == 0 for all r)
+    assert entries[0]["participating"] == N
+
+
+def test_network_stats_hook_publishes_staleness():
+    bus = MetricsBus()
+    sess = _consensus_session()
+    report = sess.run(T, values=_s0(), hooks=[NetworkStatsHook(bus=bus)])
+    snap = bus.snapshot()
+    hist = snap["histograms"]["net.staleness"]
+    assert hist["count"] > 0 and 0.0 <= hist["max"] <= DM.max_delay
+    assert "net.timeouts" in snap["counters"]
+    assert 0.0 < snap["gauges"]["net.participation"] <= 1.0
+    assert report.network is not None  # nominal reconstruction still works
+
+
+def test_watchdog_clean_async_run_raises_nothing():
+    wd = WatchdogHook(strict=True)
+    report = _consensus_session().run(T, values=_s0(), hooks=[wd])
+    assert not report.aborted
+    assert [a for a in wd.alerts if a.check.startswith(("staleness",
+                                                        "participation"))] \
+        == []
+
+
+def _wd_rows(rounds=6, n=4, bound=2, stale=None, part=None):
+    return {
+        "wd_nonfinite": np.zeros((rounds,)),
+        "wd_mass_drift": np.zeros((rounds,)),
+        "wd_consensus_residual": np.full((rounds,), 0.1),
+        "async_delay_hist": np.ones((rounds, bound + 1), dtype=np.int64),
+        "async_staleness_max":
+            np.zeros((rounds,), np.int64) if stale is None else stale,
+        "async_participated":
+            np.ones((rounds, n), dtype=bool) if part is None else part,
+        "async_timeouts": np.zeros((rounds,), np.int64),
+    }
+
+
+def test_watchdog_staleness_bound_violation_aborts():
+    wd = WatchdogHook(strict=True)
+    stale = np.array([0, 1, 5, 0, 0, 0], dtype=np.int64)  # 5 > B=2
+    with pytest.raises(WatchdogAbort, match="staleness"):
+        wd.consume(_wd_rows(stale=stale), t0=0)
+    assert wd.alerts[0].check == "staleness_bound"
+    assert wd.alerts[0].round == 2
+
+
+def test_watchdog_participation_gap_fires_across_segments():
+    wd = WatchdogHook(strict=False, participation_window=4)
+    part = np.ones((6, 4), dtype=bool)
+    part[:, 2] = False  # node 2 silent for 6 rounds in segment 1
+    wd.consume(_wd_rows(part=part), t0=0)
+    gaps = [a for a in wd.alerts if a.check == "participation_gap"]
+    assert len(gaps) == 1 and "node 2" in gaps[0].message
+    # the counter reset: an immediately-following healthy segment is clean
+    wd.consume(_wd_rows(), t0=6)
+    assert len([a for a in wd.alerts if a.check == "participation_gap"]) == 1
+
+
+def test_watchdog_prepare_reads_plan_bound():
+    sess = _consensus_session()
+    wd = WatchdogHook()
+    wd.prepare(sess._context(T, "dpps", 11))
+    assert wd._staleness_bound == DM.max_delay
+    assert wd.participation_window == 6  # 2 * max rate (3)

@@ -1,0 +1,137 @@
+"""Hypothesis property tests for bounded-delay async push-sum
+(repro.net.delays).
+
+The invariants that must hold for ANY delay/timeout/rate configuration,
+not just the hand-picked ones in tests/test_async.py:
+
+* mass conservation — state + inbox + in-flight calendar mass averages to
+  exactly 1 per node at every round;
+* staleness ≤ B — no delivered message is ever older than the bound;
+* delay-0 equivalence — an inactive model is dropped and the run is
+  bit-identical to the synchronous engine across every net-lab topology
+  family.
+
+Module-skipped when hypothesis is absent (the repo's [test] extra
+installs it; tier-1 containers may not)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dpps import DPPSConfig, dpps_init
+from repro.core.topology import DOutGraph, ExpGraph, RingGraph
+from repro.engine import ProtocolPlan, run_dpps
+from repro.net import (
+    DelayModel,
+    ErdosRenyiGraph,
+    RandomMatchingGraph,
+    SmallWorldGraph,
+    TorusGraph,
+)
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+N, T = 8, 10
+CFG = DPPSConfig(b=5.0, gamma_n=0.02, sync_interval=0)
+
+
+def _topo(family: str, seed: int):
+    if family == "dout":
+        return DOutGraph(n_nodes=N, d=2)
+    if family == "exp":
+        return ExpGraph(N)
+    if family == "ring":
+        return RingGraph(N)
+    if family == "er":
+        return ErdosRenyiGraph(n_nodes=N, p=0.4, seed=seed)
+    if family == "matching":
+        return RandomMatchingGraph(n_nodes=N, k=2, seed=seed)
+    if family == "smallworld":
+        return SmallWorldGraph(n_nodes=N, k=2, beta=0.3, seed=seed)
+    if family == "torus":
+        return TorusGraph(n_nodes=N)
+    raise AssertionError(family)
+
+
+FAMILIES = ["dout", "exp", "ring", "er", "matching", "smallworld", "torus"]
+
+
+def _s0(seed: int):
+    return [jax.random.normal(jax.random.PRNGKey(seed), (N, 7))]
+
+
+def _delay_model(draw_bound, timeout, rate_seed):
+    rng = np.random.default_rng(rate_seed)
+    rates = tuple(int(r) for r in rng.integers(1, 5, size=N))
+    return DelayModel(max_delay=draw_bound, timeout_rate=timeout,
+                      rates=rates, seed=rate_seed)
+
+
+@given(family=st.sampled_from(FAMILIES), seed=SEEDS, key=SEEDS,
+       bound=st.integers(min_value=0, max_value=4),
+       timeout=st.floats(min_value=0.0, max_value=0.8),
+       rate_seed=st.integers(min_value=0, max_value=2**16))
+@settings(max_examples=30, deadline=None)
+def test_mass_conserved_and_staleness_bounded_any_config(
+        family, seed, key, bound, timeout, rate_seed):
+    """The async property: for ANY (B, timeout rate, node rates) on ANY
+    family, mass conservation holds to 1e-5 and staleness stays ≤ B."""
+    dm = _delay_model(bound, timeout, rate_seed)
+    if not dm.active:
+        dm = DelayModel(max_delay=max(bound, 1), timeout_rate=timeout)
+    plan = ProtocolPlan.from_topology(_topo(family, seed), sync_interval=0,
+                                      delays=dm)
+    state = dpps_init(_s0(seed), CFG)
+    out, traj = run_dpps(state, None, jax.random.PRNGKey(key), cfg=CFG,
+                         plan=plan, rounds=T)
+    np.testing.assert_allclose(np.asarray(traj["async_mass_mean"]), 1.0,
+                               atol=1e-5)
+    assert np.asarray(traj["async_staleness_max"]).max() <= dm.max_delay
+    assert (np.asarray(traj["async_delay_hist"]) >= 0).all()
+    assert np.isfinite(np.asarray(out.push.s[0])).all()
+    assert (np.asarray(out.push.a) > 0).all()
+
+
+@given(family=st.sampled_from(FAMILIES), seed=SEEDS, key=SEEDS)
+@settings(max_examples=15, deadline=None)
+def test_delay0_bit_identical_across_families(family, seed, key):
+    """An all-defaults DelayModel is inactive: dropped at plan build, and
+    the run is bit-identical to the plain synchronous engine — for every
+    topology family the net lab ships."""
+    topo = _topo(family, seed)
+    state = dpps_init(_s0(seed), CFG)
+    k = jax.random.PRNGKey(key)
+    plan_sync = ProtocolPlan.from_topology(topo, sync_interval=0)
+    plan_null = ProtocolPlan.from_topology(topo, sync_interval=0,
+                                           delays=DelayModel())
+    assert plan_null.delays is None
+    out_s, traj_s = run_dpps(state, None, k, cfg=CFG, plan=plan_sync,
+                             rounds=T)
+    out_n, traj_n = run_dpps(state, None, k, cfg=CFG, plan=plan_null,
+                             rounds=T)
+    np.testing.assert_array_equal(np.asarray(out_s.push.s[0]),
+                                  np.asarray(out_n.push.s[0]))
+    np.testing.assert_array_equal(np.asarray(out_s.push.a),
+                                  np.asarray(out_n.push.a))
+    assert sorted(traj_s) == sorted(traj_n)
+
+
+@given(bound=st.integers(min_value=1, max_value=4), seed=SEEDS, key=SEEDS)
+@settings(max_examples=15, deadline=None)
+def test_participation_pattern_exact(bound, seed, key):
+    """Heterogeneous rates produce exactly the declared schedule."""
+    rng = np.random.default_rng(seed % 2**16)
+    rates = tuple(int(r) for r in rng.integers(1, 5, size=N))
+    dm = DelayModel(max_delay=bound, rates=rates)
+    if not dm.active:
+        return
+    plan = ProtocolPlan.from_topology(DOutGraph(n_nodes=N, d=2),
+                                      sync_interval=0, delays=dm)
+    state = dpps_init(_s0(seed), CFG)
+    _, traj = run_dpps(state, None, jax.random.PRNGKey(key), cfg=CFG,
+                       plan=plan, rounds=T)
+    part = np.asarray(traj["async_participated"], dtype=bool)
+    expect = (np.arange(T)[:, None] % np.asarray(rates)[None, :]) == 0
+    np.testing.assert_array_equal(part, expect)

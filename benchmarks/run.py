@@ -17,18 +17,19 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,fig4,fig5,table2,table3,"
-                         "table4,protocol,net,sparse,obs,async,kernels,"
-                         "roofline")
+                         "table4,protocol,net,sparse,obs,async,wire,"
+                         "kernels,roofline")
     ap.add_argument("--steps", type=int, default=None,
                     help="override per-benchmark step counts (smoke: 20)")
     ap.add_argument("--full", action="store_true", help="paper-size grids")
     args = ap.parse_args()
 
     from benchmarks import (bench_async, bench_obs, bench_protocol,
-                            bench_sparse, fig2_sensitivity, fig3_ras,
-                            fig4_scale, fig5_audit, fig_resilience,
-                            kernel_bench, roofline, table2_accuracy,
-                            table3_real_vs_esti, table4_time)
+                            bench_sparse, bench_wire, fig2_sensitivity,
+                            fig3_ras, fig4_scale, fig5_audit,
+                            fig_resilience, kernel_bench, roofline,
+                            table2_accuracy, table3_real_vs_esti,
+                            table4_time)
 
     suites = {
         "fig2": lambda: fig2_sensitivity.main(args.steps or 120),
@@ -43,6 +44,7 @@ def main() -> None:
         "sparse": lambda: bench_sparse.main(args.steps),
         "obs": lambda: bench_obs.main(args.steps),
         "async": lambda: bench_async.main(args.steps),
+        "wire": lambda: bench_wire.main(args.steps),
         "kernels": kernel_bench.main,
         "roofline": roofline.main,
     }

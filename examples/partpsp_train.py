@@ -19,7 +19,8 @@ import json
 
 import jax
 
-from repro.api import MetricsHook, add_protocol_arguments, validate_protocol_args
+from repro.api import (MetricsHook, add_protocol_arguments,
+                       validate_protocol_args, wire_from_args)
 from repro.core.partpsp import privacy_summary
 from repro.data import NodeShardedLoader, SyntheticLMStream
 from repro.launch.train import build_session
@@ -42,10 +43,10 @@ def main():
         algorithm="partpsp", b=args.b, gamma_n=args.gamma_n,
         gamma_l=0.05, gamma_s=0.05, clip=100.0, topology="dout", degree=2,
         sync_interval=5, schedule="circulant", chunk=args.chunk,
-        packed=args.packed, wire_dtype=args.wire_dtype, seed=0)
+        packed=args.packed, wire=wire_from_args(ap, args), seed=0)
     partition = session.partition
 
-    mode = f"packed/{args.wire_dtype}" if args.packed else "pytree"
+    mode = f"packed/{args.wire}" if args.packed else "pytree"
     print(f"PartPSP on {args.arch} ({'full' if args.full_scale else 'reduced'}) "
           f"| {args.nodes} nodes | d_s={partition.d_shared():,} "
           f"d_l={partition.d_local():,} | circulant gossip [{mode}] | "

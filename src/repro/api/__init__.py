@@ -32,6 +32,7 @@ from repro.api.cli import (
     make_topology,
     topology_from_args,
     validate_protocol_args,
+    wire_from_args,
 )
 from repro.api.hooks import (
     BudgetExhausted,
@@ -77,4 +78,5 @@ __all__ = [
     "make_topology",
     "topology_from_args",
     "validate_protocol_args",
+    "wire_from_args",
 ]

@@ -33,6 +33,7 @@ __all__ = [
     "faults_from_args",
     "add_delay_arguments",
     "delays_from_args",
+    "wire_from_args",
 ]
 
 # The shared --topology vocabulary: the paper circulants (dout, exp), the
@@ -105,9 +106,44 @@ def add_protocol_arguments(ap: argparse.ArgumentParser, *,
                     default=True,
                     help="run the engine over the packed (N, d_s) wire "
                          "buffer (--no-packed keeps the pytree path)")
+    ap.add_argument("--wire", type=str, default="f32", metavar="SPEC",
+                    help="wire codec spec (repro.wire): f32 | bf16 | int8 "
+                         "| topk:K | topk:1/M. Compression is applied "
+                         "strictly after DP noise (noise-then-compress); "
+                         "needs --packed and --driver engine")
     ap.add_argument("--wire-dtype", choices=("f32", "bf16"), default="f32",
-                    help="gossip wire format; bf16 halves wire bytes "
-                         "(mix in bf16, accumulate fp32; needs --packed)")
+                    help="deprecated: subsumed by --wire (use --wire bf16)")
+
+
+def wire_from_args(ap: argparse.ArgumentParser,
+                   args: argparse.Namespace) -> Any:
+    """WireCodec from ``--wire`` (or the deprecated ``--wire-dtype``), or
+    None for the raw f32 wire.
+
+    The legacy ``--wire-dtype bf16`` flag is subsumed: it maps to the
+    ``bf16`` codec with a one-per-process DeprecationWarning, and
+    conflicts with an explicit non-f32 ``--wire`` spec die as a parser
+    error. Bad specs die as ``ap.error`` with the valid vocabulary.
+    """
+    from repro.wire import parse_wire_spec
+
+    spec = getattr(args, "wire", "f32") or "f32"
+    try:
+        codec = parse_wire_spec(spec)
+    except ValueError as e:
+        ap.error(f"--wire {spec!r}: {e}")
+    legacy = getattr(args, "wire_dtype", "f32")
+    if legacy != "f32":
+        from repro.engine.plan import _warn_once
+
+        _warn_once("cli_wire_dtype",
+                   "--wire-dtype bf16 is deprecated; use --wire bf16")
+        if not codec.active:
+            codec = parse_wire_spec(legacy)
+        elif codec.name != legacy:
+            ap.error(f"--wire {spec} conflicts with the deprecated "
+                     f"--wire-dtype {legacy}; drop --wire-dtype")
+    return codec if codec.active else None
 
 
 def validate_protocol_args(ap: argparse.ArgumentParser,
@@ -115,26 +151,45 @@ def validate_protocol_args(ap: argparse.ArgumentParser,
     """Reject invalid flag combinations with an actionable parser error.
 
     Rules (mirroring ProtocolPlan's invariants, surfaced early):
-      * bf16 wire needs the packed runtime — the wire format exists as a
-        single cast of the packed buffer;
-      * bf16 wire needs the engine driver — the per-round loop runs the
-        pytree reference path;
+      * a non-f32 wire codec needs the packed runtime — every codec is a
+        transform of the packed (N, d_s) buffer;
+      * a non-f32 wire codec needs the engine driver — the per-round
+        loop runs the pytree reference path;
+      * a dtype-cast codec (bf16) does not compose with the async mailbox
+        runtime (--max-delay / --timeout-rate / --node-rates) — the
+        mailbox calendars accumulate in f32; value codecs (int8, topk) do;
       * chunk must be a positive segment length.
     """
     if getattr(args, "chunk", 1) < 1:
         ap.error("--chunk must be >= 1")
-    wire = getattr(args, "wire_dtype", "f32")
-    if wire == "f32":
+    codec = wire_from_args(ap, args)
+    if codec is None:
         return
+    name = codec.name
     if not getattr(args, "packed", True):
         ap.error(
-            f"--wire-dtype {wire} requires the packed runtime: the wire "
-            "format is a single cast of the packed (N, d_s) buffer. Drop "
-            "--no-packed, or use --wire-dtype f32 with the pytree path.")
+            f"--wire {name} requires the packed runtime: every wire codec "
+            "is a transform of the packed (N, d_s) buffer. Drop "
+            "--no-packed, or use --wire f32 (legacy: --wire-dtype f32) "
+            "with the pytree path.")
     if getattr(args, "driver", "engine") != "engine":
         ap.error(
-            f"--wire-dtype {wire} requires --driver engine: the per-round "
+            f"--wire {name} requires --driver engine: the per-round "
             "loop driver runs the pytree reference path, which is f32-only.")
+    async_on = (getattr(args, "max_delay", 0)
+                or getattr(args, "timeout_rate", 0.0)
+                or getattr(args, "node_rates", ""))
+    if async_on and not codec.transforms_values:
+        ap.error(
+            f"--wire {name} does not compose with the async mailbox "
+            "runtime: the mailbox calendars accumulate in-flight mass in "
+            "f32. Use a value codec (--wire int8, --wire topk:K) or drop "
+            "the delay flags.")
+    if getattr(args, "use_kernels", False) and codec.compress_before_noise:
+        ap.error(
+            f"--wire {name} (the deliberately broken compress-before-noise "
+            "variant) is rejected with --use-kernels: the fused kernel "
+            "path would bypass its pre-noise quantization.")
 
 
 def add_topology_arguments(ap: argparse.ArgumentParser, *,

@@ -277,10 +277,23 @@ class LedgerHook(RoundHook):
         if self.ledger is None:
             from repro.audit.ledger import PrivacyLedger
 
+            codec = getattr(ctx.plan, "wire", None) \
+                if ctx.plan is not None else None
+            d_s = int(getattr(ctx, "d_s", 0) or 0)
+            if codec is not None and getattr(codec, "active", False):
+                wire_codec = codec.name
+                bytes_edge = int(codec.payload_bytes(d_s)) if d_s else None
+            else:
+                # Raw wire: bytes are implied by wire_dtype, so leave the
+                # per-edge figure unset and stay entry-identical to a
+                # hand-driven PrivacyLedger(wire_dtype=...).
+                wire_codec = ctx.cfg.wire_dtype
+                bytes_edge = None
             self.ledger = PrivacyLedger(
                 b=ctx.cfg.b, gamma_n=ctx.cfg.gamma_n, budget=self.budget,
                 mechanism=self.mechanism, path=self.path,
-                algorithm=ctx.algorithm, wire_dtype=ctx.cfg.wire_dtype)
+                algorithm=ctx.algorithm, wire_dtype=ctx.cfg.wire_dtype,
+                wire_codec=wire_codec, wire_bytes_per_edge=bytes_edge)
         self._protected = ctx.protected
         self._sync_interval = ctx.cfg.sync_interval
 

@@ -28,7 +28,16 @@ def estimate_wire_bytes(plan, n_nodes: int, d_s: int, rounds: int) -> int:
     docstring). ``plan`` may be None (loop runs without a plan): dense
     all-to-all f32 is assumed. Self-loops (circulant offset 0, the dense
     diagonal) never cross the wire and are excluded."""
-    per_elem = 2 if plan is not None and plan.wire_dtype == "bf16" else 4
+    codec = getattr(plan, "wire", None) if plan is not None else None
+    if codec is not None and getattr(codec, "active", False):
+        # An active wire codec owns the payload accounting (repro.wire):
+        # int8 = d_s + 4 (coords + per-node scale), topk = 6k (f32 value
+        # + uint16 index per kept coordinate), bf16 = 2 d_s. The ledger,
+        # NetworkStatsHook and BENCH_wire.json all read this same figure.
+        payload = int(codec.payload_bytes(d_s))
+    else:
+        per_elem = 2 if plan is not None and plan.wire_dtype == "bf16" else 4
+        payload = d_s * per_elem
     if plan is not None and plan.schedule == "circulant" and plan.offsets:
         edges_per_round = n_nodes * sum(
             1 for o in plan.offsets if o % n_nodes != 0)
@@ -46,7 +55,7 @@ def estimate_wire_bytes(plan, n_nodes: int, d_s: int, rounds: int) -> int:
         edges_per_round = n_nodes * (n_nodes - 1)
     # message payload + push-sum weight a_i (f32) + sensitivity scalar S_i
     # (f32, broadcast for the Alg. 1 line-4 max)
-    per_round = edges_per_round * (d_s * per_elem + 4 + 4)
+    per_round = edges_per_round * (payload + 4 + 4)
     return int(int(rounds) * per_round)
 
 

@@ -186,6 +186,7 @@ class ProtocolSession:
         mesh: Any = None,
         faults: Any = None,
         delays: Any = None,
+        wire: Any = None,
         seed: int = 0,
         key: jax.Array | None = None,
     ) -> "ProtocolSession":
@@ -226,6 +227,14 @@ class ProtocolSession:
         staleness/timeout/participation stats join the trajectory. An
         inactive model is dropped — the session then runs the synchronous
         program bit-for-bit. Composes with ``faults``.
+
+        ``wire`` (a :class:`repro.wire.WireCodec`) attaches wire
+        compression: messages are encoded strictly *after* DP noise
+        injection (noise-then-compress — the epsilon accounting is
+        untouched) and the byte accounting everywhere (``RunReport``,
+        ledger, network stats) reflects the compressed payload. An
+        inactive/identity codec is dropped — the session then runs the
+        raw f32 wire bit-for-bit. Value codecs compose with ``delays``.
         """
         spec = PrivacySpec() if privacy is None else privacy
         base_key = jax.random.PRNGKey(seed) if key is None else key
@@ -249,7 +258,7 @@ class ProtocolSession:
                     topology, mesh=mesh, schedule=schedule,
                     use_kernels=use_kernels, sync_interval=sync_interval,
                     chunk=chunk, packed=packed, wire_dtype=wire_dtype,
-                    faults=faults, delays=delays)
+                    faults=faults, delays=delays, wire=wire)
             elif faults is not None:
                 raise ValueError(
                     "pass faults= either to Session.build (plan derived) or "
@@ -260,6 +269,11 @@ class ProtocolSession:
                     "pass delays= either to Session.build (plan derived) or "
                     "to ProtocolPlan.from_topology — not alongside an "
                     "explicit plan=, which already fixed the schedule")
+            elif wire is not None and getattr(wire, "active", False):
+                raise ValueError(
+                    "pass wire= either to Session.build (plan derived) or "
+                    "to ProtocolPlan.from_topology — not alongside an "
+                    "explicit plan=, which already fixed the wire format")
             cfg_sync = sync_interval if isinstance(sync_interval, int) else 0
 
             # The protocol config knows dense/circulant/sparse; "dynamic"
@@ -590,6 +604,12 @@ class ProtocolSession:
         correctly; hook captures run eagerly on the concrete diagnostics.
         """
         spec = hook_trace_spec(hooks)
+        codec = getattr(self.plan, "wire", None)
+        if codec is not None:
+            raise ValueError(
+                f"the loop driver runs the pytree path; wire codec "
+                f"{codec.name!r} needs the packed buffer — use "
+                f"driver='engine'")
         if self.cfg.wire_dtype != "f32":
             raise ValueError("the loop driver runs the pytree path; "
                              "wire_dtype='bf16' needs driver='engine'")

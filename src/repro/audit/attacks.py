@@ -156,6 +156,13 @@ class AuditConfig:
     victim: int = 0
     alpha: float = 0.05
     seed: int = 0
+    # Wire codec (repro.wire) the audited transcript is recorded through.
+    # The tap sees the POST-encode wire (what an eavesdropper sees), so
+    # the same battery referees noise-then-compress ordering empirically:
+    # honest codecs keep every bound below the claim (post-processing of
+    # the noised message cannot leak more), the deliberately broken
+    # compress-before-noise variant must be flagged.
+    wire: Any = None
 
     def topology(self) -> DOutGraph:
         return DOutGraph(n_nodes=self.n_nodes, d=self.degree)
@@ -214,7 +221,8 @@ def _tapped_trials(keys, eps_seq, *, audit: AuditConfig,
     """vmapped protocol runs with the tap on; returns stacked trajectories."""
     topo = audit.topology()
     plan = ProtocolPlan.from_topology(topo, schedule="dense",
-                                      use_kernels=False, sync_interval=None)
+                                      use_kernels=False, sync_interval=None,
+                                      wire=audit.wire)
     cfg = audit.dpps_config()
     cfg_r = plan.resolve_dpps(cfg)
     s0 = [jnp.zeros((audit.n_nodes, audit.dim), jnp.float32)]

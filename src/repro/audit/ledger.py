@@ -50,6 +50,10 @@ class PrivacyLedger:
     format the round's messages actually left the node in (the packed
     engine's bf16 wire halves the bytes an eavesdropper sees — the audit
     trail must say which format the transcript was recorded at).
+    ``wire_codec`` / ``wire_bytes_per_edge`` extend that to the
+    ``repro.wire`` compression subsystem: the codec name and the
+    effective post-compression payload bytes one message carries, so the
+    ledger and ``RunReport.network`` agree on bytes accounting.
     """
 
     b: float
@@ -59,6 +63,8 @@ class PrivacyLedger:
     path: str | None = None
     algorithm: str = "dpps"
     wire_dtype: str = "f32"
+    wire_codec: str = "f32"
+    wire_bytes_per_edge: int | None = None
 
     accountant: PrivacyAccountant = dataclasses.field(init=False)
     entries: list[dict[str, Any]] = dataclasses.field(
@@ -112,7 +118,10 @@ class PrivacyLedger:
             "mechanism": self.mechanism,
             "algorithm": self.algorithm,
             "wire_dtype": self.wire_dtype,
+            "wire_codec": self.wire_codec,
             "protected": bool(protected),
+            **({"wire_bytes_per_edge": int(self.wire_bytes_per_edge)}
+               if self.wire_bytes_per_edge is not None else {}),
             "synced": bool(synced),
             "epsilon_round": _f(eps_round),
             "epsilon_total": _f(self.accountant.epsilon_total),
@@ -211,6 +220,9 @@ class PrivacyLedger:
         out["mechanism"] = self.mechanism
         out["algorithm"] = self.algorithm
         out["wire_dtype"] = self.wire_dtype
+        out["wire_codec"] = self.wire_codec
+        if self.wire_bytes_per_edge is not None:
+            out["wire_bytes_per_edge"] = int(self.wire_bytes_per_edge)
         if self.entries:
             ests = [e["sensitivity_estimate"] for e in self.entries
                     if e["sensitivity_estimate"] is not None]

@@ -44,6 +44,20 @@ outgoing messages once at the gossip boundary (mix in bf16, accumulate and
 correct in fp32) and is only available packed — per-leaf dtype dances are
 exactly what the packed layout exists to remove.
 
+Wire compression (``cfg.wire``, a :class:`repro.wire.WireCodec`, stamped
+from ``ProtocolPlan.wire``): value codecs (int8 stochastic rounding,
+top-k + error feedback) encode the un-padded wire slice strictly *after*
+the noise barrier — noise-then-compress, so compression is DP
+post-processing and the sensitivity/epsilon accounting above is
+untouched. The encoded buffer then feeds every gossip entry point (dense
+/ sparse / circulant / the engine's ``gossip_fn``), the sync average,
+the transcript tap, and the watchdog stats, so what the audit lab
+observes is exactly what travels. Stateful codecs carry their per-node
+error-feedback residual in ``DPPSState.resid`` (attached by the engine,
+zero leaves otherwise). The deliberately-broken compress-then-noise
+variant quantizes ``s_half`` *before* the draw and scales the noise down
+— quarantined for the attack battery, which must flag it.
+
 The ``gossip_fn`` / ``node_ops`` parameters of :func:`dpps_step` exist for
 that engine layer: they swap the node-axis reductions and the mixing step
 for mesh-collective implementations without touching the protocol maths.
@@ -88,6 +102,7 @@ from repro.obs.trace import (
 )
 from repro.core.sensitivity import SensitivityState, init_sensitivity
 from repro.core.tree_utils import PyTree, tree_l1_norm_per_node, tree_node_mean
+from repro.wire.codecs import WIRE_SALT
 
 __all__ = [
     "DPPSConfig",
@@ -148,6 +163,10 @@ class DPPSConfig:
     schedule: str = "dense"   # "dense" (paper-faithful) | "circulant" | "sparse"
     use_kernels: bool = False # route noise generation through Pallas kernels
     wire_dtype: str = "f32"   # gossip wire format; "bf16" needs the packed path
+    # Wire-compression codec (repro.wire.WireCodec; None / inactive = raw
+    # f32 wire). Stamped from ProtocolPlan.wire by plan.resolve_dpps;
+    # value codecs need the packed runtime.
+    wire: Any = None
     # Which sensitivity calibrates the noise:
     #   "estimated" - Remark 1 recursion (the DPPS contribution; default)
     #   "real"      - exact max_{i,j} ||s_i - s_j||_1 (paper Table II/III
@@ -161,6 +180,21 @@ class DPPSConfig:
             raise ValueError(f"unknown schedule {self.schedule!r}")
         if self.wire_dtype not in ("f32", "bf16"):
             raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}")
+        # Normalize the codec the way the plan normalizes inactive fault /
+        # delay models: an inactive codec is the raw wire, so drop it (the
+        # config then hashes/compares equal to the uncompressed one). An
+        # active codec's dtype is authoritative — auto-stamp wire_dtype
+        # for the dtype-only bf16 codec, reject a contradictory pair.
+        if self.wire is not None and not getattr(self.wire, "active", False):
+            object.__setattr__(self, "wire", None)
+        if self.wire is not None:
+            codec_dtype = getattr(self.wire, "wire_dtype", "f32")
+            if self.wire_dtype == "f32" and codec_dtype != "f32":
+                object.__setattr__(self, "wire_dtype", codec_dtype)
+            elif self.wire_dtype != codec_dtype:
+                raise ValueError(
+                    f"wire codec {self.wire.name!r} implies wire_dtype="
+                    f"{codec_dtype!r} but cfg.wire_dtype={self.wire_dtype!r}")
         if self.sensitivity_mode not in ("estimated", "real", "fixed"):
             raise ValueError(f"unknown sensitivity_mode {self.sensitivity_mode!r}")
         if self.noise and self.b <= 0:
@@ -184,6 +218,11 @@ class DPPSState(NamedTuple):
     # The default () contributes zero pytree leaves, so synchronous
     # programs, checkpoints, and the golden-HLO pins are unchanged.
     mail: Any = ()
+    # Per-node error-feedback residual (N, d_s) under a stateful wire
+    # codec (repro.wire.TopKCodec), attached by the engine when
+    # ProtocolPlan.wire declares ``stateful``. Same zero-leaves default
+    # contract as ``mail``.
+    resid: Any = ()
 
 
 def dpps_init(s0: PyTree, cfg: DPPSConfig) -> DPPSState:
@@ -264,6 +303,29 @@ def dpps_step(
     if cfg.wire_dtype != "f32" and not packed:
         raise ValueError("wire_dtype='bf16' requires the packed runtime "
                          "(ProtocolPlan.packed=True / layout=)")
+    # cfg.__post_init__ drops inactive codecs, so a non-None cfg.wire is
+    # active. Dtype-only codecs (bf16) have already routed through
+    # wire_dtype above; only value-transforming codecs trace extra code.
+    codec = cfg.wire
+    if codec is not None and not packed:
+        raise ValueError(
+            f"wire codec {codec.name!r} requires the packed runtime "
+            "(ProtocolPlan.packed=True / layout=) — the pytree oracle "
+            "carries the raw f32 wire")
+    value_codec = codec if (codec is not None
+                            and codec.transforms_values) else None
+    if value_codec is not None and value_codec.stateful and not isinstance(
+            state.resid, jnp.ndarray):
+        raise ValueError(
+            f"wire codec {value_codec.name!r} carries an error-feedback "
+            "residual; attach DPPSState.resid as an (N, d_s) f32 buffer "
+            "(repro.engine.run_dpps does this automatically)")
+    if value_codec is not None and value_codec.compress_before_noise \
+            and cfg.use_kernels:
+        raise NotImplementedError(
+            f"wire codec {value_codec.name!r} (compress-before-noise, "
+            "audit bait) is not implemented on the fused kernel path; "
+            "set use_kernels=False")
     s = state.push.s
     n_nodes = state.push.a.shape[0]
 
@@ -291,7 +353,8 @@ def dpps_step(
             eps_l1 = tree_l1_norm_per_node(eps)
         need_s_half = (return_s_half or cfg.sensitivity_mode == "real"
                        or mechanism is not None
-                       or not (cfg.noise and cfg.gamma_n > 0))
+                       or not (cfg.noise and cfg.gamma_n > 0)
+                       or value_codec is not None)
         if need_s_half or not cfg.use_kernels:
             if packed:
                 s_half = s + eps if eps_is_buf else layout.add_wire(s, eps)
@@ -333,9 +396,21 @@ def dpps_step(
             s_used = s_net
 
     # -- 3. Laplace noise (Eq. 8, Lemma 1) -----------------------------------
+    new_resid = state.resid
+    if value_codec is not None and value_codec.compress_before_noise:
+        # Deliberately WRONG ordering (audit bait, see repro.wire): the
+        # clean s_half is quantized first and the noise below is scaled
+        # down by codec.noise_scale_factor — the attack battery must
+        # flag the resulting epsilon. Honest codecs never take this path.
+        s_half, new_resid = layout.encode_wire(
+            value_codec, s_half, new_resid,
+            jax.random.fold_in(key, WIRE_SALT))
     with phase(PHASE_DPPS_NOISE):
         if cfg.noise and cfg.gamma_n > 0:
             noise_scale = s_used / cfg.b
+            if value_codec is not None and \
+                    value_codec.noise_scale_factor != 1.0:
+                noise_scale = noise_scale * value_codec.noise_scale_factor
             if mechanism is None and cfg.use_kernels:
                 from repro.kernels import ops as kops
 
@@ -389,6 +464,16 @@ def dpps_step(
         else:
             noise_l1 = jnp.zeros((n_nodes,), jnp.float32)
             s_noise = s_half
+        if value_codec is not None and not value_codec.compress_before_noise:
+            # Noise-then-compress: the codec sees only the already-noised
+            # (barrier-pinned) wire, so encoding is DP post-processing —
+            # sensitivity recursion and epsilon accounting above are
+            # untouched. The encoded buffer is barrier-pinned too: gossip,
+            # sync, tap and watchdog must all read the same wire bytes.
+            s_noise, new_resid = layout.encode_wire(
+                value_codec, s_noise, new_resid,
+                jax.random.fold_in(key, WIRE_SALT))
+            s_noise = jax.lax.optimization_barrier(s_noise)
         sens = sens._replace(prev_noise_l1=noise_l1)
 
     # -- 4. gossip (Eq. 9) ----------------------------------------------------
@@ -487,7 +572,7 @@ def dpps_step(
             sens = sens._replace(s_local=s_loc, prev_noise_l1=prev_l1)
 
     new_state = DPPSState(push=push_new, sens=sens, t=state.t + 1,
-                          mail=state.mail)
+                          mail=state.mail, resid=new_resid)
 
     diag: dict[str, Any] = {
         "sensitivity_used": s_used,
@@ -509,6 +594,13 @@ def dpps_step(
             diag["wd_mass_drift"] = jnp.abs(jnp.mean(push_new.a) - 1.0)
             diag["wd_consensus_residual"] = consensus_error(
                 correct(push_new.s, push_new.a))
+            if value_codec is not None and value_codec.stateful:
+                # Error-feedback health: the mean per-node L1 of the
+                # carried residual. Top-k is a contraction so this must
+                # stay bounded; the watchdog's wire_residual check warns
+                # on an unbounded rising trend.
+                diag["wd_wire_resid"] = node_ops.vmean(
+                    jnp.sum(jnp.abs(new_resid), axis=-1))
     if tap is not None:
         # Wire-visible payloads of this round (see repro.audit.transcript):
         # every node broadcasts its noised message s_noise + push-sum weight

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -107,11 +107,29 @@ class PackedLayout:
     def pad(self) -> int:
         return self.d_pad - self.d_s
 
-    def wire_bytes_per_node(self, wire_dtype: str = "f32") -> int:
+    def wire_bytes_per_node(self, wire_dtype: str = "f32",
+                            codec=None) -> int:
         """Bytes one node puts on the wire per round (d_s, not d_pad —
-        padding lanes never leave the host)."""
+        padding lanes never leave the host). An active wire codec
+        (``repro.wire.WireCodec``) owns the accounting — int8 ships
+        ``d_s + 4`` (coords + per-node scale), top-k ``6k`` (f32 value +
+        uint16 index per kept coordinate)."""
+        if codec is not None and getattr(codec, "active", False):
+            return int(codec.payload_bytes(self.d_s))
         itemsize = {"f32": 4, "bf16": 2}[wire_dtype]
         return self.d_s * itemsize
+
+    def encode_wire(self, codec, buf: jnp.ndarray, resid,
+                    key: jax.Array) -> tuple[jnp.ndarray, Any]:
+        """Run a wire codec over the packed buffer's un-padded slice.
+
+        Returns the buffer with the encoded (dequantized f32 view) wire
+        row spliced back over the same padding, plus the codec's new
+        error-feedback residual. The seam ``core.dpps.dpps_step`` routes
+        compression through — padding lanes never reach the codec.
+        """
+        enc, new_resid = codec.encode(self.wire_slice(buf), resid, key)
+        return self.append_pad(enc, buf), new_resid
 
     # -- pack / unpack (jit-safe; leading dims ride along) -------------------
 

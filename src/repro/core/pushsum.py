@@ -36,6 +36,15 @@ is exactly one contraction per round, and the wire format becomes a single
 cast — ``wire_dtype="bf16"`` mixes bf16 messages with fp32 accumulation
 (the push-sum weights ``a`` always mix in fp32; the correction y = s/a
 stays fp32).
+
+Wire compression (repro.wire) deliberately does NOT live here: value
+codecs (int8 stochastic rounding, top-k + error feedback) encode the
+noised message in ``core.dpps.dpps_step`` — through
+``PackedLayout.encode_wire``, strictly after noise injection — so every
+gossip entry point in this module (dense, circulant, sparse, packed, and
+the async mailbox's ``gossip_fn``) mixes the already-encoded f32 buffer
+identically. The dequantized f32 view *is* the wire value; these mixers
+never see, and never need to see, the codec.
 """
 from __future__ import annotations
 

@@ -62,6 +62,18 @@ from repro.core.topology import Topology
 
 __all__ = ["ProtocolPlan"]
 
+_WARNED: set[str] = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    """One DeprecationWarning per process per key (the CLI shim pattern)."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    import warnings
+
+    warnings.warn(msg, DeprecationWarning, stacklevel=3)
+
 
 @dataclasses.dataclass(frozen=True)
 class ProtocolPlan:
@@ -94,7 +106,16 @@ class ProtocolPlan:
                      (tests/test_engine.py pins packed == pytree in f32).
       wire_dtype     gossip wire format, "f32" | "bf16". bf16 mixes the
                      outgoing messages in bf16 with fp32 accumulation
-                     (half the wire bytes; requires packed=True).
+                     (half the wire bytes; requires packed=True). Stamped
+                     automatically from ``wire`` when a codec is attached;
+                     prefer the codec seam.
+      wire           the active repro.wire.WireCodec compression stage on
+                     the packed wire buffer (int8 stochastic rounding,
+                     top-k + error feedback, bf16 cast). Applied strictly
+                     after noise injection (noise-then-compress, DP
+                     post-processing); an inactive/identity codec is
+                     dropped so the compiled program stays bit-identical
+                     to the raw packed runtime. None otherwise.
       delays         the active repro.net.delays.DelayModel: the scan then
                      carries a message Mailbox next to the state and runs
                      each round's gossip through DelayModel.open_round
@@ -120,8 +141,30 @@ class ProtocolPlan:
     wire_dtype: str = "f32"
     faults: Any = None  # repro.net.faults.FaultModel (duck-typed: no import)
     delays: Any = None  # repro.net.delays.DelayModel (duck-typed: no import)
+    wire: Any = None    # repro.wire.WireCodec (duck-typed: no import)
 
     def __post_init__(self):
+        # Wire-codec normalization mirrors the inactive fault/delay drop:
+        # the identity codec IS the raw wire, so it vanishes from the plan
+        # and the compiled program stays pinned. An attached codec's dtype
+        # is authoritative for wire_dtype (the bf16 codec routes through
+        # the existing mixed-precision branches).
+        if self.wire is not None and not getattr(self.wire, "active", False):
+            object.__setattr__(self, "wire", None)
+        if self.wire is not None:
+            codec_dtype = getattr(self.wire, "wire_dtype", "f32")
+            if self.wire_dtype == "f32" and codec_dtype != "f32":
+                object.__setattr__(self, "wire_dtype", codec_dtype)
+            elif self.wire_dtype != codec_dtype:
+                raise ValueError(
+                    f"wire codec {self.wire.name!r} implies wire_dtype="
+                    f"{codec_dtype!r} but the plan says "
+                    f"{self.wire_dtype!r}")
+            if not self.packed:
+                raise ValueError(
+                    f"wire codec {self.wire.name!r} requires packed=True "
+                    "(compression is a pass over the packed (N, d_s) "
+                    "buffer; the pytree oracle carries the raw f32 wire)")
         if self.wire_dtype not in ("f32", "bf16"):
             raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}")
         if self.wire_dtype != "f32" and not self.packed:
@@ -163,6 +206,7 @@ class ProtocolPlan:
         wire_dtype: str = "f32",
         faults: Any = None,
         delays: Any = None,
+        wire: Any = None,
     ) -> "ProtocolPlan":
         """Derive the plan for ``topo`` (and optionally a device mesh).
 
@@ -183,7 +227,37 @@ class ProtocolPlan:
         message mailbox through the scan; an inactive one (delay 0, no
         timeouts, all rates 1) is dropped, which is what makes the
         delay-0 program bit-identical to the synchronous engine.
+        ``wire`` (a :class:`repro.wire.WireCodec`) attaches a wire
+        compression stage the same way — inactive/identity codecs are
+        dropped; the legacy ``wire_dtype="bf16"`` knob is subsumed by
+        ``wire=Bf16Codec()`` and warns once per process.
         """
+        if wire is not None and not getattr(wire, "active", False):
+            wire = None  # identity codec: the raw packed wire
+        if wire_dtype != "f32":
+            _warn_once(
+                "wire_dtype",
+                "ProtocolPlan.from_topology(wire_dtype='bf16') is "
+                "deprecated; pass wire=repro.wire.Bf16Codec() "
+                "(CLI: --wire bf16)")
+            if wire is None:
+                from repro.wire import Bf16Codec
+
+                wire = Bf16Codec()
+            elif getattr(wire, "wire_dtype", "f32") != wire_dtype:
+                raise ValueError(
+                    f"conflicting wire settings: wire_dtype={wire_dtype!r} "
+                    f"vs codec {wire.name!r}")
+            wire_dtype = "f32"  # __post_init__ re-stamps from the codec
+        if (wire is not None and delays is not None
+                and getattr(delays, "active", False)
+                and getattr(wire, "wire_dtype", "f32") != "f32"):
+            raise ValueError(
+                f"wire codec {wire.name!r} (a dtype-cast codec) does not "
+                "compose with the async mailbox runtime: the mailbox "
+                "calendars accumulate in-flight mass in f32. Use a "
+                "value codec (int8, topk) — those encode before enqueue "
+                "and the calendars stay f32 — or drop delays=")
         if schedule not in (None, "dense", "circulant", "sparse"):
             raise ValueError(f"unknown schedule {schedule!r} (dynamic is "
                              "selected by passing faults=, not schedule=)")
@@ -282,7 +356,8 @@ class ProtocolPlan:
                    mix_weights=mix_weights, ws=ws, sparse_idx=sparse_idx,
                    sparse_vals=sparse_vals, use_kernels=use_kernels,
                    sync_interval=sync_interval, chunk=chunk, packed=packed,
-                   wire_dtype=wire_dtype, faults=faults, delays=delays)
+                   wire_dtype=wire_dtype, faults=faults, delays=delays,
+                   wire=wire)
 
     # -- per-round mixing operands -------------------------------------------
 
@@ -325,6 +400,14 @@ class ProtocolPlan:
             schedule="dense" if self.schedule == "dynamic" else self.schedule,
             use_kernels=self.use_kernels,
             wire_dtype=self.wire_dtype)
+        # Vendored golden configs predate the wire field; only stamp it
+        # where the config can carry it, and never drop an active codec.
+        if "wire" in getattr(type(cfg), "__dataclass_fields__", ()):
+            updates["wire"] = self.wire
+        elif self.wire is not None and getattr(self.wire, "active", False):
+            raise ValueError(
+                f"plan carries wire codec {self.wire.name!r} but "
+                f"{type(cfg).__name__} has no 'wire' field")
         if self.sync_interval is not None:
             updates["sync_interval"] = int(self.sync_interval)
         return dataclasses.replace(cfg, **updates)

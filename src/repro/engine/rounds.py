@@ -58,6 +58,14 @@ per-round staleness/timeout/participation stats join the trajectory.
 Inactive/absent delay models are dropped at plan build, so the delay-0
 program is bit-identical to the synchronous engine (pinned in
 tests/test_async.py).
+
+Wire compression (``ProtocolPlan.wire``, an active
+``repro.wire.WireCodec``): the round encodes the noised wire inside the
+step (noise-then-compress); the only engine-level work is carrying the
+error-feedback residual for stateful codecs (``DPPSState.resid``,
+attached here like the mailbox) and forcing single-leaf trees onto the
+packed layout. Inactive/identity codecs are dropped at plan build —
+the compiled program stays the raw packed engine's.
 """
 from __future__ import annotations
 
@@ -191,9 +199,15 @@ def _check_async(plan: ProtocolPlan, gossip_builder, cfg: DPPSConfig) -> bool:
             "the async study on the single-device engine, or detach the "
             "DelayModel on the mesh")
     if cfg.wire_dtype != "f32":
+        codec = getattr(plan, "wire", None)
+        what = (f"wire codec {codec.name!r}" if codec is not None
+                else "bf16 wire (wire_dtype='bf16')")
         raise NotImplementedError(
-            "bf16 wire + async mailboxes is not implemented (the mailbox "
-            "carry accumulates in-flight mass in f32); use wire_dtype='f32'")
+            f"{what} does not compose with the async mailbox runtime: the "
+            "mailbox calendars accumulate in-flight mass in f32. Value "
+            "codecs (int8, topk:K) DO compose — they encode the payload "
+            "before it is enqueued and the calendars stay f32 — so use "
+            "one of those, or drop to the raw f32 wire")
     if cfg.sync_interval > 0:
         raise ValueError(
             "sync_interval > 0 with an active DelayModel would average "
@@ -275,13 +289,14 @@ def wire_layout(plan: ProtocolPlan, shared: PyTree) -> PackedLayout | None:
     when the shared tree is already a single contiguous 2-D leaf (packing
     one leaf removes no per-leaf work, it only adds wire-row copies —
     measured ~1.6x slower at the table4 single-leaf scale; single-leaf
-    trees still pack when the plan needs the buffer form: bf16 wire or
-    the fused Pallas kernels)."""
+    trees still pack when the plan needs the buffer form: bf16 wire, an
+    active wire codec, or the fused Pallas kernels)."""
     leaves = jax.tree_util.tree_leaves(shared)
     if not plan.packed or not leaves:
         return None
     if (len(leaves) == 1 and leaves[0].ndim == 2
-            and plan.wire_dtype == "f32" and not plan.use_kernels):
+            and plan.wire_dtype == "f32" and not plan.use_kernels
+            and getattr(plan, "wire", None) is None):
         return None
     # The 128-lane padding exists for the Pallas kernels' tile alignment;
     # the jnp path gains nothing from it and would pay a pad slice+concat
@@ -290,8 +305,14 @@ def wire_layout(plan: ProtocolPlan, shared: PyTree) -> PackedLayout | None:
     # the copy on TPU).
     from repro.core.packing import LANE
 
-    return PackedLayout.from_tree(shared,
-                                  lane=LANE if plan.use_kernels else 1)
+    layout = PackedLayout.from_tree(shared,
+                                    lane=LANE if plan.use_kernels else 1)
+    codec = getattr(plan, "wire", None)
+    if codec is not None and getattr(codec, "active", False):
+        # Fail fast on codec/width contract violations (e.g. top-k's
+        # uint16 index bound) before any compile work happens.
+        codec.payload_bytes(layout.d_s)
+    return layout
 
 
 def _pack_dpps(state: DPPSState, layout: PackedLayout) -> DPPSState:
@@ -338,6 +359,35 @@ def _ensure_mail(state: DPPSState, plan: ProtocolPlan,
             "DelayModel — running it synchronously would abandon the "
             "in-flight message mass; keep the DelayModel on the plan (or "
             "drain the mailbox by finishing the async run first)")
+    return state
+
+
+def _ensure_resid(state: DPPSState, plan: ProtocolPlan,
+                  layout: PackedLayout | None) -> DPPSState:
+    """Attach the error-feedback residual for stateful wire codecs;
+    reject orphaned ones (the ``_ensure_mail`` contract).
+
+    A state already carrying a residual (a resumed top-k run) keeps it —
+    the un-sent compression error continues to be re-injected.
+    """
+    codec = getattr(plan, "wire", None)
+    if codec is not None and getattr(codec, "stateful", False):
+        if layout is None:
+            raise ValueError(
+                f"wire codec {codec.name!r} needs the packed layout; "
+                "build the plan with packed=True")
+        if not isinstance(state.resid, jnp.ndarray):
+            n = state.push.a.shape[0]
+            state = state._replace(
+                resid=jnp.zeros((n, layout.d_s), jnp.float32))
+        return state
+    if isinstance(state.resid, jnp.ndarray):
+        raise ValueError(
+            "state carries an error-feedback residual but the plan's wire "
+            "codec is not stateful — running it would silently drop the "
+            "carried compression error; keep the top-k codec on the plan, "
+            "or discard the residual explicitly with "
+            "state._replace(resid=())")
     return state
 
 
@@ -388,6 +438,7 @@ def run_dpps(
     if layout is not None:
         state = _pack_dpps(state, layout)
     state = _ensure_mail(state, plan, asynchronous)
+    state = _ensure_resid(state, plan, layout)
     if eps_seq is None:
         if rounds is None:
             raise ValueError("rounds= is required when eps_seq is None")
@@ -471,6 +522,7 @@ def run_partpsp(
     if layout is not None:
         state = state._replace(dpps=_pack_dpps(state.dpps, layout))
     state = state._replace(dpps=_ensure_mail(state.dpps, plan, asynchronous))
+    state = state._replace(dpps=_ensure_resid(state.dpps, plan, layout))
 
     def body(st: PartPSPState, batch_t):
         k = jax.random.fold_in(key, st.dpps.t)

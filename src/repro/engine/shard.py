@@ -36,7 +36,9 @@ so each shard flattens its local ``(N/shards, ...)`` block into its own
 the in/out specs below are written against the caller-visible pytree
 state. Dense gossip then all-gathers one contiguous buffer per round
 instead of one tensor per leaf. ``wire_dtype="bf16"`` is not implemented
-for the collective gossip path (dpps_step raises; use f32 on the mesh).
+for the collective gossip path (dpps_step raises; use f32 on the mesh),
+and wire codecs (``ProtocolPlan.wire``, repro.wire) are rejected the same
+way (:func:`_check_cfg`).
 
 Scope: one gossip axis (single-pod meshes — axis "data"). Multi-pod meshes
 (two gossip axes) currently go through the auto-sharded ``jax.jit`` path in
@@ -244,6 +246,16 @@ def _check_cfg(cfg: DPPSConfig, n_nodes: int, n_shards: int,
             "schedule='sparse' masks the edge list there without ever "
             "stacking dense (T, N, N) weights; *static* sparse plans (no "
             "faults) shard fine.")
+    codec = None if plan is None else getattr(plan, "wire", None)
+    if codec is not None:
+        raise NotImplementedError(
+            f"wire codec {codec.name!r} (ProtocolPlan.wire / wire=) is not "
+            "implemented for the sharded engine: the codec's per-node "
+            "encode (and its error-feedback residual) runs on the packed "
+            "(N, d_s) buffer, which the shard_map body builds per shard "
+            "while the all-gathered gossip operand crosses shards "
+            "unencoded. Run wire-compression studies on the "
+            "single-device engine.")
 
 
 def shard_run_dpps(

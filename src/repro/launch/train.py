@@ -61,6 +61,7 @@ from repro.api import (
     make_topology as _registry_topology,
     topology_from_args,
     validate_protocol_args,
+    wire_from_args,
 )
 from repro.configs import ARCH_NAMES, get_config
 from repro.data import NodeShardedLoader, SyntheticLMStream
@@ -78,7 +79,7 @@ def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
                   sync_interval: int = 5, schedule: str = "dense",
                   use_kernels: bool = False, seed: int = 0, chunk: int = 50,
                   packed: bool = True, wire_dtype: str = "f32", faults=None,
-                  delays=None):
+                  delays=None, wire=None):
     """Arch-specific assembly -> one protocol session (the front door).
 
     Owns only what is genuinely arch-shaped — model construction and the
@@ -110,7 +111,7 @@ def build_session(arch_name: str, *, reduced: bool, n_nodes: int,
         gamma_s=gamma_s, clip=clip, schedule=schedule,
         sync_interval=sync_interval, use_kernels=use_kernels, chunk=chunk,
         packed=packed, wire_dtype=wire_dtype, faults=faults, delays=delays,
-        seed=seed)
+        wire=wire, seed=seed)
     return model, model_cfg, session
 
 
@@ -184,6 +185,7 @@ def main() -> None:
     topo = topology_from_args(ap, args, args.nodes)
     faults = faults_from_args(ap, args, n_nodes=args.nodes)
     delays = delays_from_args(ap, args, n_nodes=args.nodes)
+    wire = wire_from_args(ap, args)
     if delays is not None and args.sync_interval:
         ap.error("--max-delay/--timeout-rate/--node-rates need "
                  "--sync-interval 0: a synchronization round would average "
@@ -209,10 +211,11 @@ def main() -> None:
         topology=topo, sync_interval=args.sync_interval,
         schedule=args.schedule, use_kernels=args.use_kernels,
         seed=args.seed, chunk=args.chunk, packed=args.packed,
-        wire_dtype=args.wire_dtype, faults=faults, delays=delays)
+        faults=faults, delays=delays, wire=wire)
     partition = session.partition
 
-    mode = (f"packed/{args.wire_dtype}" if args.driver == "engine"
+    wire_name = wire.name if wire is not None else "f32"
+    mode = (f"packed/{wire_name}" if args.driver == "engine"
             and args.packed else "pytree")
     print(f"arch={args.arch} ({'reduced' if args.reduced else 'FULL'}) "
           f"algorithm={args.algorithm} nodes={args.nodes} topo={args.topology}"

@@ -69,6 +69,9 @@ class NetworkStats:
     #   support (realized + dropped edges) — not RunReport.wire_bytes's
     #   all-to-all dense estimate, so effective/nominal isolates the
     #   faults' effect rather than the graph's sparsity
+    wire_codec: str = "f32"          # active repro.wire codec (or dtype)
+    payload_bytes: int = 0           # post-compression bytes per message
+    compression_ratio: float = 1.0   # raw f32 message bytes / payload_bytes
 
     @property
     def all_windows_connected(self) -> bool:
@@ -94,6 +97,9 @@ class NetworkStats:
             "all_windows_connected": self.all_windows_connected,
             "effective_bytes": self.effective_bytes,
             "nominal_bytes": self.nominal_bytes,
+            "wire_codec": self.wire_codec,
+            "payload_bytes": self.payload_bytes,
+            "compression_ratio": round(self.compression_ratio, 3),
         }
 
 
@@ -180,6 +186,8 @@ class NetworkStatsHook(RoundHook):
             bus.count("net.realized_edges",
                       int((adj & ~eye).sum()), round=t_last)
             bus.count("net.dropped_edges", int(dropped.sum()), round=t_last)
+            bus.gauge("wire.compression_ratio", self._wire_payload()[2],
+                      round=t_last)
 
     def finish(self) -> None:  # stats are pulled, not pushed
         pass
@@ -213,6 +221,25 @@ class NetworkStatsHook(RoundHook):
         adj |= eye
         return adj, out_deg, np.zeros((n_rounds,), dtype=np.int64)
 
+    def _wire_payload(self) -> tuple[str, int, float]:
+        """(codec name, post-compression message bytes, compression ratio).
+
+        The same per-message accounting as
+        :func:`repro.api.results.estimate_wire_bytes`: an active wire
+        codec (``ProtocolPlan.wire``) owns it, otherwise the wire dtype
+        does. The ratio compares against the raw 4-byte-per-element f32
+        message — it is what the ``wire.compression_ratio`` gauge reports.
+        """
+        d_s = int(getattr(self._ctx, "d_s", 0) or 0)
+        codec = getattr(self._ctx.plan, "wire", None)
+        if codec is not None and getattr(codec, "active", False):
+            name, msg_bytes = codec.name, int(codec.payload_bytes(d_s))
+        else:
+            name = self._ctx.cfg.wire_dtype
+            msg_bytes = d_s * (2 if name == "bf16" else 4)
+        ratio = (4.0 * d_s / msg_bytes) if msg_bytes else 1.0
+        return name, msg_bytes, ratio
+
     def network_stats(self) -> NetworkStats | None:
         if self._ctx is None or not self._adj:
             return None
@@ -230,8 +257,8 @@ class NetworkStatsHook(RoundHook):
             windows += 1
             connected += int(strongly_connected(union))
 
-        per_elem = 2 if self._ctx.cfg.wire_dtype == "bf16" else 4
-        payload = self._ctx.d_s * per_elem + 8  # message + a_i + S_i scalars
+        codec_name, msg_bytes, ratio = self._wire_payload()
+        payload = msg_bytes + 8  # message + a_i + S_i scalars
         # Nominal = what the fault-free topology would have sent: per round,
         # realized + dropped is exactly the nominal non-self support
         # (FaultModel.realize defines dropped as nominal minus realized).
@@ -243,4 +270,6 @@ class NetworkStatsHook(RoundHook):
             out_degree_min=out_deg.min(axis=1) if rounds else out_deg,
             connected_windows=connected, windows=windows,
             effective_bytes=int(realized.sum()) * payload,
-            nominal_bytes=nominal_edges * payload)
+            nominal_bytes=nominal_edges * payload,
+            wire_codec=codec_name, payload_bytes=msg_bytes,
+            compression_ratio=ratio)

@@ -47,6 +47,11 @@ _SEVERITY = {
     # longer than its rate explains, are both broken-runtime findings.
     "staleness_bound": "critical",
     "participation_gap": "critical",
+    # Wire compression (ProtocolPlan.wire): a stateful codec's
+    # error-feedback residual should stay bounded — top-k is a
+    # contraction, so a rising residual means the compressor is falling
+    # behind the iterates (degradation, not breakage).
+    "wire_residual": "warn",
 }
 
 
@@ -96,6 +101,12 @@ class WatchdogHook(RoundHook):
     longer than ``participation_window`` rounds. Both are critical and
     abort under ``strict=True``.
 
+    Wire-compression runs (``ProtocolPlan.wire`` with a stateful codec —
+    top-k + error feedback) add a warn-only bounded-residual check on the
+    ``wd_wire_resid`` rows: the same trailing-window trend test as the
+    consensus residual, on the mean per-node L1 of the codec's
+    error-feedback residual.
+
     ``alerts`` accumulates every finding; each is warned once through
     ``warn`` (default: the obs logger) and published to ``bus`` as an
     ``alert`` event named ``watchdog.<check>``.
@@ -120,6 +131,8 @@ class WatchdogHook(RoundHook):
         self.alerts: list[Alert] = []
         self._residuals: list[float] = []
         self._trend_round: int | None = None  # last round a trend fired at
+        self._wire_resid: list[float] = []    # EF residual L1 (wire codecs)
+        self._wire_round: int | None = None
         self._staleness_bound: int | None = None  # plan's B (async runs)
         self._part_gap = None  # (N,) rounds-since-participation, cross-segment
 
@@ -173,6 +186,14 @@ class WatchdogHook(RoundHook):
         trend = self._check_trend(t0 + len(np.atleast_1d(mass)) - 1)
         if trend is not None:
             self._raise_alert(*trend)
+
+        if "wd_wire_resid" in rows:
+            self._wire_resid.extend(
+                np.asarray(rows["wd_wire_resid"]).tolist())
+            wtrend = self._check_wire_resid(
+                t0 + len(np.atleast_1d(mass)) - 1)
+            if wtrend is not None:
+                self._raise_alert(*wtrend)
 
         if "sensitivity_real" in rows and "sensitivity_estimate" in rows:
             real = np.asarray(rows["sensitivity_real"])
@@ -229,6 +250,33 @@ class WatchdogHook(RoundHook):
                     f"{window}) — it is effectively down, not just slow")
                 self._part_gap[worst] = 0  # one finding per outage, not per round
         return critical
+
+    def _check_wire_resid(self, t_last: int):
+        """Rising error-feedback-residual check (stateful wire codecs).
+
+        Same trailing-window shape as :meth:`_check_trend`, on the
+        ``wd_wire_resid`` rows ``dpps_step`` emits when a stateful codec
+        (top-k + error feedback) is on the wire: mean per-node L1 of the
+        residual. A bounded residual tracks the iterate scale; a
+        sustained rise means compression error is accumulating faster
+        than the feedback re-injects it.
+        """
+        w = self.trend_window
+        if len(self._wire_resid) < w:
+            return None
+        if self._wire_round is not None and t_last - self._wire_round < w:
+            return None
+        tail = np.asarray(self._wire_resid[-w:])
+        older, newer = tail[: w // 2].mean(), tail[w // 2:].mean()
+        if older > 0.0 and newer > self.trend_factor * older:
+            self._wire_round = t_last
+            return ("wire_residual", t_last, float(newer),
+                    float(self.trend_factor * older),
+                    f"round {t_last}: wire-codec error-feedback residual "
+                    f"rising — trailing mean L1 {newer:.3e} vs {older:.3e} "
+                    f"a half-window ago (> {self.trend_factor:g}x); the "
+                    "compressor is falling behind the iterates")
+        return None
 
     def _check_trend(self, t_last: int):
         """Rising-consensus-residual check over the trailing window."""

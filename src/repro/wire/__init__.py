@@ -1,0 +1,29 @@
+"""repro.wire — value-wise wire compression on the packed gossip buffer.
+
+Frozen, hashable codecs riding on :class:`repro.engine.ProtocolPlan`
+(``wire=``), applied strictly *after* noise injection so the DPPS
+privacy accounting is untouched (see ``codecs`` module docstring for the
+noise-then-compress argument and the deliberately-broken counterexample
+the audit lab flags).
+"""
+from repro.wire.codecs import (
+    Bf16Codec,
+    BrokenCompressFirstCodec,
+    IdentityCodec,
+    Int8StochasticCodec,
+    TopKCodec,
+    WIRE_SALT,
+    WireCodec,
+    parse_wire_spec,
+)
+
+__all__ = [
+    "WireCodec",
+    "IdentityCodec",
+    "Bf16Codec",
+    "Int8StochasticCodec",
+    "TopKCodec",
+    "BrokenCompressFirstCodec",
+    "parse_wire_spec",
+    "WIRE_SALT",
+]

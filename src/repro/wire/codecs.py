@@ -1,0 +1,290 @@
+"""Wire-compression codecs for the packed ``(N, d_s)`` gossip buffer.
+
+PartPSP's thesis is that shrinking what travels on the wire
+(dimension-wise, via partial communication) buys a better privacy–utility
+trade-off; this module generalizes that to *value-wise* reduction. A
+:class:`WireCodec` is a frozen, hashable compression stage riding on
+:class:`repro.engine.ProtocolPlan` exactly like ``DelayModel`` /
+``FaultModel``: inactive codecs are dropped at plan build (so the default
+program is bit-identical to the uncompressed packed runtime, golden-HLO
+pins included), active codecs are threaded through the scan by
+``core.dpps.dpps_step``.
+
+DP ordering — noise-then-compress
+---------------------------------
+Every honest codec encodes the **already-noised** wire row (``s_noise``,
+after the Eq.-8 Laplace draw and its optimization barrier). The Laplace
+mechanism's (b / gamma_n)-DP guarantee is a property of ``s_noise``
+itself; any post-processing of it — quantization, sparsification, a dtype
+cast — cannot increase epsilon (DP post-processing theorem). So the
+sensitivity recursion, the noise calibration, and the privacy ledger are
+all untouched by compression. The converse ordering (compress, then noise
+"less, because the wire carries fewer bits") is the classic fallacy;
+:class:`BrokenCompressFirstCodec` implements it deliberately so the
+empirical-epsilon attack battery (``repro.audit``) can flag it, the same
+way the broken half-scale Laplace mechanism is flagged.
+
+Codec contract
+--------------
+``encode(wire, resid, key) -> (enc, new_resid)`` where ``wire`` is the
+un-padded ``(N, d_s)`` f32 slice and ``enc`` is the *dequantized f32 view*
+of what travels: the receiver of an int8 message dequantizes to f32 and
+accumulates in f32, which is exactly what the f32 mixing contraction
+computes on ``enc`` — so one encode on the sender side models the whole
+encode/wire/decode round trip bit-exactly, for every gossip entry point
+(dense, sparse-CSR, circulant, and the async mailbox ``gossip_fn``).
+``payload_bytes(d_s)`` is the bytes-on-the-wire accounting the ledger,
+``RunReport.network`` and BENCH_wire.json all share.
+
+Stateful codecs (top-k with error feedback) carry a per-node residual
+through the scan as the ``DPPSState.resid`` leaf — attached by the engine
+when the plan's codec declares ``stateful``, zero pytree leaves otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "WireCodec",
+    "IdentityCodec",
+    "Bf16Codec",
+    "Int8StochasticCodec",
+    "TopKCodec",
+    "BrokenCompressFirstCodec",
+    "parse_wire_spec",
+    "WIRE_SALT",
+]
+
+# PRNG stream separation: the stochastic-rounding draw folds this salt
+# into the per-round key so it never collides with the Laplace draw (same
+# pattern as repro.net's FAULT/DELAY salts).
+WIRE_SALT = 0x57495245  # "WIRE"
+
+# Top-k coordinate indices ship as uint16 on the wire (that is what the
+# 6-bytes-per-coordinate accounting claims), so the packed wire width
+# must index within 16 bits.
+_UINT16_DIMS = 2 ** 16
+
+
+def _sr_quantize_int8(wire: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """Stochastic-rounding int8 quantization, returned dequantized (f32).
+
+    Per-node symmetric scale ``max|row| / 127`` (one f32 scalar on the
+    wire per node); ``floor(x / scale + U[0,1))`` is unbiased —
+    ``E[dequant] = x`` exactly, including at the ±127 edges (the clip
+    only removes the measure-zero ``u == 1`` overflow).
+    """
+    scale = jnp.max(jnp.abs(wire), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale > 0.0, scale, 1.0)  # all-zero rows stay zero
+    u = jax.random.uniform(key, wire.shape, jnp.float32)
+    q = jnp.clip(jnp.floor(wire / scale + u), -127.0, 127.0)
+    return q * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Base codec: the identity (nothing rides the plan, nothing traces).
+
+    Subclasses override the class-level contract attributes:
+
+    * ``active``            — inactive codecs are dropped at plan build,
+      pinning the default program bit-identical to the packed runtime.
+    * ``wire_dtype``        — the dtype the gossip boundary casts to
+      ("bf16" routes through the existing mixed-precision mix branches).
+    * ``transforms_values`` — whether ``encode`` changes values (dtype-only
+      codecs leave the buffer untouched and let the mix boundary cast).
+    * ``stateful``          — whether a per-node ``(N, d_s)`` residual is
+      carried through the scan (``DPPSState.resid``).
+    * ``compress_before_noise`` / ``noise_scale_factor`` — the broken-
+      ordering knobs; every honest codec keeps the defaults.
+    """
+
+    name = "f32"
+    wire_dtype = "f32"
+    transforms_values = False
+    stateful = False
+    compress_before_noise = False
+    noise_scale_factor = 1.0
+
+    @property
+    def active(self) -> bool:
+        return False
+
+    def payload_bytes(self, d_s: int) -> int:
+        """Per-edge message payload in bytes for a ``d_s``-wide wire."""
+        return 4 * d_s
+
+    def encode(self, wire: jnp.ndarray, resid, key: jax.Array):
+        return wire, resid
+
+
+class IdentityCodec(WireCodec):
+    """Explicit spelling of the no-compression default (``--wire f32``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec(WireCodec):
+    """bf16 wire cast, refactored into the codec seam.
+
+    Dtype-only: the values on the packed buffer are untouched here; the
+    plan stamps ``wire_dtype="bf16"`` and the existing gossip branches
+    cast once at the mix boundary (mix in bf16, accumulate f32) — so this
+    codec traces to exactly the program the legacy ``wire_dtype="bf16"``
+    knob produced.
+    """
+
+    name = "bf16"
+    wire_dtype = "bf16"
+
+    @property
+    def active(self) -> bool:
+        return True
+
+    def payload_bytes(self, d_s: int) -> int:
+        return 2 * d_s
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8StochasticCodec(WireCodec):
+    """int8 stochastic-rounding quantization (4x fewer payload bytes).
+
+    Per-node scale scalar travels with the message (+4 bytes); rounding
+    is unbiased (``E[dequant] = x``), so gossip mixes an unbiased view of
+    the noised wire and consensus is preserved in expectation. Applied to
+    the already-noised buffer — post-processing, epsilon untouched.
+    """
+
+    name = "int8"
+    transforms_values = True
+
+    @property
+    def active(self) -> bool:
+        return True
+
+    def payload_bytes(self, d_s: int) -> int:
+        return d_s + 4  # int8 coords + one f32 scale scalar
+
+    def encode(self, wire, resid, key):
+        return _sr_quantize_int8(wire, key), resid
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(WireCodec):
+    """Top-k magnitude sparsification with per-node error feedback.
+
+    Exactly one of ``k`` (absolute) / ``frac`` (``k = d_s // frac``, so a
+    CLI spec works without knowing the packed width) must be positive.
+    The dropped mass is carried in a per-node residual and re-injected
+    next round (error feedback), which is what keeps sparsification from
+    biasing consensus; top-k is a contraction, so the residual norm stays
+    bounded (the watchdog's ``wire_residual`` check and the hypothesis
+    property test both pin this). Payload is 6 bytes per kept coordinate
+    (f32 value + uint16 index), which requires ``d_s < 65536``.
+
+    The residual is accumulated *after* noise injection and never leaves
+    the node, so it is post-processing state — epsilon untouched.
+    """
+
+    k: int = 0
+    frac: int = 0
+
+    name_prefix = "topk"
+    transforms_values = True
+    stateful = True
+
+    def __post_init__(self):
+        if (self.k > 0) == (self.frac > 0):
+            raise ValueError(
+                "TopKCodec needs exactly one of k= (absolute) or frac= "
+                f"(k = d_s // frac); got k={self.k} frac={self.frac}")
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return (f"topk:{self.k}" if self.k > 0 else f"topk:1/{self.frac}")
+
+    @property
+    def active(self) -> bool:
+        return True
+
+    def effective_k(self, d_s: int) -> int:
+        k = self.k if self.k > 0 else max(1, d_s // self.frac)
+        return min(k, d_s)
+
+    def payload_bytes(self, d_s: int) -> int:
+        if d_s >= _UINT16_DIMS:
+            raise ValueError(
+                f"top-k wire indices are uint16; packed width d_s={d_s} "
+                f"needs >= 17 index bits (max {_UINT16_DIMS - 1})")
+        return 6 * self.effective_k(d_s)
+
+    def encode(self, wire, resid, key):
+        x = wire + resid
+        k = self.effective_k(x.shape[-1])
+        kth = jax.lax.top_k(jnp.abs(x), k)[0][..., -1:]
+        enc = jnp.where(jnp.abs(x) >= kth, x, 0.0)
+        return enc, x - enc
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokenCompressFirstCodec(WireCodec):
+    """Deliberately WRONG ordering: compress-then-noise, audit bait only.
+
+    Implements the classic fallacy — quantize the clean ``s_half`` first,
+    then add "proportionally less" noise because the quantized wire
+    "carries fewer bits" (``noise_scale_factor=0.25``). The quantization
+    itself would be harmless before noise too; the scaled-down noise is
+    the leak, and tying it to the compress-first ordering is exactly how
+    the mistake appears in the wild. The attack battery must flag this
+    codec empirically (epsilon lower bound above the theoretical claim),
+    the same way ``BrokenMechanism``-style half-scale noise is flagged.
+    Never select this outside the audit lab.
+    """
+
+    noise_scale_factor: float = 0.25
+
+    name = "broken_compress_first"
+    transforms_values = True
+    compress_before_noise = True
+
+    @property
+    def active(self) -> bool:
+        return True
+
+    def payload_bytes(self, d_s: int) -> int:
+        return d_s + 4
+
+    def encode(self, wire, resid, key):
+        return _sr_quantize_int8(wire, key), resid
+
+
+def parse_wire_spec(spec: str | None) -> WireCodec:
+    """Parse a CLI ``--wire`` spec into a codec.
+
+    Specs: ``f32`` / ``identity`` (no compression), ``bf16``, ``int8``,
+    ``topk:K`` (absolute), ``topk:1/M`` (k = d_s // M), and the audit-only
+    ``broken-compress-first``. Unknown specs raise ``ValueError`` naming
+    the choices.
+    """
+    s = (spec or "f32").strip().lower()
+    if s in ("f32", "identity", ""):
+        return IdentityCodec()
+    if s == "bf16":
+        return Bf16Codec()
+    if s == "int8":
+        return Int8StochasticCodec()
+    if s.startswith("topk:"):
+        arg = s[len("topk:"):]
+        try:
+            if arg.startswith("1/") or arg.startswith("d/"):
+                return TopKCodec(frac=int(arg[2:]))
+            return TopKCodec(k=int(arg))
+        except ValueError as e:
+            raise ValueError(f"bad top-k spec {spec!r}: {e}") from None
+    if s in ("broken-compress-first", "broken_compress_first"):
+        return BrokenCompressFirstCodec()
+    raise ValueError(
+        f"unknown wire spec {spec!r}; choose f32 | bf16 | int8 | topk:K | "
+        "topk:1/M | broken-compress-first")

@@ -1,0 +1,478 @@
+"""Wire-compression subsystem (repro.wire): codec parsing, the
+identity-codec bit-identity pin, the bf16 seam refactor, value codecs on
+the engine (error-feedback residual lifecycle included), composition with
+the async mailbox runtime, byte accounting through the ledger /
+RunReport.network, the noise-then-compress audit referee, the CLI
+surface, and the watchdog's bounded-residual check."""
+import argparse
+import functools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.engine.plan as plan_mod
+from repro.api import LedgerHook, PrivacySpec, Session
+from repro.api.cli import (
+    add_delay_arguments,
+    add_protocol_arguments,
+    validate_protocol_args,
+    wire_from_args,
+)
+from repro.api.results import estimate_wire_bytes
+from repro.core.dpps import DPPSConfig, dpps_init
+from repro.core.topology import DOutGraph, calibrate_constants
+from repro.engine import ProtocolPlan, run_dpps
+from repro.net import DelayModel, NetworkStatsHook
+from repro.obs import MetricsBus, WatchdogHook
+from repro.wire import (
+    Bf16Codec,
+    BrokenCompressFirstCodec,
+    IdentityCodec,
+    Int8StochasticCodec,
+    TopKCodec,
+    parse_wire_spec,
+)
+
+N, T = 8, 10
+TOPO = DOutGraph(n_nodes=N, d=2)
+CP, LAM = calibrate_constants(TOPO)
+D_S = 11 + 2 * 3  # _s0's shared wire width
+
+
+def _s0(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.normal(key, (N, 11)),
+            jax.random.normal(jax.random.fold_in(key, 1), (N, 2, 3))]
+
+
+def _eps_seq(s0, seed=10, scale=0.1):
+    key = jax.random.PRNGKey(seed)
+    return [scale * jax.random.normal(jax.random.fold_in(key, i),
+                                      (T,) + x.shape)
+            for i, x in enumerate(s0)]
+
+
+def _cfg(**kw):
+    kw.setdefault("b", 5.0)
+    kw.setdefault("gamma_n", 0.02)
+    kw.setdefault("c_prime", CP)
+    kw.setdefault("lam", LAM)
+    kw.setdefault("sync_interval", 3)
+    return DPPSConfig(**kw)
+
+
+def _run(plan, seed=0):
+    cfg = _cfg()
+    s0 = _s0(seed)
+    state = dpps_init(s0, plan.resolve_dpps(cfg))
+    engine = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))
+    return engine(state, _eps_seq(s0), jax.random.PRNGKey(42))
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing and codec contracts
+# ---------------------------------------------------------------------------
+
+def test_parse_wire_spec_vocabulary():
+    assert isinstance(parse_wire_spec("f32"), IdentityCodec)
+    assert isinstance(parse_wire_spec("identity"), IdentityCodec)
+    assert isinstance(parse_wire_spec(None), IdentityCodec)
+    assert not parse_wire_spec("f32").active
+    assert isinstance(parse_wire_spec("bf16"), Bf16Codec)
+    assert isinstance(parse_wire_spec("int8"), Int8StochasticCodec)
+    tk = parse_wire_spec("topk:7")
+    assert isinstance(tk, TopKCodec) and tk.k == 7 and tk.name == "topk:7"
+    tk = parse_wire_spec("topk:1/16")
+    assert tk.frac == 16 and tk.name == "topk:1/16"
+    assert isinstance(parse_wire_spec("broken-compress-first"),
+                      BrokenCompressFirstCodec)
+    for bad in ("nope", "topk:", "topk:x", "int4"):
+        with pytest.raises(ValueError, match="wire spec|top-k spec"):
+            parse_wire_spec(bad)
+
+
+def test_topk_codec_validation_and_payload():
+    with pytest.raises(ValueError, match="exactly one"):
+        TopKCodec()
+    with pytest.raises(ValueError, match="exactly one"):
+        TopKCodec(k=4, frac=8)
+    assert TopKCodec(frac=16).effective_k(1960) == 122
+    assert TopKCodec(frac=16).payload_bytes(1960) == 6 * 122
+    assert TopKCodec(k=4).payload_bytes(D_S) == 24
+    with pytest.raises(ValueError, match="uint16"):
+        TopKCodec(frac=16).payload_bytes(70_000)
+    # the other codecs' byte accounting
+    assert IdentityCodec().payload_bytes(100) == 400
+    assert Bf16Codec().payload_bytes(100) == 200
+    assert Int8StochasticCodec().payload_bytes(100) == 104
+
+
+def test_sr_quantization_is_int8_grid_and_unbiased_coarsely():
+    from repro.wire.codecs import _sr_quantize_int8
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 33))
+    keys = jax.random.split(jax.random.PRNGKey(1), 2048)
+    deq = jax.vmap(lambda k: _sr_quantize_int8(x, k))(keys)
+    scale = np.abs(np.asarray(x)).max(axis=-1, keepdims=True) / 127.0
+    # every draw lands on the per-row int8 grid
+    q = np.asarray(deq[0]) / scale
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+    assert np.all(np.abs(q) <= 127.0 + 1e-4)
+    # the mean dequantized value converges on x (unbiased rounding)
+    err = np.abs(np.asarray(deq.mean(axis=0)) - np.asarray(x))
+    assert np.all(err <= 8.0 * scale / (2.0 * np.sqrt(2048)))
+    # all-zero rows survive the scale guard
+    z = _sr_quantize_int8(jnp.zeros((2, 5)), jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(z), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Identity codec: dropped at plan build, runtime bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["dense", "sparse"])
+def test_identity_codec_is_bit_identical(schedule):
+    raw = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                     use_kernels=False, sync_interval=3)
+    ident = ProtocolPlan.from_topology(TOPO, schedule=schedule,
+                                       use_kernels=False, sync_interval=3,
+                                       wire=IdentityCodec())
+    assert ident.wire is None  # dropped at plan build => same program
+    assert ident.wire_dtype == raw.wire_dtype == "f32"
+    st_raw, traj_raw = _run(raw)
+    st_id, traj_id = _run(ident)
+    _assert_trees_equal(st_raw.push, st_id.push)
+    _assert_trees_equal(traj_raw, traj_id)
+
+
+def test_identity_codec_dropped_from_config_too():
+    cfg = _cfg(wire=IdentityCodec())
+    assert cfg.wire is None and cfg.wire_dtype == "f32"
+
+
+# ---------------------------------------------------------------------------
+# bf16 refactored into the codec seam (+ the deprecated knob's shim)
+# ---------------------------------------------------------------------------
+
+def test_bf16_codec_matches_legacy_wire_dtype_knob():
+    plan_mod._WARNED.discard("wire_dtype")
+    with pytest.warns(DeprecationWarning, match="wire=repro.wire.Bf16Codec"):
+        legacy = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                            sync_interval=3,
+                                            wire_dtype="bf16")
+    codec = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                       sync_interval=3, wire=Bf16Codec())
+    for plan in (legacy, codec):
+        assert plan.wire_dtype == "bf16" and plan.wire.name == "bf16"
+    st_l, traj_l = _run(legacy)
+    st_c, traj_c = _run(codec)
+    _assert_trees_equal(st_l.push, st_c.push)
+    _assert_trees_equal(traj_l, traj_c)
+    # second use warns no more (once per process)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                   wire_dtype="bf16")
+    assert not [w for w in rec if w.category is DeprecationWarning]
+
+
+def test_conflicting_wire_dtype_and_codec_rejected():
+    plan_mod._WARNED.add("wire_dtype")  # silence the shim for this test
+    with pytest.raises(ValueError, match="conflicting wire settings"):
+        ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                   wire_dtype="bf16",
+                                   wire=Int8StochasticCodec())
+    with pytest.raises(ValueError, match="implies wire_dtype"):
+        _cfg(wire=Int8StochasticCodec(), wire_dtype="bf16")
+
+
+def test_wire_codec_requires_packed_runtime():
+    with pytest.raises(ValueError, match="packed=True"):
+        ProtocolPlan.from_topology(TOPO, use_kernels=False, packed=False,
+                                   wire=Int8StochasticCodec())
+
+
+# ---------------------------------------------------------------------------
+# Value codecs on the engine + error-feedback residual lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["int8", "topk:1/4"])
+def test_value_codec_runs_finite_and_conserves_mass(spec):
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      sync_interval=3,
+                                      wire=parse_wire_spec(spec))
+    state, traj = _run(plan)
+    for leaf in jax.tree_util.tree_leaves(state.push):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    # encoding rides the message; push-sum mass stays exactly conserved
+    np.testing.assert_allclose(np.asarray(state.push.a).mean(), 1.0,
+                               atol=1e-5)
+    assert traj["sensitivity_used"].shape == (T,)
+
+
+def test_topk_residual_attached_and_resumable():
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      sync_interval=0,
+                                      wire=TopKCodec(frac=4))
+    state, _ = _run(plan)
+    assert isinstance(state.resid, jnp.ndarray)
+    assert state.resid.shape == (N, D_S)
+    assert float(jnp.abs(state.resid).sum()) > 0.0  # EF carries real mass
+    # a resumed run keeps the carried residual (no re-zeroing)
+    cfg = _cfg()
+    engine = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))
+    state2, _ = engine(state, _eps_seq(_s0()), jax.random.PRNGKey(43))
+    assert isinstance(state2.resid, jnp.ndarray)
+    for leaf in jax.tree_util.tree_leaves(state2.push):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_orphaned_residual_rejected():
+    topk = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      wire=TopKCodec(frac=4))
+    state, _ = _run(topk)
+    raw = ProtocolPlan.from_topology(TOPO, use_kernels=False)
+    with pytest.raises(ValueError, match="resid=\\(\\)"):
+        run_dpps(state, _eps_seq(_s0()), jax.random.PRNGKey(0),
+                 cfg=_cfg(), plan=raw)
+
+
+def test_broken_codec_rejected_with_kernels():
+    with pytest.raises(NotImplementedError, match="compress-before-noise|"
+                                                  "use_kernels"):
+        plan = ProtocolPlan.from_topology(
+            TOPO, use_kernels=True, wire=BrokenCompressFirstCodec())
+        _run(plan)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: composition with the bounded-delay async runtime
+# ---------------------------------------------------------------------------
+
+def test_bf16_codec_refuses_async_delays():
+    with pytest.raises(ValueError, match="bf16"):
+        ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                   delays=DelayModel(max_delay=2),
+                                   wire=Bf16Codec())
+
+
+def test_value_codec_composes_with_async_delays():
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      delays=DelayModel(max_delay=2),
+                                      wire=Int8StochasticCodec())
+    cfg = _cfg(sync_interval=0)
+    s0 = _s0()
+    state = dpps_init(s0, plan.resolve_dpps(cfg))
+    state, traj = jax.jit(functools.partial(run_dpps, cfg=cfg, plan=plan))(
+        state, _eps_seq(s0), jax.random.PRNGKey(42))
+    for leaf in jax.tree_util.tree_leaves(state.push):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    # delayed mass is conserved across wire + calendar + inbox: the codec
+    # encodes what travels, never the ledgered totals
+    assert state.mail  # the mailbox rode along
+    assert traj["sensitivity_used"].shape == (T,)
+
+
+# ---------------------------------------------------------------------------
+# Session surface: build kwarg, loop-driver refusal, report accounting
+# ---------------------------------------------------------------------------
+
+def _protocol_session(**kw):
+    kw.setdefault("privacy", PrivacySpec(b=5.0, gamma_n=0.02,
+                                         c_prime=CP, lam=LAM))
+    kw.setdefault("sync_interval", 3)
+    return Session.build(TOPO, **kw)
+
+
+def test_session_rejects_wire_alongside_explicit_plan():
+    plan = ProtocolPlan.from_topology(TOPO, use_kernels=False)
+    with pytest.raises(ValueError, match="not alongside an explicit plan"):
+        _protocol_session(plan=plan, wire=Int8StochasticCodec())
+    # inactive codec alongside a plan is a no-op, not an error
+    _protocol_session(plan=plan, wire=IdentityCodec())
+
+
+def test_loop_driver_refuses_wire_codec():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (12, 4)) / 3.0}
+
+    def loss_fn(p, batch, k):
+        x, y = batch
+        logp = jax.nn.log_softmax(x @ p["w"])
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    bk = jax.random.PRNGKey(5)
+    batches = (jax.random.normal(bk, (4, N, 6, 12)),
+               jax.random.randint(jax.random.fold_in(bk, 1),
+                                  (4, N, 6), 0, 4))
+    batch_at = lambda t: jax.tree_util.tree_map(lambda x: x[t], batches)
+    session = Session.build(
+        TOPO, model=loss_fn,
+        privacy=PrivacySpec(b=5.0, gamma_n=1e-4, c_prime=CP, lam=LAM),
+        partition=(("w", "shared"),), params=params,
+        wire=Int8StochasticCodec())
+    with pytest.raises(ValueError, match="use driver='engine'"):
+        session.train(4, batch_at, driver="loop")
+    report = session.train(4, batch_at, driver="engine")
+    assert np.all(np.isfinite(np.asarray(report.trajectory["loss_mean"])))
+
+
+def test_ledger_and_network_report_carry_codec_accounting():
+    codec = Int8StochasticCodec()
+    session = _protocol_session(wire=codec)
+    led = LedgerHook()
+    net = NetworkStatsHook(bus=MetricsBus())
+    report = session.run(T, values=_s0(), hooks=[led, net])
+
+    payload = codec.payload_bytes(D_S)
+    assert all(e["wire_codec"] == "int8" for e in led.ledger.entries)
+    assert all(e["wire_bytes_per_edge"] == payload
+               for e in led.ledger.entries)
+    summary = led.ledger.summary()
+    assert summary["wire_codec"] == "int8"
+    assert summary["wire_bytes_per_edge"] == payload
+
+    assert report.network is not None
+    assert report.network.wire_codec == "int8"
+    assert report.network.payload_bytes == payload
+    assert report.network.compression_ratio == pytest.approx(
+        4.0 * D_S / payload)
+    assert report.summary()["network"]["wire_codec"] == "int8"
+
+
+def test_estimate_wire_bytes_shrinks_with_codec():
+    raw = ProtocolPlan.from_topology(TOPO, use_kernels=False)
+    int8 = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      wire=Int8StochasticCodec())
+    topk = ProtocolPlan.from_topology(TOPO, use_kernels=False,
+                                      wire=TopKCodec(frac=8))
+    b_raw = estimate_wire_bytes(raw, N, D_S, T)
+    b_int8 = estimate_wire_bytes(int8, N, D_S, T)
+    b_topk = estimate_wire_bytes(topk, N, D_S, T)
+    assert b_raw > b_int8 > b_topk > 0
+
+
+# ---------------------------------------------------------------------------
+# Noise-then-compress, refereed empirically (satellite: audit wiring)
+# ---------------------------------------------------------------------------
+
+def test_audit_battery_referees_wire_ordering():
+    """Post-processing an already-noised wire leaves epsilon intact; the
+    compress-then-noise variant (scaled-down noise) must be flagged."""
+    from repro.audit import LOCAL_EAVESDROPPER, AuditConfig, \
+        distinguishing_attack
+
+    honest = distinguishing_attack(
+        LOCAL_EAVESDROPPER,
+        audit=AuditConfig(trials=400, seed=7, wire=parse_wire_spec("int8")))
+    assert not honest.flagged, honest.row()
+    assert honest.empirical.epsilon_lower <= honest.theoretical_epsilon
+
+    broken = distinguishing_attack(
+        LOCAL_EAVESDROPPER,
+        audit=AuditConfig(trials=400, seed=7,
+                          wire=parse_wire_spec("broken-compress-first")))
+    assert broken.flagged, broken.row()
+    assert broken.empirical.epsilon_lower > broken.theoretical_epsilon
+
+
+# ---------------------------------------------------------------------------
+# CLI surface (satellite: --wire subsumes --wire-dtype)
+# ---------------------------------------------------------------------------
+
+def _parser():
+    ap = argparse.ArgumentParser()
+    add_protocol_arguments(ap)
+    add_delay_arguments(ap)
+    ap.add_argument("--driver", choices=("engine", "loop"),
+                    default="engine")
+    ap.add_argument("--use-kernels", action="store_true")
+    return ap
+
+
+def test_cli_wire_specs_parse():
+    ap = _parser()
+    assert wire_from_args(ap, ap.parse_args([])) is None
+    assert wire_from_args(ap, ap.parse_args(["--wire", "f32"])) is None
+    codec = wire_from_args(ap, ap.parse_args(["--wire", "int8"]))
+    assert isinstance(codec, Int8StochasticCodec)
+    codec = wire_from_args(ap, ap.parse_args(["--wire", "topk:1/16"]))
+    assert isinstance(codec, TopKCodec) and codec.frac == 16
+    with pytest.raises(SystemExit):
+        wire_from_args(ap, ap.parse_args(["--wire", "int4"]))
+
+
+def test_cli_legacy_wire_dtype_shim():
+    ap = _parser()
+    plan_mod._WARNED.discard("cli_wire_dtype")
+    with pytest.warns(DeprecationWarning, match="use --wire bf16"):
+        codec = wire_from_args(ap, ap.parse_args(["--wire-dtype", "bf16"]))
+    assert isinstance(codec, Bf16Codec)
+    # redundant but consistent spelling is allowed...
+    args = ap.parse_args(["--wire", "bf16", "--wire-dtype", "bf16"])
+    assert isinstance(wire_from_args(ap, args), Bf16Codec)
+    # ...a conflicting one is a parser error
+    with pytest.raises(SystemExit):
+        wire_from_args(ap, ap.parse_args(["--wire", "int8",
+                                          "--wire-dtype", "bf16"]))
+
+
+def test_cli_validation_rejects_bad_combinations():
+    ap = _parser()
+    validate_protocol_args(ap, ap.parse_args(["--wire", "int8"]))  # fine
+    with pytest.raises(SystemExit):
+        validate_protocol_args(
+            ap, ap.parse_args(["--wire", "int8", "--no-packed"]))
+    with pytest.raises(SystemExit):
+        validate_protocol_args(
+            ap, ap.parse_args(["--wire", "int8", "--driver", "loop"]))
+    # dtype-cast codec x async mailbox: refused; value codec composes
+    with pytest.raises(SystemExit):
+        validate_protocol_args(
+            ap, ap.parse_args(["--wire", "bf16", "--max-delay", "2"]))
+    validate_protocol_args(
+        ap, ap.parse_args(["--wire", "int8", "--max-delay", "2"]))
+    with pytest.raises(SystemExit):
+        validate_protocol_args(
+            ap, ap.parse_args(["--wire", "broken-compress-first",
+                               "--use-kernels"]))
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: bounded error-feedback residual (warn-only)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_wire_residual_trend_direct():
+    hook = WatchdogHook(strict=True, trend_window=4, warn=lambda s: None,
+                        bus=MetricsBus())
+    rows = {
+        "wd_nonfinite": np.zeros(8, np.int32),
+        "wd_mass_drift": np.zeros(8),
+        "wd_consensus_residual": np.full(8, 0.5),
+        "wd_wire_resid": np.array([1.0, 1.0, 1.0, 1.0, 1.0, 1.0,
+                                   30.0, 30.0]),
+    }
+    hook.consume(rows, t0=0)  # warn severity: strict must NOT abort
+    alerts = [a for a in hook.alerts if a.check == "wire_residual"]
+    assert len(alerts) == 1
+    assert alerts[0].severity == "warn" and alerts[0].round == 7
+    assert "falling behind" in alerts[0].message
+
+
+def test_watchdog_rides_topk_run_quietly():
+    session = _protocol_session(wire=TopKCodec(frac=4))
+    hook = WatchdogHook(warn=lambda s: None, bus=MetricsBus())
+    report = session.run(T, values=_s0(), hooks=[hook])
+    assert report.trajectory["wd_wire_resid"].shape == (T,)
+    assert np.all(np.isfinite(report.trajectory["wd_wire_resid"]))
+    # a healthy EF residual tracks the iterates: no trend alert fires
+    assert [a.check for a in hook.alerts] == []

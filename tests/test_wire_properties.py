@@ -1,0 +1,156 @@
+"""Hypothesis property tests for the wire-compression subsystem
+(repro.wire).
+
+The invariants that must hold for ANY input, not just the hand-picked
+cases in tests/test_wire.py:
+
+* stochastic-rounding unbiasedness — ``E[dequant(x)] = x`` element-wise
+  for arbitrary wire rows (this is what keeps int8 gossip consensus-
+  preserving in expectation);
+* top-k error-feedback boundedness — iterating the codec on a constant
+  input keeps the residual L1 under the ``((d-k)/k) ||x||_1`` geometric
+  fixed point (top-k is a contraction; the compressor never falls
+  behind a stationary iterate), and every encode ships exactly k
+  coordinates;
+* identity-codec transparency — a plan built with the identity codec is
+  bit-identical to the raw packed engine across every topology family.
+
+Module-skipped when hypothesis is absent (the repo's [test] extra
+installs it; tier-1 containers may not)."""
+import functools
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dpps import DPPSConfig, dpps_init
+from repro.core.topology import DOutGraph, ExpGraph, RingGraph
+from repro.engine import ProtocolPlan, run_dpps
+from repro.net import (
+    ErdosRenyiGraph,
+    RandomMatchingGraph,
+    SmallWorldGraph,
+    TorusGraph,
+)
+from repro.wire import IdentityCodec, TopKCodec
+from repro.wire.codecs import _sr_quantize_int8
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+N, T = 8, 10
+CFG = DPPSConfig(b=5.0, gamma_n=0.02, sync_interval=0)
+
+
+def _topo(family: str, seed: int):
+    if family == "dout":
+        return DOutGraph(n_nodes=N, d=2)
+    if family == "exp":
+        return ExpGraph(N)
+    if family == "ring":
+        return RingGraph(N)
+    if family == "er":
+        return ErdosRenyiGraph(n_nodes=N, p=0.4, seed=seed)
+    if family == "matching":
+        return RandomMatchingGraph(n_nodes=N, k=2, seed=seed)
+    if family == "smallworld":
+        return SmallWorldGraph(n_nodes=N, k=2, beta=0.3, seed=seed)
+    if family == "torus":
+        return TorusGraph(n_nodes=N)
+    raise AssertionError(family)
+
+
+FAMILIES = ["dout", "exp", "ring", "er", "matching", "smallworld", "torus"]
+
+
+def _s0(seed: int):
+    return [jax.random.normal(jax.random.PRNGKey(seed), (N, 7))]
+
+
+# ---------------------------------------------------------------------------
+# int8 stochastic rounding: unbiased for arbitrary rows
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, scale_exp=st.integers(min_value=-3, max_value=3))
+def test_sr_quantization_unbiased(seed, scale_exp):
+    """E[dequant] = x for rows spanning six orders of magnitude: the
+    empirical mean over M independent rounding draws lands within a
+    generous multiple of the rounding standard error of x itself."""
+    x = (10.0 ** scale_exp) * jax.random.normal(
+        jax.random.PRNGKey(seed), (4, 23))
+    m = 2048
+    keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                            m)
+    deq = jax.vmap(lambda k: _sr_quantize_int8(x, k))(keys)
+    scale = np.abs(np.asarray(x)).max(axis=-1, keepdims=True) / 127.0
+    err = np.abs(np.asarray(deq.mean(axis=0)) - np.asarray(x))
+    # per-element SE of the mean is <= scale / (2 sqrt(m)); 8x covers the
+    # max over 92 elements with huge margin
+    assert np.all(err <= 8.0 * scale / (2.0 * np.sqrt(m)))
+
+
+# ---------------------------------------------------------------------------
+# top-k + error feedback: bounded residual, exactly-k support
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=SEEDS, frac=st.sampled_from([2, 4, 8, 16]))
+def test_topk_error_feedback_residual_bounded(seed, frac):
+    d = 64
+    codec = TopKCodec(frac=frac)
+    k = codec.effective_k(d)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, d))
+    x1 = float(jnp.abs(x).sum(axis=-1).max())
+    bound = ((d - k) / k) * x1
+    resid = jnp.zeros_like(x)
+    encode = jax.jit(codec.encode)
+    for i in range(60):
+        enc, resid = encode(x, resid, jax.random.PRNGKey(i))
+        # the kept support is exactly k coordinates per row (ties have
+        # measure zero for continuous draws)
+        nnz = np.count_nonzero(np.asarray(enc), axis=-1)
+        assert np.all(nnz <= k)
+        assert float(jnp.abs(resid).sum(axis=-1).max()) <= bound + 1e-4 * x1
+    assert np.all(np.isfinite(np.asarray(resid)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=SEEDS)
+def test_topk_encode_plus_residual_is_lossless(seed):
+    """enc + new_resid == wire + old_resid exactly: sparsification defers
+    mass, it never destroys it (the error-feedback identity)."""
+    codec = TopKCodec(frac=4)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (5, 32))
+    resid = 0.1 * jax.random.normal(jax.random.fold_in(
+        jax.random.PRNGKey(seed), 1), (5, 32))
+    enc, new_resid = codec.encode(x, resid, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(enc + new_resid),
+                                  np.asarray(x + resid))
+
+
+# ---------------------------------------------------------------------------
+# identity codec: bit-identical across every topology family
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(family=st.sampled_from(FAMILIES), seed=SEEDS)
+def test_identity_codec_bit_identical_across_families(family, seed):
+    topo = _topo(family, seed % 1000)
+    raw = ProtocolPlan.from_topology(topo, use_kernels=False,
+                                     sync_interval=0)
+    ident = ProtocolPlan.from_topology(topo, use_kernels=False,
+                                       sync_interval=0,
+                                       wire=IdentityCodec())
+    assert ident.wire is None
+    s0 = _s0(seed % 997)
+    key = jax.random.PRNGKey(seed % 991)
+    run = lambda plan: run_dpps(dpps_init(s0, plan.resolve_dpps(CFG)),
+                                None, key, rounds=T, cfg=CFG, plan=plan)
+    st_raw, traj_raw = run(raw)
+    st_id, traj_id = run(ident)
+    for a, b in zip(jax.tree_util.tree_leaves((st_raw.push, traj_raw)),
+                    jax.tree_util.tree_leaves((st_id.push, traj_id))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -163,6 +163,7 @@ def main(steps: int | None = 240):
 
     result = {
         "bench": "async_degradation",
+        **common.bench_stamp(),
         "scale": {"n_nodes": N_NODES, "d_s": int(sum(
             int(np.prod(s)) for s in LEAF_SHAPES)),
             "rounds": steps, "schedule": "dense", "packed": True,

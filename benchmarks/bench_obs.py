@@ -11,10 +11,14 @@ contract has two halves:
 * **full telemetry is cheap** — this file times it. One N = 16 consensus
   session (ragged multi-leaf shared tree, d_s = 7850, packed runtime, 4
   scan segments) runs hookless vs under each producer solo (ledger,
-  budget, metrics, network stats, watchdog) vs the full pipeline of all
-  five at once. Claim: full telemetry costs <= 1.3x the hookless packed
-  run per round (BENCH_OBS_SMOKE=1 relaxes this thin timing gate to 2x
-  for co-tenant CI runners — the tracked JSON is the claim of record).
+  budget, metrics, network stats, watchdog, timeline) vs the full
+  pipeline of all six at once. Claim: full telemetry costs <= 1.3x the
+  hookless packed run per round (BENCH_OBS_SMOKE=1 relaxes this thin
+  timing gate to 2x for co-tenant CI runners — the tracked JSON is the
+  claim of record). The timeline hook is the costliest producer by
+  construction: its ``segment_span`` seam makes the driver sync every
+  segment boundary (real execute vs consume spans need
+  ``block_until_ready``), so its solo ratio prices that sync.
 
 The transcript hook is measured but *not* gated: a tap changes the traced
 program by design (it records the full wire payload every round — O(N d)
@@ -46,7 +50,7 @@ from repro.api import (
     TranscriptHook,
 )
 from repro.net.stats import NetworkStatsHook
-from repro.obs import MetricsBus, WatchdogHook
+from repro.obs import MetricsBus, TimelineHook, WatchdogHook
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT_PATH = REPO_ROOT / "BENCH_obs.json"
@@ -85,12 +89,14 @@ def _variants() -> dict[str, tuple]:
                                 bus=MetricsBus()),),
         "netstats": (NetworkStatsHook(bus=MetricsBus()),),
         "watchdog": (WatchdogHook(warn=sink, bus=MetricsBus()),),
+        "timeline": (TimelineHook(bus=MetricsBus()),),
         "full": (LedgerHook(bus=MetricsBus()),
                  BudgetHook(budget=1e12, warn=sink),
                  MetricsHook(log_every=10**9, print_fn=sink,
                              bus=MetricsBus()),
                  NetworkStatsHook(bus=MetricsBus()),
-                 WatchdogHook(warn=sink, bus=MetricsBus())),
+                 WatchdogHook(warn=sink, bus=MetricsBus()),
+                 TimelineHook(bus=MetricsBus())),
         "transcript": (TranscriptHook(),),
     }
 
@@ -135,6 +141,7 @@ def main(steps: int | None = 240):
 
     result = {
         "bench": "obs_overhead",
+        **common.bench_stamp(),
         "scale": {"n_nodes": N_NODES, "d_s": int(sum(
             int(np.prod(s)) for s in LEAF_SHAPES)),
             "rounds": steps, "segments": 4, "schedule": "dense",

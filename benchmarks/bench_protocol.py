@@ -185,6 +185,7 @@ def main(steps: int | None = 200):
 
     result = {
         "bench": "protocol_round_throughput",
+        **common.bench_stamp(),
         "scale": {"n_nodes": N_NODES, "d_shared": D_SHARED,
                   "d_pad": layout.d_pad, "leaves": len(LEAF_SHAPES),
                   "rounds": steps, "schedule": "dense",

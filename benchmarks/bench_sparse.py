@@ -162,6 +162,7 @@ def main(steps: int | None = 40):
 
     result = {
         "bench": "sparse_gossip_scaling",
+        **common.bench_stamp(),
         "scale": {"d_sweep": D_SWEEP, "topology": "er(p=8/N)+ring-backbone",
                   "schedule": "sparse vs dense",
                   "backend": jax.default_backend()},

@@ -213,6 +213,7 @@ def main(steps: int | None = 200):
 
     result = {
         "bench": "wire_compression",
+        **common.bench_stamp(),
         "scale": {"d_shared": D_SHARED, "d_pad": layout.d_pad,
                   "leaves": len(LEAF_SHAPES), "n_nodes": list(n_list),
                   "rounds": steps, "backend": jax.default_backend()},

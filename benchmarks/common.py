@@ -31,6 +31,19 @@ D_IN, N_CLASSES = 784, 10
 HIDDEN = 10  # paper MLP: 784x10, 10x784, 784x10
 
 
+def bench_stamp() -> dict:
+    """Provenance fields every tracked ``BENCH_*.json`` carries.
+
+    The cross-run registry (:mod:`repro.obs.registry`) seeds its
+    :class:`RunRecord` git sha from the payload's ``git_sha`` when
+    present, so a regenerated claim-of-record JSON pins the commit it
+    was measured at even before it is committed.
+    """
+    from repro.obs.registry import git_sha
+
+    return {"git_sha": git_sha()}
+
+
 def make_topology_n(name: str, n_nodes: int):
     """Shared registry lookup (repro.api.cli); accepts the benchmarks'
     legacy "K-out" spelling alongside the registry names."""

@@ -216,6 +216,7 @@ def main(steps: int | None = None, smoke: bool = False):
 
     result = {
         "bench": "network_resilience",
+        **common.bench_stamp(),
         "scale": {"n_nodes": N_NODES, "d_shared": D_SHARED,
                   "topology": "er(p=0.35)+ring-backbone",
                   "rounds": rounds, "backend": jax.default_backend()},

@@ -2,15 +2,46 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,table4] [--steps N]
     PYTHONPATH=src python -m benchmarks.run --full      # paper-size grids
+    PYTHONPATH=src python -m benchmarks.run --only protocol --record
 
 Prints ``name,us_per_call,derived`` CSV rows. Paper-claim assertions run
 inside each module; a failed claim fails the harness.
+
+``--record`` appends one :class:`repro.obs.registry.RunRecord` per
+gated suite (the six that write a tracked ``BENCH_*.json``) to the
+cross-run history, so ``python -m repro.obs.registry check`` can gate
+this run against the rolling-median baseline.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+# Suites whose modules write a tracked claim-of-record JSON — the ones
+# the cross-run registry gates (repro.obs.registry.GATES keys match the
+# "bench" field inside each file).
+RECORDED = {
+    "protocol": "BENCH_protocol.json",
+    "net": "BENCH_net.json",
+    "sparse": "BENCH_sparse.json",
+    "obs": "BENCH_obs.json",
+    "async": "BENCH_async.json",
+    "wire": "BENCH_wire.json",
+}
+
+
+def _record(name: str, history: str) -> None:
+    from repro.obs.registry import RunRecord, append_record
+
+    repo_root = pathlib.Path(__file__).resolve().parent.parent
+    payload = json.loads((repo_root / RECORDED[name]).read_text())
+    record = RunRecord.from_bench(payload, source="bench")
+    append_record(record, history)
+    print(f"{name}/_recorded,0,history={history};bench={record.bench}",
+          file=sys.stderr)
 
 
 def main() -> None:
@@ -22,6 +53,10 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=None,
                     help="override per-benchmark step counts (smoke: 20)")
     ap.add_argument("--full", action="store_true", help="paper-size grids")
+    ap.add_argument("--record", action="store_true",
+                    help="append a RunRecord per gated suite to --history")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="registry history path (with --record)")
     args = ap.parse_args()
 
     from benchmarks import (bench_async, bench_obs, bench_protocol,
@@ -60,6 +95,9 @@ def main() -> None:
         except AssertionError as e:
             failed.append((name, str(e)))
             print(f"{name}/CLAIM-FAILED,0,{e}")
+        else:
+            if args.record and name in RECORDED:
+                _record(name, args.history)
         print(f"{name}/_suite,{(time.time()-t0)*1e6:.0f},wall={time.time()-t0:.1f}s",
               file=sys.stderr)
     if failed:

@@ -11,7 +11,14 @@ The zero-overhead contract: a hookless run compiles to HLO bit-identical
 to the bare engine (the golden pins in tests/test_api.py), and the full
 pipeline here costs <= 1.3x per round (tracked in BENCH_obs.json).
 
+``--timeline trace.json`` additionally records the run's timeline —
+host segment spans, async message lifecycle (the run switches to a
+bounded-delay network so send->deliver/send->timeout events exist), and
+the profile pass's device phase slices — as Chrome-trace-event JSON:
+open the file in https://ui.perfetto.dev or chrome://tracing.
+
     PYTHONPATH=src python examples/observability.py
+    PYTHONPATH=src python examples/observability.py --timeline trace.json
 """
 import argparse
 import json
@@ -20,10 +27,11 @@ import jax
 
 from repro.api import BudgetHook, LedgerHook, MetricsHook, PrivacySpec, Session
 from repro.core import DOutGraph
-from repro.net import NetworkStatsHook
+from repro.net import DelayModel, NetworkStatsHook
 from repro.obs import (
     JsonlExporter,
     MetricsBus,
+    TimelineHook,
     WatchdogHook,
     prometheus_text,
 )
@@ -32,12 +40,20 @@ ap = argparse.ArgumentParser(description=__doc__)
 ap.add_argument("--rounds", type=int, default=200)
 ap.add_argument("--events", default="obs_events.jsonl",
                 help="JSONL event-stream output path")
+ap.add_argument("--timeline", default=None, metavar="TRACE_JSON",
+                help="write a Perfetto-loadable Chrome trace of the run")
 args = ap.parse_args()
 
 N = 10
 topo = DOutGraph(n_nodes=N, d=2)
+# The timeline run gossips through PR-8's bounded-delay network so the
+# protocol track has a message lifecycle to show (deliveries at delay
+# 0..2, occasional timeouts). Async mass-in-flight forbids sync rounds.
+delays = (DelayModel(max_delay=2, timeout_rate=0.1, seed=7)
+          if args.timeline else None)
 session = Session.build(topo, privacy=PrivacySpec(b=5.0, gamma_n=1e-3),
-                        chunk=max(args.rounds // 4, 1))
+                        chunk=max(args.rounds // 4, 1), delays=delays,
+                        sync_interval=0 if delays else None)
 key = jax.random.PRNGKey(0)
 private = [jax.random.normal(key, (N, 32))]
 
@@ -54,6 +70,10 @@ hooks = [
     NetworkStatsHook(bus=bus),
     WatchdogHook(bus=bus),
 ]
+timeline_hook = None
+if args.timeline:
+    timeline_hook = TimelineHook(bus=bus)
+    hooks.append(timeline_hook)
 
 with JsonlExporter(args.events).attach(bus) as exporter:
     report = session.run(args.rounds, values=private, hooks=hooks,
@@ -78,3 +98,12 @@ print(prometheus_text(bus))
 profile = session.profile(rounds=50, values=private)
 print("--- profile ---")
 print(json.dumps(profile.summary(), indent=2))
+
+if timeline_hook is not None:
+    # One artifact for the whole story: the run's host/protocol tracks
+    # plus the profile pass's device phase slices, laid out after it.
+    timeline_hook.timeline.add_profile(profile)
+    path = timeline_hook.timeline.save(args.timeline)
+    n_events = len(timeline_hook.timeline)
+    print(f"\ntimeline: {n_events} events -> {path} "
+          "(open in https://ui.perfetto.dev)")

@@ -39,7 +39,14 @@ The lifecycle around a run: ``prepare(ctx)`` once before the first
 segment (the :class:`RunContext` carries the resolved config, so hooks
 default their b / gamma_n / sync-interval / wire-dtype from the session
 instead of duplicating them as kwargs), then capture/consume per segment,
-then ``finish()`` in a ``finally`` (close files even on abort).
+then ``finish()`` in a ``finally`` (close files even on abort), then
+``finish_run(report)`` once the :class:`repro.api.results.RunReport` is
+assembled (run-level publication — e.g. the ``run.compile_s`` /
+``run.run_s`` wall-split gauges). Hooks that additionally implement a
+``segment_span(t0=, n=, start=, execute_end=, consume_end=, compiled=)``
+method (duck-typed, like ``network_stats()``) receive per-segment host
+timing from the driver — the :class:`repro.obs.timeline.TimelineHook`
+seam; attaching one makes the driver sync each segment before timing it.
 """
 from __future__ import annotations
 
@@ -122,6 +129,12 @@ class RoundHook:
 
     def finish(self) -> None:  # noqa: B027 — optional
         pass
+
+    def finish_run(self, report: Any) -> None:  # noqa: B027 — optional
+        """Called once after the driver assembled the run's
+        :class:`repro.api.results.RunReport` (aborted runs included) —
+        the place to publish run-level figures that only exist after the
+        wall-clock split is known."""
 
 
 def capture_rows(diag: dict[str, Any], hooks) -> dict[str, Any]:
@@ -436,3 +449,11 @@ class MetricsHook(RoundHook):
             if t % self.log_every == 0 or (self.total is not None
                                            and t == self.total - 1):
                 self.print_fn(self.formatter(row))
+
+    def finish_run(self, report: Any) -> None:
+        """Publish the report's wall-clock split as ``run.compile_s`` /
+        ``run.run_s`` gauges — exporters and the cross-run registry read
+        the split off the bus instead of parsing RunReports."""
+        bus = self.bus = _resolve_bus(self.bus)
+        bus.gauge("run.compile_s", float(report.compile_s))
+        bus.gauge("run.run_s", float(report.run_s))

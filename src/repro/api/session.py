@@ -459,6 +459,13 @@ class ProtocolSession:
         Wall-clock split: the first segment's wall time (which includes
         tracing + XLA compilation of the scan) is reported as
         ``compile_s``; everything after is steady-state ``run_s``.
+
+        Hooks exposing a ``segment_span`` method (duck-typed — the
+        :class:`repro.obs.timeline.TimelineHook` seam) get per-segment
+        host timing: with one attached every segment is synced before its
+        boundary is stamped, so execute vs hook-consume spans are real
+        device time. Without one, only the first segment syncs — the
+        hookless path is unchanged.
         """
         t_start = time.time()
         compile_s = 0.0
@@ -467,18 +474,33 @@ class ProtocolSession:
         done = start
         aborted = False
         reason = None
+        span_hooks = [h for h in hooks if hasattr(h, "segment_span")]
+        seg_start = t_start
         try:
             for t0, n, state, traj in segments:
                 done = t0 + n
-                if not trajs:
+                first = not trajs
+                exec_end = None
+                if first or span_hooks:
                     # End of the first segment = compile + first dispatch;
                     # sync so the boundary is real device time, not the
-                    # async dispatch returning early.
+                    # async dispatch returning early. Span hooks need the
+                    # same sync on every segment.
                     jax.block_until_ready(traj)
-                    compile_s = time.time() - t_start
+                    exec_end = time.time()
+                    if first:
+                        compile_s = exec_end - t_start
                 trajs.append(traj)
                 for h in hooks:
                     h.consume(traj, t0=t0)
+                if span_hooks:
+                    consume_end = time.time()
+                    for h in span_hooks:
+                        h.segment_span(t0=t0, n=n, start=seg_start,
+                                       execute_end=exec_end,
+                                       consume_end=consume_end,
+                                       compiled=first)
+                    seg_start = consume_end
         except RunAbort as e:
             aborted = True
             reason = str(e)
@@ -499,7 +521,7 @@ class ProtocolSession:
             stats_fn = getattr(h, "network_stats", None)
             if stats_fn is not None:
                 network = stats_fn()
-        return RunReport(
+        report = RunReport(
             state=state, trajectory=trajectory, rounds=executed,
             epsilon_spent=self.epsilon_spent(executed, start=start),
             wire_bytes=estimate_wire_bytes(self.plan, self.n_nodes, d_s,
@@ -507,6 +529,14 @@ class ProtocolSession:
             compile_s=compile_s,
             run_s=time.time() - t_start - compile_s, aborted=aborted,
             abort_reason=reason, network=network)
+        # Run-level publication (run.compile_s / run.run_s gauges, the
+        # timeline artifact) — after the report exists, abort included.
+        # getattr: duck-typed hooks predating the base class keep working.
+        for h in hooks:
+            finish_run = getattr(h, "finish_run", None)
+            if finish_run is not None:
+                finish_run(report)
+        return report
 
     def run(
         self,
@@ -792,6 +822,76 @@ class ProtocolSession:
             rounds=n, backend=jax.default_backend(), trace_s=trace_s,
             compile_s=compile_s, execute_s=execute_s, phases=phases,
             device_total_s=device_total_s, trace_dir=trace_dir, note=note)
+
+    # -- cross-run registry --------------------------------------------------
+
+    def _fingerprint(self) -> str:
+        """Stable hash of the session's config/plan scalars — the
+        registry's comparability stamp for session records (two runs
+        with the same fingerprint + scale are the same deployment)."""
+        import hashlib
+        import json
+
+        plan, cfg = self.plan, self.cfg
+        desc = {
+            "algorithm": self.algorithm,
+            "n_nodes": self.n_nodes,
+            "schedule": getattr(plan, "schedule", None),
+            "packed": getattr(plan, "packed", None),
+            "wire_dtype": getattr(plan, "wire_dtype", None),
+            "chunk": getattr(plan, "chunk", None),
+            "period": getattr(plan, "period", None),
+            "sync_interval": getattr(cfg, "sync_interval", None),
+            "b": getattr(cfg, "b", None),
+            "gamma_n": getattr(cfg, "gamma_n", None),
+            "noise": getattr(cfg, "noise", None),
+            "faults": repr(getattr(plan, "faults", None)),
+            "delays": repr(getattr(plan, "delays", None)),
+            "wire": repr(getattr(plan, "wire", None)),
+        }
+        blob = json.dumps(desc, sort_keys=True, default=str).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    def record(self, report: RunReport, *, name: str,
+               history: str = "BENCH_history.jsonl",
+               extra: dict[str, float] | None = None):
+        """Append this run to the cross-run registry (lazy import — the
+        obs layer stays optional for sessions that never record).
+
+        The record lands as bench ``session/<name>`` with the session's
+        scale dict (n_nodes, d_s, rounds, schedule, packed, backend) and
+        fingerprint; ``python -m repro.obs.registry check`` then gates
+        later runs of the same deployment against this one (us/round,
+        wire bytes, epsilon). ``extra`` adds caller metrics (e.g. a
+        final consensus error). Returns the appended
+        :class:`repro.obs.registry.RunRecord`.
+        """
+        from repro.obs.registry import RunRecord, append_record
+
+        self._require_protocol()
+        push = getattr(report.state, "push", None)
+        if push is None and report.state is not None:
+            push = getattr(getattr(report.state, "dpps", None), "push", None)
+        d_s = 0
+        if push is not None:
+            d_s = sum(int(np.prod(x.shape[1:])) if x.ndim > 1 else 1
+                      for x in jax.tree_util.tree_leaves(push.s))
+        chunk = getattr(self.plan, "chunk", 0) or 0
+        steady = max(report.rounds - chunk, 0)
+        scale = {
+            "n_nodes": self.n_nodes, "d_s": d_s,
+            "rounds": report.rounds,
+            "schedule": getattr(self.plan, "schedule", None),
+            "packed": getattr(self.plan, "packed", None),
+            "backend": jax.default_backend(),
+            "algorithm": self.algorithm,
+        }
+        rec = RunRecord.from_report(
+            name, report, scale=scale, fingerprint=self._fingerprint(),
+            backend=jax.default_backend(), steady_rounds=steady,
+            extra=extra)
+        append_record(rec, history)
+        return rec
 
     # -- serving -------------------------------------------------------------
 

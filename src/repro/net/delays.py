@@ -222,6 +222,9 @@ class DelayModel:
           async_participated   (N,) bool this round's active mask
           async_active         () i32 participating node count
           async_mass_mean      () f32 (state + inbox + calendar mass) / N
+          async_inflight_mass  () f32 mass not yet folded into any state
+                               (inbox + calendar) — the timeline's
+                               in-flight counter series
         """
         if (w is None) == (sparse_idx is None):
             raise ValueError(
@@ -322,6 +325,7 @@ class DelayModel:
                 "async_active": jnp.sum(act).astype(jnp.int32),
                 "async_mass_mean": (jnp.sum(a_new) + jnp.sum(inbox_a)
                                     + jnp.sum(cal_a)) / n,
+                "async_inflight_mass": jnp.sum(inbox_a) + jnp.sum(cal_a),
             }
             return PushSumState(s=s_new, a=a_new)
 

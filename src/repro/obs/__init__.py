@@ -1,6 +1,6 @@
 """repro.obs — the protocol observability layer.
 
-Four pieces, all wired through the session's RoundHook seam:
+Six pieces, all wired through the session's RoundHook seam:
 
 * **Phase tracing** (:mod:`repro.obs.trace`): ``jax.named_scope``
   annotations on the round phases (metadata-only — the golden-HLO pins
@@ -16,12 +16,21 @@ Four pieces, all wired through the session's RoundHook seam:
   diagnostics (NaN/Inf wire guard, push-sum mass drift, consensus
   residual) surfaced as structured :class:`Alert` events at segment
   boundaries, with warn/abort policies mirroring ``BudgetHook.strict``.
+* **Run timeline** (:mod:`repro.obs.timeline`): per-run span/event
+  record — host segment spans, device phase slices, async message
+  lifecycle — exported as Chrome-trace-event JSON (Perfetto-loadable)
+  via :class:`TimelineHook` / :class:`Timeline`.
+* **Cross-run registry** (:mod:`repro.obs.registry`): schema-versioned
+  :class:`RunRecord` history (``BENCH_history.jsonl``, append-only) with
+  rolling-median regression gates (``python -m repro.obs.registry
+  check``).
 
 Import discipline: this package imports only jax + stdlib, so the core
 protocol (:mod:`repro.core.dpps`) can annotate phases without an import
-cycle. The watchdog subclasses :class:`repro.api.hooks.RoundHook`, so it
-loads lazily (module ``__getattr__``) — ``repro.obs`` stays importable
-before/without ``repro.api``.
+cycle. The watchdog and timeline hooks subclass
+:class:`repro.api.hooks.RoundHook`, so they load lazily (module
+``__getattr__``) — ``repro.obs`` stays importable before/without
+``repro.api``.
 """
 from __future__ import annotations
 
@@ -40,8 +49,12 @@ __all__ = [
     "Event",
     "JsonlExporter",
     "KNOWN_PHASES",
+    "MetricGate",
     "MetricsBus",
     "ProfileReport",
+    "RunRecord",
+    "Timeline",
+    "TimelineHook",
     "WatchdogAbort",
     "WatchdogHook",
     "default_bus",
@@ -49,15 +62,28 @@ __all__ = [
     "log_sink",
     "phase",
     "prometheus_text",
+    "validate_chrome_trace",
     "write_prometheus",
 ]
 
-_LAZY = ("Alert", "WatchdogAbort", "WatchdogHook")
+# Lazily resolved (module __getattr__): the watchdog/timeline hooks
+# subclass repro.api.hooks.RoundHook, and the registry is pure-stdlib but
+# only needed by record/check consumers.
+_LAZY = {
+    "Alert": "repro.obs.watchdog",
+    "WatchdogAbort": "repro.obs.watchdog",
+    "WatchdogHook": "repro.obs.watchdog",
+    "Timeline": "repro.obs.timeline",
+    "TimelineHook": "repro.obs.timeline",
+    "validate_chrome_trace": "repro.obs.timeline",
+    "RunRecord": "repro.obs.registry",
+    "MetricGate": "repro.obs.registry",
+}
 
 
 def __getattr__(name: str):
     if name in _LAZY:
-        from repro.obs import watchdog as _watchdog
+        import importlib
 
-        return getattr(_watchdog, name)
+        return getattr(importlib.import_module(_LAZY[name]), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

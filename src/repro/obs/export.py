@@ -39,10 +39,12 @@ class JsonlExporter:
             self._file = path_or_file
             self._owns = False
         self._detach = None
+        self._bus: MetricsBus | None = None
         self.written = 0
 
     def attach(self, bus: MetricsBus) -> "JsonlExporter":
         self._detach = bus.subscribe(self)
+        self._bus = bus
         return self
 
     def __call__(self, event: Event) -> None:
@@ -54,6 +56,22 @@ class JsonlExporter:
         if self._detach is not None:
             self._detach()
             self._detach = None
+        # Ring drops never pass through subscribe (subscribers see every
+        # event; only the bus's replay window loses them) — but a stream
+        # consumer still wants to know the bus was overrunning, so the
+        # closing line records the final bus.dropped count.
+        if (self._bus is not None and self._bus.dropped
+                and not self._file.closed):
+            import time as _time
+
+            self._file.write(json.dumps({
+                "ts": round(_time.time(), 6), "kind": "counter",
+                "name": "bus.dropped", "value": float(self._bus.dropped),
+                "message": "events evicted from the bus ring "
+                           "(replay window overrun)"}) + "\n")
+            self._file.flush()
+            self.written += 1
+        self._bus = None
         if self._owns and not self._file.closed:
             self._file.close()
 
@@ -74,11 +92,32 @@ def _sanitize(name: str) -> str:
     return name
 
 
+def _escape_label(value: str) -> str:
+    """Label-value escaping per the exposition format: backslash, double
+    quote and newline must be escaped inside the quoted value."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _labels(labels: tuple[tuple[str, str], ...]) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{_sanitize(k)}="{v}"' for k, v in labels)
+    inner = ",".join(f'{_sanitize(k)}="{_escape_label(v)}"'
+                     for k, v in labels)
     return "{" + inner + "}"
+
+
+def _fmt_value(value: float) -> str:
+    """Exposition-format float rendering: Python's ``nan``/``inf`` spell
+    ``NaN`` / ``+Inf`` / ``-Inf`` in Prometheus text."""
+    value = float(value)
+    if value != value:
+        return "NaN"
+    if value == float("inf"):
+        return "+Inf"
+    if value == float("-inf"):
+        return "-Inf"
+    return repr(value)
 
 
 def prometheus_text(bus: MetricsBus) -> str:
@@ -92,7 +131,7 @@ def prometheus_text(bus: MetricsBus) -> str:
         if metric not in typed:
             typed.add(metric)
             lines.append(f"# TYPE {metric} {kind}")
-        lines.append(f"{metric}{_labels(labels)} {value}")
+        lines.append(f"{metric}{_labels(labels)} {_fmt_value(value)}")
 
     for (name, labels), value in sorted(series["counters"].items()):
         emit(name, "counter", labels, value)
@@ -100,8 +139,13 @@ def prometheus_text(bus: MetricsBus) -> str:
         emit(name, "gauge", labels, value)
     for (name, labels), hist in sorted(series["histograms"].items()):
         base = _sanitize(name)
-        for suffix, value in (("_count", hist.count), ("_sum", hist.total),
-                              ("_min", hist.min), ("_max", hist.max)):
+        # An empty summary (a series created but never observed) has
+        # min=+inf / max=-inf sentinels — render NaN, not fake bounds.
+        empty = hist.count == 0
+        for suffix, value in (
+                ("_count", hist.count), ("_sum", hist.total),
+                ("_min", float("nan") if empty else hist.min),
+                ("_max", float("nan") if empty else hist.max)):
             emit(base + suffix, "gauge", labels, value)
     return "\n".join(lines) + ("\n" if lines else "")
 

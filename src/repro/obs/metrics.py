@@ -122,13 +122,30 @@ class MetricsBus:
         self._gauges: dict[tuple[str, tuple], float] = {}
         self._hists: dict[tuple[str, tuple], HistogramSummary] = {}
         self._subscribers: list[Callable[[Event], None]] = []
+        self._dropped = 0
 
     # -- emission ------------------------------------------------------------
+
+    @property
+    def dropped(self) -> int:
+        """Events pushed out of the bounded ring so far (aggregates and
+        subscribers never lose anything — only the raw-event replay
+        window does). Surfaced as the ``bus.dropped`` counter in
+        :meth:`snapshot` / :meth:`series`, so the Prometheus exposition
+        and the JSONL exporter's closing line both carry it."""
+        return self._dropped
 
     def emit(self, event: Event) -> None:
         if event.kind not in _KINDS:
             raise ValueError(f"unknown event kind {event.kind!r}")
+        warn_drop = False
         with self._lock:
+            if (self._events.maxlen is not None
+                    and len(self._events) == self._events.maxlen):
+                # append() below silently evicts the oldest event — count
+                # it instead of losing it without a trace.
+                self._dropped += 1
+                warn_drop = self._dropped == 1
             self._events.append(event)
             series = (event.name, event.labels)
             if event.kind == "counter":
@@ -141,6 +158,12 @@ class MetricsBus:
                     series, HistogramSummary()).observe(event.value,
                                                         count=event.count)
             subscribers = list(self._subscribers)
+        if warn_drop:
+            get_logger().warning(
+                f"MetricsBus ring full (maxlen={self._events.maxlen}): "
+                "oldest raw events are being dropped — counted in the "
+                "bus.dropped counter (aggregates and subscribers are "
+                "unaffected)")
         for fn in subscribers:
             fn(event)
 
@@ -208,8 +231,11 @@ class MetricsBus:
             return f"{name}{{{inner}}}"
 
         with self._lock:
+            counters = {fmt(s): v for s, v in self._counters.items()}
+            if self._dropped:
+                counters["bus.dropped"] = float(self._dropped)
             return {
-                "counters": {fmt(s): v for s, v in self._counters.items()},
+                "counters": counters,
                 "gauges": {fmt(s): v for s, v in self._gauges.items()},
                 "histograms": {
                     fmt(s): {"count": h.count, "sum": h.total,
@@ -221,7 +247,10 @@ class MetricsBus:
         """Raw aggregate maps keyed by (name, labels) — the exposition
         writer's input (:func:`repro.obs.export.prometheus_text`)."""
         with self._lock:
-            return {"counters": dict(self._counters),
+            counters = dict(self._counters)
+            if self._dropped:
+                counters[("bus.dropped", ())] = float(self._dropped)
+            return {"counters": counters,
                     "gauges": dict(self._gauges),
                     "histograms": {k: dataclasses.replace(v)
                                    for k, v in self._hists.items()}}

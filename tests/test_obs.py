@@ -399,3 +399,193 @@ def test_hlo_phase_map_parses_op_name_metadata():
         '  ROOT %tuple.3 = tuple(e)',
     ])
     assert hlo_phase_map(hlo) == {"multiply.1": PHASE_DPPS_GOSSIP}
+
+
+# ---------------------------------------------------------------------------
+# Run timeline: Chrome-trace export of segment spans + async lifecycle
+# ---------------------------------------------------------------------------
+
+def _timeline_session():
+    from repro.net import DelayModel
+    return _session(sync_interval=0, chunk=4,
+                    delays=DelayModel(max_delay=2, timeout_rate=0.3, seed=1))
+
+
+def test_timeline_hook_records_chrome_trace(tmp_path):
+    from repro.obs import TimelineHook, validate_chrome_trace
+
+    path = tmp_path / "trace.json"
+    bus = MetricsBus()
+    hook = TimelineHook(str(path), bus=bus)
+    report = _timeline_session().run(12, values=_s0(), hooks=[hook])
+    obj = json.loads(path.read_text())
+    validate_chrome_trace(obj)
+    evs = obj["traceEvents"]
+
+    # Host track: one span per compiled segment (12 rounds / chunk 4),
+    # the first labelled as the trace/compile+execute lump, plus one
+    # hook-consume span each; durations sum within the wall clock.
+    segs = [e for e in evs if e.get("cat") == "segment" and e["tid"] == 1]
+    assert len(segs) == 3
+    assert segs[0]["name"] == "trace/compile+execute"
+    assert all(e["name"] == "execute" for e in segs[1:])
+    consumes = [e for e in evs if e["name"] == "hook-consume"]
+    assert len(consumes) == 3
+    total_us = sum(e["dur"] for e in segs + consumes)
+    assert total_us <= (report.compile_s + report.run_s) * 1e6 * 1.05
+
+    # Protocol track: the async lifecycle must include both outcomes —
+    # send->deliver spans (balanced b/e pairs, counted multiplicity) and
+    # send->timeout instants (timeout_rate=0.3 guarantees some in 12
+    # rounds).
+    sends = [e for e in evs if e["ph"] == "b"]
+    assert sends and all(e["name"].startswith("msg send->deliver")
+                         for e in sends)
+    assert all(e["args"]["deliver_round"]
+               == e["args"]["enqueue_round"] + e["args"]["delay_rounds"]
+               for e in sends)
+    touts = [e for e in evs if e["ph"] == "i"
+             and e["name"] == "msg send->timeout"]
+    assert touts and all(e["args"]["count"] >= 1 for e in touts)
+    counters = [e for e in evs if e["ph"] == "C" and e["name"] == "async"]
+    assert len(counters) == 12  # one sample per round
+    assert {"inflight_mass", "active_nodes", "staleness_max"} <= set(
+        counters[0]["args"])
+
+    # Run metadata + the bus side: wall-split gauges and per-segment
+    # histograms.
+    meta = obj["otherData"]
+    assert meta["rounds"] == 12 and meta["max_delay"] == 2
+    snap = bus.snapshot()
+    assert snap["gauges"]["run.compile_s"] == pytest.approx(report.compile_s)
+    assert snap["gauges"]["run.run_s"] == pytest.approx(report.run_s)
+    assert snap["histograms"]["timeline.execute_s"]["count"] == 3
+
+
+def test_timeline_hook_is_bit_transparent():
+    from repro.obs import TimelineHook
+
+    session = _timeline_session()
+    bare = session.run(8, values=_s0())
+    timed = session.run(8, values=_s0(), hooks=[TimelineHook(
+        bus=MetricsBus())])
+    _assert_trees_equal(bare.state, timed.state)
+    _assert_trees_equal(bare.trajectory, timed.trajectory)
+
+
+def test_timeline_add_profile_lays_out_device_slices():
+    from repro.obs import Timeline, validate_chrome_trace
+    from repro.obs.timeline import PID_DEVICE
+
+    profile = ProfileReport(
+        rounds=10, backend="cpu", trace_s=0.1, compile_s=0.4,
+        execute_s=0.5, device_total_s=0.3,
+        phases={"dpps_gossip": 0.2, "dpps_noise": 0.1})
+    tl = Timeline()
+    tl.span("execute", 5.0, 1.0, cat="segment")
+    tl.add_profile(profile)
+    obj = tl.to_chrome_trace()
+    validate_chrome_trace(obj)
+    host = {e["name"]: e for e in obj["traceEvents"]
+            if e.get("cat") == "profile"}
+    assert {"profile:trace", "profile:compile",
+            "profile:execute"} <= set(host)
+    # Sequential layout after the last recorded event.
+    assert host["profile:compile"]["ts"] == pytest.approx(
+        host["profile:trace"]["ts"] + host["profile:trace"]["dur"])
+    dev = [e for e in obj["traceEvents"] if e.get("pid") == PID_DEVICE
+           and e["ph"] == "X"]
+    assert [e["name"] for e in dev] == ["dpps_gossip", "dpps_noise"]
+    # Device slices sit under the execute window.
+    assert dev[0]["ts"] >= host["profile:execute"]["ts"] - 1e-6
+    assert obj["otherData"]["profile"]["device_total_s"] == 0.3
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    from repro.obs import validate_chrome_trace
+
+    ok = {"traceEvents": [{"name": "x", "ph": "X", "pid": 1, "tid": 1,
+                           "ts": 0, "dur": 5}]}
+    validate_chrome_trace(ok)
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace({"foo": []})
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "x", "ph": "Z", "pid": 1, "tid": 1, "ts": 0}]})
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "x", "ph": "X", "pid": 1, "tid": 1, "ts": 0}]})
+    with pytest.raises(ValueError, match="missing id"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "x", "ph": "b", "pid": 1, "tid": 1, "ts": 0,
+             "cat": "m"}]})
+    with pytest.raises(ValueError, match="unbalanced"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "x", "ph": "b", "pid": 1, "tid": 1, "ts": 0,
+             "cat": "m", "id": 3}]})
+
+
+def test_metrics_hook_publishes_run_wall_split():
+    bus = MetricsBus()
+    session = _session()
+    report = session.run(T, values=_s0(),
+                         hooks=[MetricsHook(log_every=10**9,
+                                            print_fn=lambda s: None,
+                                            bus=bus)])
+    snap = bus.snapshot()
+    assert snap["gauges"]["run.compile_s"] == pytest.approx(report.compile_s)
+    assert snap["gauges"]["run.run_s"] == pytest.approx(report.run_s)
+
+
+# ---------------------------------------------------------------------------
+# Bus ring drop accounting + exposition edge cases
+# ---------------------------------------------------------------------------
+
+def test_bus_ring_drop_counter(tmp_path):
+    bus = MetricsBus(ring=2)
+    assert bus.dropped == 0
+    path = tmp_path / "events.jsonl"
+    exporter = JsonlExporter(str(path)).attach(bus)
+    for i in range(5):
+        bus.count("c")
+    assert bus.dropped == 3
+    # Aggregates and subscribers never lost anything — only the ring.
+    assert bus.snapshot()["counters"]["c"] == 5.0
+    assert bus.snapshot()["counters"]["bus.dropped"] == 3.0
+    assert bus.series()["counters"][("bus.dropped", ())] == 3.0
+    assert len(bus.events()) == 2
+    assert "bus_dropped 3.0" in prometheus_text(bus)
+    exporter.close()
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == 6  # 5 streamed + the closing bus.dropped line
+    assert lines[-1]["name"] == "bus.dropped" and lines[-1]["value"] == 3.0
+
+    fresh = MetricsBus(ring=2)
+    fresh.count("c")
+    assert fresh.dropped == 0
+    assert "bus.dropped" not in fresh.snapshot()["counters"]
+    assert "bus_dropped" not in prometheus_text(fresh)
+
+
+def test_prometheus_label_escaping_and_nonfinite():
+    bus = MetricsBus()
+    bus.gauge("g", 1.0, labels=[("path", 'a"b\\c\nd')])
+    bus.gauge("nanval", float("nan"))
+    bus.gauge("posinf", float("inf"))
+    bus.gauge("neginf", float("-inf"))
+    text = prometheus_text(bus)
+    assert r'g{path="a\"b\\c\nd"} 1.0' in text
+    assert "nanval NaN" in text
+    assert "posinf +Inf" in text
+    assert "neginf -Inf" in text
+
+
+def test_prometheus_empty_histogram_renders_nan_bounds():
+    from repro.obs.metrics import HistogramSummary
+
+    bus = MetricsBus()
+    bus._hists[("h", ())] = HistogramSummary()  # created, never observed
+    text = prometheus_text(bus)
+    assert "h_count 0" in text
+    assert "h_min NaN" in text and "h_max NaN" in text
+    assert "+Inf" not in text and "-Inf" not in text

@@ -1,0 +1,294 @@
+"""The cross-run registry (repro.obs.registry): gate-path extraction over
+the tracked BENCH payload shapes (keys containing "/" and "."), the
+direction-aware MetricGate thresholds with smoke relaxation, idempotent
+backfill from the committed BENCH_*.json seeds, the rolling-median
+regression check (passes on seeded baselines, names the violated metric
+on a synthetic slowdown), Session.record's session/<name> records, and
+the CLI's exit-code contract."""
+import json
+import pathlib
+
+import jax
+import pytest
+
+from repro.api import PrivacySpec, Session
+from repro.core.topology import DOutGraph, calibrate_constants
+from repro.obs.registry import (
+    BENCH_FILES,
+    GATES,
+    SESSION_GATES,
+    MetricGate,
+    RunRecord,
+    append_record,
+    backfill,
+    check,
+    extract_path,
+    gates_for,
+    git_sha,
+    load_history,
+    main,
+)
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# Path extraction + gates
+# ---------------------------------------------------------------------------
+
+def test_extract_path_handles_slashed_and_dotted_keys():
+    payload = {
+        "timing": {"topk:1/16": {"dense": {"us_per_round": 7.0}}},
+        "drop_sweep": {"0.3": {"consensus_error_final": 1e-5}},
+        "flat": 2.5,
+        "flag": True,
+    }
+    assert extract_path(payload, "timing/topk:1/16/dense/us_per_round") == 7.0
+    assert extract_path(payload, "drop_sweep/0.3/consensus_error_final") \
+        == 1e-5
+    assert extract_path(payload, "flat") == 2.5
+    assert extract_path(payload, "flag") == 1.0
+    with pytest.raises(KeyError):
+        extract_path(payload, "missing/key")
+    with pytest.raises(KeyError):
+        extract_path({"x": "notanumber"}, "x")
+
+
+def test_metric_gate_directions_and_smoke_relaxation():
+    lower = MetricGate("p", "lower", tolerance=1.6, timing=True)
+    assert not lower.violated(150.0, 100.0, smoke=False)
+    assert lower.violated(170.0, 100.0, smoke=False)
+    assert not lower.violated(170.0, 100.0, smoke=True)   # timing: tol 3.2
+    assert lower.violated(330.0, 100.0, smoke=True)
+
+    ratio = MetricGate("p", "lower", tolerance=1.25)      # not timing
+    assert ratio.violated(1.3, 1.0, smoke=True)           # smoke is no-op
+
+    floored = MetricGate("p", "lower", tolerance=5.0, floor=1e-4)
+    assert not floored.violated(9e-5, 1e-6, smoke=False)  # under the floor
+    assert floored.violated(2e-4, 1e-6, smoke=False)
+
+    higher = MetricGate("p", "higher", tolerance=1.5)
+    assert not higher.violated(7.0, 8.0, smoke=False)
+    assert higher.violated(5.0, 8.0, smoke=False)
+
+    equal = MetricGate("p", "equal", tolerance=1.0001)
+    assert not equal.violated(7840.0, 7840.0, smoke=False)
+    assert equal.violated(7841.0, 7840.0, smoke=False)
+    assert equal.violated(7839.0, 7840.0, smoke=False)
+    assert equal.violated(1e-9, 0.0, smoke=False)
+    assert not equal.violated(0.0, 0.0, smoke=False)
+
+
+def test_gate_paths_resolve_in_every_tracked_bench():
+    """Every gate path must resolve in its committed claim-of-record JSON
+    — a bench schema change that orphans a gate fails here, not silently
+    in CI."""
+    for name in BENCH_FILES:
+        payload = json.loads((REPO_ROOT / name).read_text())
+        gates = gates_for(payload["bench"])
+        assert gates, f"{name}: no gate table for {payload['bench']}"
+        for gate_name, gate in gates.items():
+            value = extract_path(payload, gate.path)
+            assert value == value, f"{name}/{gate_name}: NaN"
+        assert payload.get("git_sha"), f"{name}: missing git_sha stamp"
+
+
+def test_gates_for_routes_session_prefix():
+    assert gates_for("protocol_round_throughput") is \
+        GATES["protocol_round_throughput"]
+    assert gates_for("session/anything") is SESSION_GATES
+    assert gates_for("unknown_bench") is None
+
+
+# ---------------------------------------------------------------------------
+# Records + history I/O
+# ---------------------------------------------------------------------------
+
+def test_run_record_round_trips_and_schema_skip(tmp_path):
+    history = tmp_path / "h.jsonl"
+    payload = json.loads((REPO_ROOT / "BENCH_obs.json").read_text())
+    rec = RunRecord.from_bench(payload, sha="abc123", ts=100.0)
+    assert rec.bench == "obs_overhead" and rec.git_sha == "abc123"
+    assert "full_vs_hookless" in rec.metrics
+    assert rec.backend == payload["scale"]["backend"]
+    append_record(rec, history)
+    # A record from a future schema must be skipped, not misread.
+    with open(history, "a") as f:
+        f.write(json.dumps({"schema": 99, "bench": "x"}) + "\n")
+        f.write("not json\n")
+    loaded = load_history(history)
+    assert len(loaded) == 1
+    assert loaded[0].to_dict() == rec.to_dict()
+    assert loaded[0].scale_key == rec.scale_key
+
+
+def test_backfill_is_idempotent(tmp_path):
+    history = tmp_path / "h.jsonl"
+    added = backfill(history, repo_root=REPO_ROOT)
+    assert added == len(BENCH_FILES)
+    assert backfill(history, repo_root=REPO_ROOT) == 0  # same fingerprints
+    records = load_history(history)
+    assert {r.bench for r in records} == set(GATES)
+    assert all(r.source == "backfill" for r in records)
+
+
+def test_committed_history_matches_committed_benches(tmp_path):
+    """The committed BENCH_history.jsonl is seeded from the committed
+    BENCH jsons: backfill on top of a copy must be a no-op (fingerprints
+    match) and the check must pass."""
+    history = REPO_ROOT / "BENCH_history.jsonl"
+    assert history.exists()
+    copy = tmp_path / "h.jsonl"
+    copy.write_text(history.read_text())
+    assert backfill(copy, repo_root=REPO_ROOT) == 0
+    regressions, _ = check(copy)
+    assert regressions == []
+
+
+# ---------------------------------------------------------------------------
+# Regression check
+# ---------------------------------------------------------------------------
+
+def _seed_then(tmp_path, mutate):
+    """Backfill a fresh history, then append a mutated copy of the
+    protocol record as the 'latest' measurement."""
+    history = tmp_path / "h.jsonl"
+    backfill(history, repo_root=REPO_ROOT)
+    latest = [r for r in load_history(history)
+              if r.bench == "protocol_round_throughput"][-1]
+    payload = json.loads(json.dumps(latest.payload))
+    mutate(payload)
+    append_record(RunRecord.from_bench(payload, sha="synthetic", ts=1e9),
+                  history)
+    return history
+
+
+def test_check_passes_on_seeded_baselines_and_clean_rerun(tmp_path):
+    history = _seed_then(tmp_path, lambda p: None)  # identical re-record
+    regressions, lines = check(history)
+    assert regressions == []
+    assert any(line.startswith("OK") and "packed_us_per_round" in line
+               for line in lines)
+
+
+def test_check_names_metric_on_synthetic_slowdown(tmp_path):
+    def slow(p):
+        p["drivers"]["engine_packed"]["us_per_round"] *= 2.0
+
+    history = _seed_then(tmp_path, slow)
+    regressions, lines = check(history)
+    assert regressions == ["packed_us_per_round"]
+    bad = [ln for ln in lines if ln.startswith("REGRESSION")]
+    assert len(bad) == 1 and "packed_us_per_round" in bad[0]
+    assert "baseline" in bad[0] and "needs <=" in bad[0]
+    # Smoke mode doubles the timing tolerance (1.6 -> 3.2): a 2x
+    # slowdown passes there — and only timing gates relax.
+    assert check(history, smoke=True)[0] == []
+
+
+def test_check_smoke_does_not_relax_ratio_gates(tmp_path):
+    def worse(p):
+        p["speedups"]["packed_vs_loop"] /= 2.0
+
+    history = _seed_then(tmp_path, worse)
+    assert check(history)[0] == ["packed_vs_loop"]
+    assert check(history, smoke=True)[0] == ["packed_vs_loop"]
+
+
+def test_check_uses_rolling_median_not_latest(tmp_path):
+    """One outlier in the baseline window must not move the median gate."""
+    history = tmp_path / "h.jsonl"
+    backfill(history, repo_root=REPO_ROOT)
+    base = [r for r in load_history(history)
+            if r.bench == "protocol_round_throughput"][-1]
+
+    def rec(factor, ts):
+        payload = json.loads(json.dumps(base.payload))
+        payload["drivers"]["engine_packed"]["us_per_round"] *= factor
+        return RunRecord.from_bench(payload, sha=f"s{ts}", ts=ts)
+
+    for factor, ts in ((1.0, 1.0), (30.0, 2.0), (1.05, 3.0)):  # one spike
+        append_record(rec(factor, ts), history)
+    regressions, _ = check(history)
+    assert regressions == []  # median baseline absorbs the spike
+
+
+# ---------------------------------------------------------------------------
+# Session.record
+# ---------------------------------------------------------------------------
+
+def test_session_record_appends_gated_record(tmp_path):
+    n = 8
+    topo = DOutGraph(n_nodes=n, d=2)
+    cp, lam = calibrate_constants(topo)
+    session = Session.build(
+        topo, privacy=PrivacySpec(b=5.0, gamma_n=0.02, c_prime=cp, lam=lam),
+        sync_interval=3, chunk=4)
+    key = jax.random.PRNGKey(0)
+    values = [jax.random.normal(key, (n, 11))]
+    report = session.run(12, values=values)
+    history = tmp_path / "h.jsonl"
+    rec = session.record(report, name="consensus-smoke", history=history,
+                         extra={"custom": 1.5})
+    assert rec.bench == "session/consensus-smoke"
+    assert rec.source == "session" and rec.fingerprint
+    assert rec.scale["n_nodes"] == n and rec.scale["rounds"] == 12
+    assert rec.metrics["rounds"] == 12.0
+    assert rec.metrics["wire_bytes"] == float(report.wire_bytes)
+    assert rec.metrics["custom"] == 1.5
+    assert rec.metrics["us_per_round"] > 0
+
+    loaded = load_history(history)
+    assert len(loaded) == 1 and loaded[0].bench == rec.bench
+    # Same config -> same fingerprint -> same scale group; the check
+    # gates the second run against the first.
+    report2 = session.run(12, values=values)
+    session.record(report2, name="consensus-smoke", history=history)
+    regressions, lines = check(history, smoke=True)
+    assert any("session/consensus-smoke" in ln for ln in lines)
+    assert "wire_bytes" not in regressions
+    assert "epsilon_spent" not in regressions
+
+
+def test_session_fingerprint_tracks_config():
+    topo = DOutGraph(n_nodes=8, d=2)
+    cp, lam = calibrate_constants(topo)
+    kw = dict(privacy=PrivacySpec(b=5.0, gamma_n=0.02, c_prime=cp, lam=lam),
+              sync_interval=3, chunk=4)
+    a = Session.build(topo, **kw)._fingerprint()
+    b = Session.build(topo, **kw)._fingerprint()
+    c = Session.build(topo, **{**kw, "chunk": 5})._fingerprint()
+    assert a == b != c
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_check_backfill_record_show(tmp_path, capsys):
+    history = str(tmp_path / "h.jsonl")
+    assert main(["backfill", "--history", history,
+                 "--repo-root", str(REPO_ROOT)]) == 0
+    assert main(["check", "--history", history]) == 0
+    out = capsys.readouterr().out
+    assert "no regressions" in out
+
+    assert main(["record", "--json", str(REPO_ROOT / "BENCH_obs.json"),
+                 "--history", history]) == 0
+    assert main(["show", "--history", history]) == 0
+    assert "obs_overhead" in capsys.readouterr().out
+
+    # A synthetic regression drives exit code 1 and names the metric.
+    payload = json.loads((REPO_ROOT / "BENCH_protocol.json").read_text())
+    payload["drivers"]["engine_packed"]["us_per_round"] *= 2.0
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(payload))
+    assert main(["record", "--json", str(bad), "--history", history]) == 0
+    assert main(["check", "--history", history]) == 1
+    assert "packed_us_per_round" in capsys.readouterr().out
+
+
+def test_git_sha_resolves_in_repo():
+    sha = git_sha(REPO_ROOT)
+    assert sha != "unknown" and len(sha) == 40
